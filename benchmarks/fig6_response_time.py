@@ -1,0 +1,33 @@
+"""Fig. 6 — server response time (client view) for the six variants.
+
+Calibrated discrete-event simulation (core/simnet.py) of the paper's
+setup: 10 clients, ~2M f32 params, 25 GbE.  Derived column reports the
+paper's headline comparisons.
+"""
+from __future__ import annotations
+
+from repro.core.simnet import (PAPER_TARGETS as PAPER, VARIANTS,
+                               paper_ratios, simulate_all)
+
+
+def rows():
+    res = simulate_all()
+    out = []
+    for v in VARIANTS:
+        r = res[v.name]
+        out.append((f"fig6_response_{v.name}_{v.label}",
+                    r.response_time * 1e6,
+                    f"recv={r.recv_time*1e3:.1f}ms "
+                    f"comp={r.compute_time*1e3:.1f}ms "
+                    f"send={r.send_time*1e3:.1f}ms"))
+    ratios = paper_ratios(res)
+    for k, got in ratios.items():
+        paper = PAPER.get(k)
+        tag = f"sim={got:.2f}x" + (f" paper={paper:.2f}x" if paper else "")
+        out.append((f"fig6_ratio_{k}", 0.0, tag))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")

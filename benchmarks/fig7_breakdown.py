@@ -1,0 +1,20 @@
+"""Fig. 7 — server execution time breakdown (receive vs compute bars)."""
+from __future__ import annotations
+
+from repro.core.simnet import VARIANTS, simulate_all
+
+
+def rows():
+    res = simulate_all()
+    out = []
+    for v in VARIANTS:
+        r = res[v.name]
+        out.append((f"fig7_exec_{v.name}_{v.label}",
+                    r.server_exec * 1e6,
+                    f"recv_us={r.recv_time*1e6:.0f};comp_us={r.compute_time*1e6:.0f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,120 @@
+"""§Roofline table generator: reads runs/dryrun/*.json artifacts.
+
+Per (arch x shape x mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/EXEC_FLOPS, and the step-time upper bound.
+Emits CSV rows for benchmarks/run.py and a markdown table with
+--markdown (pasted into EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+# prefer the final corrected sweep when present (EXPERIMENTS.md §Roofline)
+DEFAULT_DIR = ("runs/dryrun_final"
+               if glob.glob(os.path.join("runs/dryrun_final", "*.json"))
+               else "runs/dryrun")
+
+
+def load(dirname: str = DEFAULT_DIR):
+    arts = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            arts.append(json.load(f))
+    return arts
+
+
+def rows(dirname: str = DEFAULT_DIR):
+    out = []
+    for a in load(dirname):
+        if a.get("failed"):
+            out.append((f"roofline_{a['arch']}_{a['shape']}", 0.0, "FAILED"))
+            continue
+        if a.get("skipped"):
+            out.append((f"roofline_{a['arch']}_{a['shape']}", 0.0,
+                        "SKIP(long-context needs sub-quadratic mixing)"))
+            continue
+        if "analytic" not in a:
+            continue
+        an = a["analytic"]
+        mesh = "x".join(str(d) for d in a.get("mesh", []))
+        tc = an.get("t_compute_s", 0.0)
+        tm = an.get("t_memory_s", 0.0)
+        tx = an.get("t_collective_s", 0.0)
+        t_bound = max(tc, tm, tx)
+        out.append((
+            f"roofline_{a['arch']}_{a['shape']}_{mesh}",
+            t_bound * 1e6,
+            f"tc={tc*1e3:.2f}ms;tm={tm*1e3:.2f}ms;tx={tx*1e3:.2f}ms;"
+            f"bound={an.get('bottleneck')};"
+            f"useful={an.get('useful_ratio', 0):.2f};"
+            f"mfu_ub={an.get('mfu_upper_bound', 0):.2f}",
+        ))
+    return out
+
+
+def markdown(dirname: str = DEFAULT_DIR) -> str:
+    lines = ["| arch | shape | mesh | t_comp | t_mem | t_coll | bound | "
+             "useful | MFU-UB | temp/dev |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for a in load(dirname):
+        if a.get("skipped"):
+            lines.append(f"| {a['arch']} | {a['shape']} | — | — | — | — | "
+                         f"skip | — | — | — |")
+            continue
+        if a.get("failed") or "analytic" not in a:
+            continue
+        an = a["analytic"]
+        ma = a.get("memory_analysis", {})
+        mesh = "x".join(str(d) for d in a.get("mesh", []))
+        temp = ma.get("temp_size_in_bytes", 0) / 2**30
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {mesh} "
+            f"| {an.get('t_compute_s', 0)*1e3:.1f}ms "
+            f"| {an.get('t_memory_s', 0)*1e3:.1f}ms "
+            f"| {an.get('t_collective_s', 0)*1e3:.1f}ms "
+            f"| {an.get('bottleneck')} "
+            f"| {an.get('useful_ratio', 0):.2f} "
+            f"| {an.get('mfu_upper_bound', 0):.2f} "
+            f"| {temp:.1f}GiB |")
+    return "\n".join(lines)
+
+
+def compare(base_dir: str = "runs/dryrun_final",
+            opt_dir: str = "runs/dryrun_optimized") -> str:
+    """Baseline vs optimized-preset step-bound + memory per cell."""
+    lines = ["| arch | shape | baseline (bound, temp) | optimized | gain |",
+             "|---|---|---|---|---|"]
+    opt = {(a["arch"], a["shape"], str(a.get("mesh"))): a
+           for a in load(opt_dir) if "analytic" in a}
+    for b in load(base_dir):
+        if b.get("skipped") or "analytic" not in b:
+            continue
+        key = (b["arch"], b["shape"], str(b.get("mesh")))
+        if key not in opt:
+            continue
+        o = opt[key]
+        tb = max(b["analytic"][k] for k in
+                 ("t_compute_s", "t_memory_s", "t_collective_s")) * 1e3
+        to = max(o["analytic"][k] for k in
+                 ("t_compute_s", "t_memory_s", "t_collective_s")) * 1e3
+        mb = b["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30
+        mo = o["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30
+        lines.append(
+            f"| {b['arch']} | {b['shape']} | {tb:.1f}ms "
+            f"({b['analytic']['bottleneck']}, {mb:.1f}GiB) "
+            f"| {to:.1f}ms ({o['analytic']['bottleneck']}, {mo:.1f}GiB) "
+            f"| {tb/max(to, 1e-9):.1f}x |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    if "--markdown" in sys.argv:
+        print(markdown())
+    elif "--compare" in sys.argv:
+        print(compare())
+    else:
+        for name, us, derived in rows():
+            print(f"{name},{us:.1f},{derived}")

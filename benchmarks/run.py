@@ -1,0 +1,44 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV:
+  fig6_*  server response time, 6 variants (paper Fig. 6)
+  fig7_*  server execution breakdown (paper Fig. 7)
+  fig8_*  convergence of the 6 variants (paper Fig. 8)
+  agg_*   measured aggregation throughput on this machine (§5.2 analogue)
+  roofline_*  per (arch x shape x mesh) from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import (agg_throughput, fig6_response_time,
+                            fig7_breakdown, fig8_convergence, roofline)
+    sections = [
+        ("fig6", fig6_response_time.rows),
+        ("fig7", fig7_breakdown.rows),
+        ("fig8", fig8_convergence.rows),
+        ("agg", agg_throughput.rows),
+        ("roofline", roofline.rows),
+    ]
+    failures = 0
+    for name, fn in sections:
+        try:
+            for row_name, us, derived in fn():
+                print(f"{row_name},{us:.1f},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{name}_FAILED,0,{traceback.format_exc(limit=3)!r}",
+                  file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

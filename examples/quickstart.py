@@ -1,0 +1,52 @@
+"""Quickstart: the paper's system in 60 seconds on CPU.
+
+1. 10 clients train the paper's CNN on synthetic CIFAR-10-like shards.
+2. The server aggregates with count-normalized masked FedAvg over the
+   paper's UDP wire format (367-float packets), with packet loss.
+3. Exact (locked) vs approximated (lock-free) servers are compared —
+   the paper's Fig. 8 in miniature.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.paper_cnn import CNNConfig
+from repro.core.fedavg import FedAvgConfig, ModelFns, run_fedavg
+from repro.data.federated import partition_iid
+from repro.data.synthetic import synthetic_image_classification
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+
+
+def main():
+    cnn = CNNConfig(image_size=16, conv_channels=(16, 32, 32, 32),
+                    fc_hidden=64)
+    rng = np.random.default_rng(0)
+    train = synthetic_image_classification(rng, 2000, image_size=16)
+    test = synthetic_image_classification(rng, 512, image_size=16)
+    clients = partition_iid(train, 10)
+
+    fns = ModelFns(
+        init=lambda r: init_cnn(r, cnn),
+        loss=lambda p, b, r: cnn_loss(p, b, cnn, dropout_rng=r),
+        test_metrics=lambda p, d: {
+            "test_loss": cnn_loss(p, d, cnn, train=False),
+            "test_acc": cnn_accuracy(p, d, cnn)},
+    )
+
+    for label, kw in [
+        ("exact (locked) server", dict(agg_mode="exact")),
+        ("approximated (lock-free) server + 4.68% loss",
+         dict(agg_mode="approx", conflict_rate=0.005,
+              downlink_loss=0.0468)),
+    ]:
+        cfg = FedAvgConfig(n_clients=10, rounds=8, batch_size=64, lr=0.05,
+                           **kw)
+        hist = run_fedavg(fns, clients, test, cfg)
+        print(f"\n== {label} ==")
+        for r, (tl, ta) in enumerate(zip(hist["test_loss"],
+                                         hist["test_acc"])):
+            print(f"  round {r}: test_loss={tl:.4f} acc={ta:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Batched serving example: prefill + greedy decode with a KV/state cache.
+
+Works for every assigned architecture (attention KV caches, Mamba conv/ssm
+states, RWKV wkv states).  This is the serve_step program the decode
+dry-run cells lower at (16,16).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-7b
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+    # serve.py is the real launcher; this example pins the reduced config
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", args.arch, "--reduced",
+           "--batch", str(args.batch), "--prompt-len", "16",
+           "--gen", str(args.gen)]
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, collections
+from repro.launch import dryrun as D
+import jax, jax.numpy as jnp
+
+# re-lower jamba train and dump collective op details
+from repro.configs import get_config, SHAPES_BY_NAME
+from repro.launch.mesh import make_production_mesh
+from repro.launch import steps as S
+from repro.runtime.sharding import param_pspecs, cache_pspecs
+import dataclasses
+
+cfg = get_config("jamba-v0.1-52b")
+cfg = dataclasses.replace(cfg, head_pad_to=16)
+shape = SHAPES_BY_NAME["train_4k"]
+mesh = make_production_mesh()
+ctx = S.make_ctx(mesh, cfg, shape)
+from repro.models.transformer import init_params
+params_shape = jax.eval_shape(lambda r: init_params(r, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
+pspecs = param_pspecs(params_shape, ctx)
+ns = lambda s: jax.sharding.NamedSharding(mesh, s)
+pshard = jax.tree_util.tree_map(ns, pspecs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+batch_sds = S.input_specs(cfg, shape)
+bshard = {k: ns(v) for k, v in S.batch_pspecs(cfg, shape, ctx).items()}
+from repro.optim import sgd
+step = S.make_train_step(cfg, ctx, sgd(1e-2))
+jitted = jax.jit(step, in_shardings=(pshard, (), bshard), out_shardings=(pshard, (), None), donate_argnums=(0,1))
+hlo = jitted.lower(params_shape, (), batch_sds).compile().as_text()
+
+# attribute collectives per computation with sizes
+comp = None
+rows = []
+for line in hlo.splitlines():
+    st = line.strip()
+    m = re.match(r"(?:ENTRY\s+)?(%?[\w\.\-]+)\s*\([^)]*\)\s*->.*\{", st)
+    if m and not st.startswith("ROOT"):
+        comp = m.group(1)
+    c = D._line_collective(line)
+    if c:
+        meta = re.search(r'op_name="([^"]*)"', line)
+        rows.append((comp, c[0], c[1], (meta.group(1)[-90:] if meta else "")))
+agg = collections.defaultdict(lambda: [0, 0])
+for comp, kind, nbytes, op in rows:
+    key = (kind, op.split("/")[-1][:60], "loop" if "body" in (comp or "") else "entry")
+    agg[key][0] += 1
+    agg[key][1] += nbytes
+for key, (n, b) in sorted(agg.items(), key=lambda kv: -kv[1][1])[:25]:
+    print(f"{b/2**20:9.1f}MiB x{n:3d} {key[2]:5s} {key[0]:18s} {key[1]}")

@@ -1,0 +1,59 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, collections, dataclasses
+import jax, jax.numpy as jnp
+from repro.launch import dryrun as D
+from repro.configs import get_config, SHAPES_BY_NAME
+from repro.launch.mesh import make_production_mesh
+from repro.launch import steps as S
+from repro.runtime.sharding import param_pspecs
+from repro.models.transformer import init_params
+from repro.optim import sgd
+
+cfg = get_config("jamba-v0.1-52b")
+cfg = dataclasses.replace(cfg, head_pad_to=16)
+shape = SHAPES_BY_NAME["train_4k"]
+mesh = make_production_mesh()
+ctx = S.make_ctx(mesh, cfg, shape)
+params_shape = jax.eval_shape(lambda r: init_params(r, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
+pspecs = param_pspecs(params_shape, ctx)
+ns = lambda s: jax.sharding.NamedSharding(mesh, s)
+pshard = jax.tree_util.tree_map(ns, pspecs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+batch_sds = S.input_specs(cfg, shape)
+bshard = {k: ns(v) for k, v in S.batch_pspecs(cfg, shape, ctx).items()}
+step = S.make_train_step(cfg, ctx, sgd(1e-2))
+jitted = jax.jit(step, in_shardings=(pshard, (), bshard), out_shardings=(pshard, (), None), donate_argnums=(0,1))
+hlo = jitted.lower(params_shape, (), batch_sds).compile().as_text()
+
+# proper loop attribution
+comp = None
+comp_ops = collections.defaultdict(list)
+while_bodies = set()
+for line in hlo.splitlines():
+    st = line.strip()
+    m = re.match(r"(?:ENTRY\s+)?(%?[\w\.\-]+)\s*\([^)]*\)\s*->.*\{", st)
+    if m and not st.startswith("ROOT"):
+        comp = m.group(1).lstrip("%")
+    for b in re.findall(r"body=%?([\w\.\-]+)", line):
+        while_bodies.add(b)
+    c = D._line_collective(line)
+    if c:
+        meta = re.search(r'op_name="([^"]*)"', line)
+        op = meta.group(1) if meta else ""
+        # keep a simplified tail
+        tail = "/".join(op.split("/")[-2:])[-70:]
+        comp_ops[comp].append((c[0], c[1], tail))
+
+agg = collections.defaultdict(lambda: [0, 0])
+trip = cfg.num_periods
+for name, ops in comp_ops.items():
+    is_loop = any(name == b or name.startswith(b) for b in while_bodies)
+    mult = trip if is_loop else 1
+    for kind, nbytes, tail in ops:
+        wire = nbytes * (2 if kind == "all-reduce" else 1) * mult
+        agg[(("loop" if is_loop else "entry"), kind, tail)][0] += mult
+        agg[(("loop" if is_loop else "entry"), kind, tail)][1] += wire
+total = sum(v[1] for v in agg.values())
+print(f"TOTAL {total/2**30:.1f} GiB/device")
+for key, (n, b) in sorted(agg.items(), key=lambda kv: -kv[1][1])[:30]:
+    print(f"{b/2**30:8.2f}GiB x{n:4d} {key[0]:5s} {key[1]:18s} {key[2]}")

@@ -1,0 +1,26 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses
+import jax, jax.numpy as jnp
+from repro.configs import get_config, SHAPES_BY_NAME
+from repro.launch.mesh import make_production_mesh
+from repro.launch import steps as S
+from repro.runtime.sharding import param_pspecs
+from repro.models.transformer import init_params
+from repro.optim import sgd
+
+cfg = dataclasses.replace(get_config("jamba-v0.1-52b"), head_pad_to=16)
+shape = SHAPES_BY_NAME["train_4k"]
+mesh = make_production_mesh()
+ctx = S.make_ctx(mesh, cfg, shape)
+params_shape = jax.eval_shape(lambda r: init_params(r, cfg), jax.ShapeDtypeStruct((2,), jnp.uint32))
+pspecs = param_pspecs(params_shape, ctx)
+ns = lambda s: jax.sharding.NamedSharding(mesh, s)
+pshard = jax.tree_util.tree_map(ns, pspecs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+batch_sds = S.input_specs(cfg, shape)
+bshard = {k: ns(v) for k, v in S.batch_pspecs(cfg, shape, ctx).items()}
+step = S.make_train_step(cfg, ctx, sgd(1e-2))
+jitted = jax.jit(step, in_shardings=(pshard, (), bshard), out_shardings=(pshard, (), None), donate_argnums=(0,1))
+hlo = jitted.lower(params_shape, (), batch_sds).compile().as_text()
+open("runs/jamba_train.hlo", "w").write(hlo)
+print("saved", len(hlo))

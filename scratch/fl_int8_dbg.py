@@ -1,0 +1,20 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import lower_fl_aggregate
+import repro.launch.dryrun as D
+import jax, re, collections
+# monkeypatch to capture hlo
+orig = D.parse_collectives
+captured = {}
+def cap(hlo, **kw):
+    captured['hlo'] = hlo
+    return orig(hlo, **kw)
+D.parse_collectives = cap
+art = lower_fl_aggregate("chatglm3-6b", mode="int8")
+hist = collections.Counter()
+for line in captured['hlo'].splitlines():
+    if " all-gather(" in line and "=" in line:
+        lhs = line.split("=",1)[1].split(" all-gather",1)[0].strip()
+        hist[lhs[:50]] += 1
+for s, n in hist.most_common(12):
+    print(f"x{n:3d} {s}")

@@ -1,0 +1,43 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from functools import partial
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+B, S, KV, hd, H = 4, 1024, 2, 64, 8
+
+def step(k_cache, v_cache, q, new_k, new_v, pos):
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, new_k, pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, new_v, pos, axis=1)
+    cs = NamedSharding(mesh, P("data", "model", None, None))
+    k_cache = jax.lax.with_sharding_constraint(k_cache, cs)
+    v_cache = jax.lax.with_sharding_constraint(v_cache, cs)
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd) / hd**0.5
+    s = jnp.einsum("bngh,bskh->bngs", qg, k_cache.astype(jnp.float32))
+    mask = (jnp.arange(S) <= pos)[None, None, None, :]
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, -1, keepdims=True)
+    p = jnp.exp(s - m); p = p / jnp.sum(p, -1, keepdims=True)
+    out = jnp.einsum("bngs,bskh->bngh", p, v_cache.astype(jnp.float32))
+    return out, k_cache, v_cache
+
+cache_sh = NamedSharding(mesh, P("data", "model", None, None))
+q_sh = NamedSharding(mesh, P("data", None, None, None))
+f = jax.jit(step, in_shardings=(cache_sh, cache_sh, q_sh, q_sh, q_sh, None),
+            out_shardings=(q_sh, cache_sh, cache_sh), donate_argnums=(0,1))
+import numpy as np
+sds = jax.ShapeDtypeStruct
+lowered = f.lower(sds((B,S,KV,hd), jnp.bfloat16), sds((B,S,KV,hd), jnp.bfloat16),
+                  sds((B,1,H,hd), jnp.bfloat16), sds((B,1,KV,hd), jnp.bfloat16),
+                  sds((B,1,KV,hd), jnp.bfloat16), sds((), jnp.int32))
+compiled = lowered.compile()
+txt = compiled.as_text()
+import re
+bad = [l.strip()[:140] for l in txt.splitlines() if re.search(r"all-gather|all-to-all", l)]
+ar = [l.strip()[:140] for l in txt.splitlines() if "all-reduce" in l and "=" in l]
+print("ALL-GATHER/ALL-TO-ALL lines:", len(bad))
+for l in bad[:6]: print("  AG:", l)
+print("all-reduce lines:", len(ar))
+for l in ar[:6]: print("  AR:", l)

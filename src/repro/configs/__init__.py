@@ -1,0 +1,53 @@
+"""Architecture registry: one module per assigned architecture."""
+from __future__ import annotations
+
+from repro.configs.base import (
+    ALL_SHAPES,
+    BlockSpec,
+    DECODE_32K,
+    LONG_500K,
+    ModelConfig,
+    PREFILL_32K,
+    SHAPES_BY_NAME,
+    ShapeConfig,
+    TRAIN_4K,
+    reduced,
+    shapes_for,
+)
+
+from repro.configs.deepseek_coder_33b import CONFIG as deepseek_coder_33b
+from repro.configs.command_r_35b import CONFIG as command_r_35b
+from repro.configs.chatglm3_6b import CONFIG as chatglm3_6b
+from repro.configs.nemotron_4_15b import CONFIG as nemotron_4_15b
+from repro.configs.musicgen_medium import CONFIG as musicgen_medium
+from repro.configs.rwkv6_7b import CONFIG as rwkv6_7b
+from repro.configs.qwen2_vl_2b import CONFIG as qwen2_vl_2b
+from repro.configs.arctic_480b import CONFIG as arctic_480b
+from repro.configs.kimi_k2_1t import CONFIG as kimi_k2_1t_a32b
+from repro.configs.jamba_v01_52b import CONFIG as jamba_v01_52b
+
+ARCHS = {
+    "deepseek-coder-33b": deepseek_coder_33b,
+    "command-r-35b": command_r_35b,
+    "chatglm3-6b": chatglm3_6b,
+    "nemotron-4-15b": nemotron_4_15b,
+    "musicgen-medium": musicgen_medium,
+    "rwkv6-7b": rwkv6_7b,
+    "qwen2-vl-2b": qwen2_vl_2b,
+    "arctic-480b": arctic_480b,
+    "kimi-k2-1t-a32b": kimi_k2_1t_a32b,
+    "jamba-v0.1-52b": jamba_v01_52b,
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = [
+    "ARCHS", "get_config", "ModelConfig", "BlockSpec", "ShapeConfig",
+    "ALL_SHAPES", "SHAPES_BY_NAME", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
+    "LONG_500K", "reduced", "shapes_for",
+]

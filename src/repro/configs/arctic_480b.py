@@ -1,0 +1,22 @@
+"""arctic-480b — 128-expert top-2 MoE with dense residual path
+[hf:Snowflake/snowflake-arctic-base; unverified]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,          # GQA
+    d_ff=4864,               # dense residual MLP width
+    vocab_size=32000,
+    mlp_type="swiglu",
+    rope_mode="standard",
+    norm_type="rmsnorm",
+    moe_num_experts=128,
+    moe_top_k=2,
+    moe_d_ff=4864,           # expert width
+    moe_dense_residual=True, # dense MLP in parallel with the MoE (arctic design)
+    source="hf:Snowflake/snowflake-arctic-base; hf",
+)

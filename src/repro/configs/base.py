@@ -1,0 +1,259 @@
+"""Architecture + run configuration for the repro framework.
+
+Every assigned architecture is expressed as a ``ModelConfig``; input shapes
+(train_4k / prefill_32k / decode_32k / long_500k) are ``ShapeConfig`` entries.
+Configs are plain frozen dataclasses so they can be hashed into jit static
+arguments and serialized into checkpoint manifests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Block specifications
+# ---------------------------------------------------------------------------
+# A model is: [prefix blocks] + num_periods * [period blocks] (+ final norm/head)
+# Each block names its sequence mixer and its FFN type.  Homogeneous models use
+# a period of length 1; Jamba uses a period of 8 (1 attention : 7 mamba, MoE on
+# odd indices).
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    mixer: str = "attn"      # attn | mamba | rwkv
+    ffn: str = "dense"       # dense | moe
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int                   # 0 for attention-free archs
+    num_kv_heads: int
+    d_ff: int                        # dense FFN width (or expert width if moe_d_ff==0)
+    vocab_size: int
+
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    mlp_type: str = "swiglu"         # swiglu | squared_relu | gelu
+    rope_mode: str = "standard"      # standard | 2d | mrope | none
+    rope_theta: float = 10000.0
+    use_bias: bool = False
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    norm_type: str = "rmsnorm"       # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+
+    # --- MoE ---------------------------------------------------------------
+    moe_num_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0                # 0 -> use d_ff for experts
+    moe_capacity_factor: float = 1.25
+    moe_dense_residual: bool = False # arctic: dense MLP in parallel with MoE
+    moe_shared_expert: bool = False  # kimi-k2: one always-on shared expert
+    dense_d_ff: int = 0              # width of dense FFN in prefix/residual path
+    prefix_dense_layers: int = 0     # kimi-k2: first layer is dense
+
+    # --- period structure (hybrid) ------------------------------------------
+    # period is the repeating unit of blocks; () means homogeneous:
+    #   dense/moe attn archs -> (BlockSpec('attn', 'dense'|'moe'),)
+    period: Tuple[BlockSpec, ...] = ()
+
+    # --- SSM / RWKV ----------------------------------------------------------
+    ssm_state_dim: int = 16
+    ssm_conv_width: int = 4
+    ssm_expand: int = 2
+    rwkv_head_dim: int = 64
+
+    # --- modality frontend stub ----------------------------------------------
+    input_mode: str = "tokens"       # tokens | embeddings (precomputed stub)
+    needs_mrope_positions: bool = False
+
+    # --- numerics -------------------------------------------------------------
+    dtype: str = "bfloat16"          # activation / param dtype
+    source: str = ""                 # provenance note
+
+    # --- TP head padding -------------------------------------------------------
+    # Production meshes have a 16-wide 'model' axis; archs whose head count
+    # does not divide it store zero-padded q-heads (output-masked, so the
+    # semantics and gradients of the real heads are unchanged).  1 = no pad.
+    head_pad_to: int = 1
+
+    # -------------------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if not self.period:
+            ffn = "moe" if self.moe_num_experts > 0 else "dense"
+            object.__setattr__(self, "period", (BlockSpec("attn", ffn),))
+        if self.moe_num_experts and self.moe_d_ff == 0:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+        if self.dense_d_ff == 0:
+            object.__setattr__(self, "dense_d_ff", self.d_ff)
+
+    # -------------------------------------------------------------------------
+    @property
+    def padded_heads(self) -> int:
+        if self.num_heads == 0:
+            return 0
+        p = self.head_pad_to
+        return -(-self.num_heads // p) * p
+
+    @property
+    def padded_kv_heads(self) -> int:
+        """MHA archs pad KV with the q-heads; GQA KV counts stay exact
+        (they divide every padded head count used here)."""
+        if self.num_kv_heads == 0:
+            return 0
+        if self.num_kv_heads == self.num_heads:       # MHA
+            return self.padded_heads
+        return self.num_kv_heads
+
+    @property
+    def period_len(self) -> int:
+        return len(self.period)
+
+    @property
+    def num_periods(self) -> int:
+        body = self.num_layers - self.prefix_dense_layers
+        assert body % self.period_len == 0, (
+            f"{self.name}: {body} body layers not divisible by period "
+            f"{self.period_len}")
+        return body // self.period_len
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(b.mixer != "attn" for b in self.period)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True for SSM / hybrid archs (sub-quadratic sequence mixing)."""
+        return any(b.mixer in ("mamba", "rwkv") for b in self.period)
+
+    # ---- parameter counting (analytic; used for 6ND roofline ratio) ---------
+    def param_count(self) -> int:
+        D, F, V = self.d_model, self.d_ff, self.vocab_size
+        total = V * D                       # embedding
+        if not self.tie_embeddings:
+            total += D * V                  # lm head
+        total += D                          # final norm
+
+        def mixer_params(kind: str) -> int:
+            if kind == "attn":
+                H, KV, hd = self.num_heads, self.num_kv_heads, self.head_dim
+                p = D * H * hd + 2 * D * KV * hd + H * hd * D   # q,k,v,o
+                if self.qkv_bias:
+                    p += (H + 2 * KV) * hd
+                return p + D                # norm
+            if kind == "mamba":
+                din = self.ssm_expand * D
+                p = D * 2 * din                      # in_proj (x, z)
+                p += din * self.ssm_conv_width       # conv
+                p += din * (2 * self.ssm_state_dim + 1)  # B,C,dt proj (x-dep)
+                p += din + din * D                   # dt bias? + out_proj
+                p += din * 2 * self.ssm_state_dim    # A  (din, N) + D skip ~ approx
+                return p + D
+            if kind == "rwkv":
+                # time-mix: r,k,v,g,w,o projections + lora decays + mu params
+                p = 6 * D * D + 5 * D + 2 * (D * 64 + 64 * D) + D
+                return p + D
+            raise ValueError(kind)
+
+        def ffn_params(kind: str) -> int:
+            if kind == "dense":
+                mult = 3 if self.mlp_type == "swiglu" else 2
+                return mult * D * self.dense_d_ff + D
+            if kind == "moe":
+                E, Fe = self.moe_num_experts, self.moe_d_ff
+                mult = 3 if self.mlp_type == "swiglu" else 2
+                p = E * mult * D * Fe + D * E        # experts + router
+                if self.moe_dense_residual:
+                    p += mult * D * self.dense_d_ff
+                if self.moe_shared_expert:
+                    p += mult * D * self.moe_d_ff
+                return p + D
+            raise ValueError(kind)
+
+        for _ in range(self.prefix_dense_layers):
+            total += mixer_params("attn") + ffn_params("dense")
+        for _ in range(self.num_periods):
+            for b in self.period:
+                total += mixer_params(b.mixer) + ffn_params(b.ffn)
+        return total
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top_k + shared/residual experts)."""
+        if self.moe_num_experts == 0:
+            return self.param_count()
+        D, Fe = self.d_model, self.moe_d_ff
+        mult = 3 if self.mlp_type == "swiglu" else 2
+        dense_expert = mult * D * Fe
+        inactive_per_moe = (self.moe_num_experts - self.moe_top_k) * dense_expert
+        n_moe_layers = sum(
+            1 for _ in range(self.num_periods) for b in self.period
+            if b.ffn == "moe")
+        return self.param_count() - n_moe_layers * inactive_per_moe
+
+
+# ---------------------------------------------------------------------------
+# Input shapes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+def shapes_for(cfg: ModelConfig) -> Tuple[ShapeConfig, ...]:
+    """The shape cells this architecture actually runs.
+
+    ``long_500k`` requires sub-quadratic sequence mixing; pure full-attention
+    archs skip it (recorded in DESIGN.md §Arch-applicability).
+    """
+    out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.supports_long_context:
+        out.append(LONG_500K)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Reduced config for CPU smoke tests
+# ---------------------------------------------------------------------------
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family config: identical structure, toy sizes."""
+    period_len = cfg.period_len
+    n_layers = cfg.prefix_dense_layers + 2 * period_len
+    changes = dict(
+        num_layers=n_layers,
+        d_model=64,
+        d_ff=128,
+        dense_d_ff=128,
+        vocab_size=256,
+        head_dim=16,
+    )
+    if cfg.num_heads > 0:
+        changes["num_heads"] = 4
+        changes["num_kv_heads"] = min(cfg.num_kv_heads, 2) if cfg.num_kv_heads < cfg.num_heads else 4
+    if cfg.moe_num_experts:
+        changes["moe_num_experts"] = 4
+        changes["moe_top_k"] = min(cfg.moe_top_k, 2)
+        changes["moe_d_ff"] = 64
+    if cfg.family == "ssm":
+        changes["rwkv_head_dim"] = 16
+    changes["ssm_state_dim"] = 4
+    return dataclasses.replace(cfg, **changes)

@@ -1,0 +1,18 @@
+"""chatglm3-6b — dense, RoPE-2d (partial rotary), GQA kv=2 [arXiv:2406.12793; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b",
+    family="dense",
+    num_layers=28,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,          # strong GQA
+    d_ff=13696,
+    vocab_size=65024,
+    mlp_type="swiglu",
+    rope_mode="2d",          # rotary applied to half the head dim, 2d-style
+    qkv_bias=True,           # chatglm uses qkv bias
+    norm_type="rmsnorm",
+    source="arXiv:2406.12793; hf",
+)

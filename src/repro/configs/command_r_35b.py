@@ -1,0 +1,20 @@
+"""command-r-35b — dense, GQA, no-bias [hf:CohereForAI/c4ai-command-r-v01]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b",
+    family="dense",
+    num_layers=40,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,          # GQA
+    d_ff=22528,
+    vocab_size=256000,
+    mlp_type="swiglu",
+    rope_mode="standard",
+    rope_theta=8000000.0,
+    use_bias=False,
+    norm_type="layernorm",   # cohere uses LayerNorm (no bias)
+    tie_embeddings=True,     # command-r ties input/output embeddings
+    source="hf:CohereForAI/c4ai-command-r-v01; unverified",
+)

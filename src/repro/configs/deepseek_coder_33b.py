@@ -1,0 +1,18 @@
+"""deepseek-coder-33b — llama-arch dense decoder [arXiv:2401.14196; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    num_layers=62,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,          # GQA
+    d_ff=19200,
+    vocab_size=32256,
+    mlp_type="swiglu",
+    rope_mode="standard",
+    rope_theta=100000.0,
+    norm_type="rmsnorm",
+    source="arXiv:2401.14196; hf",
+)

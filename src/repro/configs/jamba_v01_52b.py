@@ -1,0 +1,37 @@
+"""jamba-v0.1-52b — hybrid Mamba+attention 1:7 interleave, MoE 16e top-2
+[arXiv:2403.19887; hf].
+
+Period of 8 blocks: attention at index 3 (1 attn : 7 mamba), MoE FFN on odd
+indices (every other layer), matching the Jamba block layout.
+"""
+from repro.configs.base import BlockSpec, ModelConfig
+
+_PERIOD = tuple(
+    BlockSpec(
+        mixer="attn" if i == 3 else "mamba",
+        ffn="moe" if i % 2 == 1 else "dense",
+    )
+    for i in range(8)
+)
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,          # GQA (attention layers only)
+    d_ff=14336,
+    vocab_size=65536,
+    mlp_type="swiglu",
+    rope_mode="none",        # jamba uses no positional encoding
+    norm_type="rmsnorm",
+    moe_num_experts=16,
+    moe_top_k=2,
+    moe_d_ff=14336,
+    period=_PERIOD,
+    ssm_state_dim=16,
+    ssm_conv_width=4,
+    ssm_expand=2,
+    source="arXiv:2403.19887; hf",
+)

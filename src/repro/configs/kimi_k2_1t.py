@@ -1,0 +1,30 @@
+"""kimi-k2-1t-a32b — trillion-param MoE, 384 experts top-8 [arXiv:2501.kimi2].
+
+Assignment table gives the expert width (d_ff=2048).  The width of the single
+leading dense layer is not in the table; we use 16384 (8x expert width) and one
+always-on shared expert, matching the K2 description — recorded as an
+assumption in DESIGN.md §Arch-applicability.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,          # GQA
+    d_ff=2048,               # expert width (from the assignment table)
+    vocab_size=163840,
+    mlp_type="swiglu",
+    rope_mode="standard",
+    rope_theta=50000.0,
+    norm_type="rmsnorm",
+    moe_num_experts=384,
+    moe_top_k=8,
+    moe_d_ff=2048,
+    moe_shared_expert=True,  # one always-on shared expert
+    prefix_dense_layers=1,   # first layer dense
+    dense_d_ff=16384,        # assumption: 8x expert width for the dense layer
+    source="arXiv:2501.kimi2; unverified (paper-table)",
+)

@@ -1,0 +1,23 @@
+"""musicgen-medium — decoder-only over EnCodec tokens [arXiv:2306.05284; hf].
+
+The EnCodec audio frontend is a STUB per the assignment: the backbone consumes
+token ids in the 2048-entry EnCodec codebook vocabulary directly.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,         # MHA (kv == heads)
+    d_ff=6144,
+    vocab_size=2048,
+    mlp_type="gelu",         # musicgen uses standard transformer GELU FFN
+    rope_mode="none",        # musicgen uses learned sinusoidal; stub: none
+    norm_type="layernorm",
+    use_bias=True,
+    input_mode="tokens",     # EnCodec tokens; frontend (audio->tokens) is external
+    source="arXiv:2306.05284; hf",
+)

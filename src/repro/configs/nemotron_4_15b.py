@@ -1,0 +1,17 @@
+"""nemotron-4-15b — dense, GQA, squared-ReLU MLP [arXiv:2402.16819]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    num_layers=32,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,          # GQA
+    d_ff=24576,
+    vocab_size=256000,
+    mlp_type="squared_relu", # non-gated: relu(xW1)^2 W2
+    rope_mode="standard",
+    norm_type="layernorm",
+    source="arXiv:2402.16819; unverified",
+)

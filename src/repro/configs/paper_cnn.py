@@ -1,0 +1,23 @@
+"""The paper's own model: 4-conv + 2-FC CNN for CIFAR-10-shaped inputs (~2M params).
+
+Conv(32,3) -> ReLU -> Conv(64,3) -> ReLU -> MaxPool(2) ->
+Conv(128,3) -> ReLU -> Conv(256,3) -> ReLU -> MaxPool(2) ->
+FC(256) -> Dropout(0.5) -> FC(10) -> Softmax
+"""
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str = "paper-cnn"
+    image_size: int = 32
+    in_channels: int = 3
+    conv_channels: Tuple[int, ...] = (32, 64, 128, 256)
+    kernel_size: int = 3
+    fc_hidden: int = 256
+    num_classes: int = 10
+    dropout: float = 0.5
+
+
+CONFIG = CNNConfig()

@@ -1,0 +1,27 @@
+"""qwen2-vl-2b — VLM backbone, M-RoPE, dynamic resolution [arXiv:2409.12191; hf].
+
+The vision frontend (ViT patchifier) is a STUB per the assignment:
+``input_specs()`` provides precomputed patch/text embeddings ``(B, S, d_model)``
+plus 3-component M-RoPE position ids ``(3, B, S)``.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,          # GQA
+    d_ff=8960,
+    vocab_size=151936,
+    mlp_type="swiglu",
+    rope_mode="mrope",       # multimodal rotary: (t, h, w) sections
+    rope_theta=1000000.0,
+    qkv_bias=True,
+    norm_type="rmsnorm",
+    tie_embeddings=True,     # qwen2 ~2b ties embeddings
+    input_mode="embeddings", # precomputed patch+text embeddings (frontend stub)
+    needs_mrope_positions=True,
+    source="arXiv:2409.12191; hf",
+)

@@ -1,0 +1,19 @@
+"""rwkv6-7b (Finch) — attention-free, data-dependent decay [arXiv:2404.05892; hf]."""
+from repro.configs.base import BlockSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=0,             # attention-free
+    num_kv_heads=0,
+    d_ff=14336,              # channel-mix hidden (3.5x)
+    vocab_size=65536,
+    mlp_type="squared_relu", # rwkv channel-mix: relu(xWk)^2 Wv
+    rope_mode="none",
+    norm_type="layernorm",
+    period=(BlockSpec(mixer="rwkv", ffn="dense"),),
+    rwkv_head_dim=64,        # 64 heads of dim 64
+    source="arXiv:2404.05892; hf",
+)

@@ -1,0 +1,139 @@
+"""Count-normalized masked FedAvg aggregation — the paper's server compute.
+
+The server averages local parameters element-wise; packets lost on the
+wire are *excluded from the divisor* rather than retransmitted (§3.2.2:
+"Local parameters that are missing due to packet loss are not included in
+the divisor"), and clients fall back to their local value for elements
+they never received back.
+
+Three aggregation modes mirror the paper's design space:
+
+- ``exact``  : masked sum + per-packet contribution count, divide by count
+               (the paper's server *with* exclusive access control).
+- ``approx`` : the synchronization-free variant.  On the DPU this means
+               racy lock-free adds (lost updates); in deterministic XLA we
+               model the race as binomial thinning of contributions while
+               the divisor still counts every *received* packet — matching
+               the bias direction of a lost update (sum loses a term, the
+               divisor does not know).  At pod scale the analogue is
+               dropping the count collective (see core/distributed.py).
+- weighted   : FedAvg's n_k/n weighting (Algorithm 1, line 8).
+
+All functions are pure jnp and are the reference semantics for the Pallas
+kernels in repro/kernels/.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_aggregate(packets: jnp.ndarray, mask: jnp.ndarray,
+                     weights: Optional[jnp.ndarray] = None,
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact count-normalized aggregation.
+
+    packets (K, N, W): per-client packetized parameters
+    mask    (K, N)   : 1 where client k's packet n arrived
+    weights (K,)     : optional FedAvg n_k weights (defaults to 1)
+
+    Returns (global_packets (N, W), counts (N,)) where counts is the
+    per-packet sum of arrived weights; packets with count 0 return 0 and
+    must be handled by client-side fallback.
+    """
+    if weights is None:
+        weights = jnp.ones((packets.shape[0],), jnp.float32)
+    wmask = mask * weights[:, None]                          # (K, N)
+    total = jnp.einsum("knw,kn->nw", packets.astype(jnp.float32), wmask)
+    counts = jnp.sum(wmask, axis=0)                          # (N,)
+    avg = total / jnp.maximum(counts, 1e-12)[:, None]
+    avg = jnp.where(counts[:, None] > 0, avg, 0.0)
+    return avg, counts
+
+
+def approx_aggregate(packets: jnp.ndarray, mask: jnp.ndarray,
+                     conflict_rng: Optional[jax.Array] = None,
+                     conflict_rate: float = 0.0,
+                     weights: Optional[jnp.ndarray] = None,
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Approximated (lock-free) aggregation with lost-update model.
+
+    Each element-wise addition is independently lost with probability
+    ``conflict_rate`` (write-write race), but the divisor still counts all
+    *received* packets — exactly the bias a lost update introduces on the
+    DPU.  ``conflict_rate=0`` reproduces the exact result (races that
+    never fire).
+    """
+    if weights is None:
+        weights = jnp.ones((packets.shape[0],), jnp.float32)
+    wmask = mask * weights[:, None]
+    counts = jnp.sum(wmask, axis=0)                          # divisor: all received
+    add_mask = wmask[:, :, None]
+    if conflict_rate > 0.0 and conflict_rng is not None:
+        survive = jax.random.bernoulli(
+            conflict_rng, 1.0 - conflict_rate, packets.shape)
+        add_mask = add_mask * survive.astype(jnp.float32)
+    total = jnp.sum(packets.astype(jnp.float32) * add_mask, axis=0)
+    avg = total / jnp.maximum(counts, 1e-12)[:, None]
+    avg = jnp.where(counts[:, None] > 0, avg, 0.0)
+    return avg, counts
+
+
+def client_update_with_fallback(local_packets: jnp.ndarray,
+                                global_packets: jnp.ndarray,
+                                down_mask: jnp.ndarray) -> jnp.ndarray:
+    """Client-side rule (§3.1): elements of the global parameters lost on
+    the downlink are left at the client's local value.
+
+    local/global (N, W); down_mask (N,) — 1 where the global packet
+    arrived at this client.
+    """
+    return jnp.where(down_mask[:, None] > 0, global_packets, local_packets)
+
+
+# ---------------------------------------------------------------------------
+# Quantized aggregation (beyond paper): int8 per-packet scaling
+# ---------------------------------------------------------------------------
+
+def quantize_packets(packets: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(K, N, W) f32 -> (int8 payloads, per-packet scales (K, N))."""
+    absmax = jnp.max(jnp.abs(packets), axis=-1)              # (K, N)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(packets / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_aggregate(q: jnp.ndarray, scale: jnp.ndarray,
+                         mask: jnp.ndarray,
+                         weights: Optional[jnp.ndarray] = None,
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dequantizing count-normalized aggregation (int8 wire format)."""
+    deq = q.astype(jnp.float32) * scale[..., None]
+    return masked_aggregate(deq, mask, weights)
+
+
+# ---------------------------------------------------------------------------
+# Whole-round helper on flat parameter vectors
+# ---------------------------------------------------------------------------
+
+def aggregate_flat(client_flats: jnp.ndarray, up_mask: jnp.ndarray,
+                   payload: int, mode: str = "exact",
+                   conflict_rng=None, conflict_rate: float = 0.0,
+                   weights=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """client_flats (K, P) -> (global packets (N, W), counts (N,)).
+
+    up_mask (K, N) is the uplink arrival mask over packets.
+    """
+    from repro.core.packets import packetize
+    pk = jax.vmap(lambda f: packetize(f, payload))(client_flats)  # (K,N,W)
+    if mode == "exact":
+        return masked_aggregate(pk, up_mask, weights)
+    if mode == "approx":
+        return approx_aggregate(pk, up_mask, conflict_rng, conflict_rate,
+                                weights)
+    if mode == "int8":
+        q, s = quantize_packets(pk)
+        return dequantize_aggregate(q, s, up_mask, weights)
+    raise ValueError(mode)

@@ -1,0 +1,152 @@
+"""Cross-pod FL aggregation — the paper's technique as a pod-scale trainer
+feature.
+
+Deployment model (production, 1000+ nodes): each pod is a client group
+running ``train_step`` on its own process group / sub-mesh; every L local
+steps the pods run ``fl_aggregate_step`` — a separately-jitted program
+over the multi-pod mesh whose leading ``pod`` axis carries each pod's
+locally-trained parameters (stacked pytree, P('pod', *param_spec)).
+The paper's server roles map as:
+
+  worker accumulation -> the pod-axis masked reduction (XLA partitions it
+                         into an all-reduce over 'pod'; every leaf keeps
+                         its model/data sharding, so wire bytes are the
+                         *local shard*, never a gathered copy)
+  per-element divisor -> arrival-mask counts (straggler / failure masks
+                         from runtime/fault_tolerance.py)
+  lock elimination    -> 'approx' mode: drop the count reduction and the
+                         data-dependent divide; divide by static n_pods
+                         (biases toward zero when pods miss — exactly the
+                         lost-update bias of the lock-free DPU server)
+  (beyond paper)      -> 'int8' mode: per-row absmax int8 wire format;
+                         the pod axis is resharded to replicated (an int8
+                         all-gather across pods only — ~8x fewer wire
+                         bytes than the f32 all-reduce) and dequant-
+                         reduced locally; kernels/quantized_accum.py is
+                         the TPU hot loop for this dequant-accumulate.
+
+All modes preserve the FedAvg contract: pods that missed the deadline
+(mask 0) do not contribute, and every pod row receives the new global
+parameters (the reduction result is replicated across 'pod').
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.runtime.sharding import ParallelCtx
+
+
+def _quantize_rows(leaf: jnp.ndarray):
+    """Per-row (last-dim) absmax int8 quantization; no resharding."""
+    absmax = jnp.max(jnp.abs(leaf), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(leaf / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def fl_aggregate(stacked_params, chunk_mask: jnp.ndarray, *,
+                 mode: str = "exact", ctx: Optional[ParallelCtx] = None,
+                 pod_specs: Any = None):
+    """Aggregate a pod-stacked parameter pytree.
+
+    stacked_params: pytree, each leaf (n_pods, ...), sharded
+        P('pod', *param_spec) — the per-leaf sharding is preserved
+        throughout (no flatten/reshape, which would force a gather).
+    chunk_mask: (n_pods,) — 1 for pods whose upload arrived in time.
+    pod_specs: optional pytree of the stacked PartitionSpecs; required
+        for the int8 mode under a mesh (to express "replicate the pod
+        axis only" as the int8 all-gather).
+    """
+    n_pods = chunk_mask.shape[0]
+    mask = chunk_mask.astype(jnp.float32)
+
+    def agg_leaf(leaf, spec):
+        dt = leaf.dtype
+        lf = leaf.astype(jnp.float32)
+
+        if mode == "exact":
+            num = jnp.einsum("p...,p->...", lf, mask)
+            cnt = jnp.sum(mask)
+            avg = num / jnp.maximum(cnt, 1.0)
+            # void round (no pod arrived): each pod keeps its *local*
+            # params.  Referencing lf[0] here would broadcast pod 0's
+            # rows — an extra params-sized collective that doubled the
+            # exact mode's wire bytes (§Perf Cell 3, iteration 2).
+            out = jnp.where(cnt > 0, jnp.broadcast_to(avg[None], lf.shape),
+                            lf)
+            return out.astype(dt)
+        elif mode == "approx":
+            # lock-elimination analogue: static divisor, no count sync,
+            # no data-dependent select
+            avg = jnp.einsum("p...,p->...", lf, mask) / float(n_pods)
+        elif mode == "int8":
+            q, scale = _quantize_rows(lf)
+            if ctx is not None and spec is not None:
+                # pin the quantize to the pod-sharded layout, then reshard
+                # the *pod axis only* to replicated: the wire carries an
+                # int8 all-gather across pods.  Without the pin + barrier
+                # GSPMD replicates the producer chain instead — it
+                # all-gathers the f32 leaf and quantizes redundantly
+                # (§Perf Cell 3, iteration 3).
+                entries = tuple(spec)
+                sharded = P(*entries[:-1], None)       # scale last dim = 1
+                q = jax.lax.with_sharding_constraint(
+                    q, NamedSharding(ctx.mesh, P(*entries)))
+                scale = jax.lax.with_sharding_constraint(
+                    scale, NamedSharding(ctx.mesh, sharded))
+                q, scale = jax.lax.optimization_barrier((q, scale))
+                rep = P(*((None,) + entries[1:]))
+                rep_s = P(*((None,) + entries[1:-1] + (None,)))
+                q = jax.lax.with_sharding_constraint(
+                    q, NamedSharding(ctx.mesh, rep))
+                scale = jax.lax.with_sharding_constraint(
+                    scale, NamedSharding(ctx.mesh, rep_s))
+            deq = q.astype(jnp.float32) * scale
+            num = jnp.einsum("p...,p->...", deq, mask)
+            cnt = jnp.sum(mask)
+            avg = num / jnp.maximum(cnt, 1.0)
+            out = jnp.where(cnt > 0, jnp.broadcast_to(avg[None], lf.shape),
+                            lf)
+            return out.astype(dt)
+        else:
+            raise ValueError(mode)
+
+        out = jnp.broadcast_to(avg[None], (n_pods,) + avg.shape)
+        return out.astype(dt)
+
+    if pod_specs is None:
+        pod_specs = jax.tree_util.tree_map(lambda _: None, stacked_params)
+    return jax.tree_util.tree_map(
+        agg_leaf, stacked_params, pod_specs,
+        is_leaf=lambda x: x is None or isinstance(x, jnp.ndarray))
+
+
+def make_fl_aggregate_step(mode: str, ctx: Optional[ParallelCtx] = None,
+                           pod_specs: Any = None):
+    """jit-ready aggregation step: (stacked_params, alive) -> new stacked."""
+    return functools.partial(fl_aggregate, mode=mode, ctx=ctx,
+                             pod_specs=pod_specs)
+
+
+# ---------------------------------------------------------------------------
+# Round driver (host-level): local steps + aggregation + fault handling
+# ---------------------------------------------------------------------------
+
+def fl_round(local_train_fn, aggregate_fn, stacked_params, opt_states,
+             batches, alive_mask):
+    """One federated round at pod scale.
+
+    local_train_fn: (params_row, opt_row, batches_row) -> (params, opt)
+        — runs this pod's L local steps (already jitted per-pod).
+    aggregate_fn: jitted fl_aggregate_step over the multi-pod mesh.
+    alive_mask: (n_pods,) straggler/failure mask from the deadline monitor
+        (runtime/fault_tolerance.py).
+    """
+    new_params, new_opts = local_train_fn(stacked_params, opt_states, batches)
+    aggregated = aggregate_fn(new_params, alive_mask)
+    return aggregated, new_opts

@@ -1,0 +1,159 @@
+"""FedAvg (Algorithm 1) orchestrator with the paper's server semantics.
+
+Clients are vmapped (K local SGD trainings run as one batched program —
+the CPU-friendly equivalent of the paper's 10 client processes), and the
+server aggregation runs through ``core.aggregation`` with the chosen
+variant: exact (locked), approx (lock-free with conflict thinning), or
+int8 (beyond-paper).  Packet loss is injected independently on the uplink
+and the downlink; the downlink fallback keeps the client's local value
+for packets that never arrived (paper §3.1).
+
+Per-FedAvg / APFL-style client updates (paper §2.1.2) are supported via
+``mix_alpha``: clients blend local and global parameters instead of
+replacing them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation as agg
+from repro.core.packets import (PAYLOAD_F32, PacketizedShape, depacketize,
+                                flatten_pytree, loss_mask, packetize,
+                                unflatten_pytree)
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgConfig:
+    n_clients: int = 10
+    client_fraction: float = 1.0          # C in Algorithm 1
+    rounds: int = 20                      # T
+    local_epochs: int = 1                 # E
+    batch_size: int = 64                  # B
+    lr: float = 0.05                      # eta
+    payload: int = PAYLOAD_F32
+    agg_mode: str = "exact"               # exact | approx | int8
+    conflict_rate: float = 0.0            # lock-free lost-update probability
+    uplink_loss: float = 0.0
+    downlink_loss: float = 0.0
+    weighted: bool = True                 # n_k/n weighting
+    mix_alpha: float = 0.0                # 0 = FedAvg replace; >0 = APFL-style
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class ModelFns:
+    """Model plumbing: pure functions over a params pytree."""
+    init: Callable                        # rng -> params
+    loss: Callable                        # (params, batch, rng) -> scalar
+    test_metrics: Callable                # (params, test_data) -> dict
+
+
+def _local_update(model: ModelFns, cfg: FedAvgConfig):
+    """One client's E local epochs of minibatch SGD (Algorithm 1, lines 9-13)."""
+
+    def update(params, data, rng):
+        n = jax.tree_util.tree_leaves(data)[0].shape[0]
+        n_batches = max(1, n // cfg.batch_size)
+
+        def epoch(carry, erng):
+            params = carry
+            perm = jax.random.permutation(jax.random.fold_in(erng, 0), n)
+            shuffled = jax.tree_util.tree_map(lambda a: a[perm], data)
+
+            def batch_step(p, i):
+                batch = jax.tree_util.tree_map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(
+                        a, i * cfg.batch_size, cfg.batch_size), shuffled)
+                brng = jax.random.fold_in(erng, i + 1)
+                g = jax.grad(model.loss)(p, batch, brng)
+                return jax.tree_util.tree_map(
+                    lambda w, gw: w - cfg.lr * gw, p, g), None
+
+            params, _ = jax.lax.scan(batch_step, params,
+                                     jnp.arange(n_batches))
+            return params, None
+
+        params, _ = jax.lax.scan(epoch, params,
+                                 jax.random.split(rng, cfg.local_epochs))
+        return params
+
+    return update
+
+
+def run_fedavg(model: ModelFns, client_data, test_data,
+               cfg: FedAvgConfig) -> Dict[str, List[float]]:
+    """client_data: pytree with leading (K, n_k) axes (iid partition).
+
+    Returns history dict with per-round test metrics of the global model.
+    """
+    rng = jax.random.PRNGKey(cfg.seed)
+    rng, init_rng = jax.random.split(rng)
+    g0 = model.init(init_rng)
+    flat0, handle = flatten_pytree(g0)
+    n_params = flat0.shape[0]
+    pshape = PacketizedShape(n_params, cfg.payload)
+    K = cfg.n_clients
+
+    client_flats = jnp.tile(flat0[None], (K, 1))          # (K, P)
+    server_flat = flat0
+    n_k = jax.tree_util.tree_leaves(client_data)[0].shape[1]
+    weights = (jnp.full((K,), float(n_k), jnp.float32) if cfg.weighted
+               else jnp.ones((K,), jnp.float32))
+
+    local_update = _local_update(model, cfg)
+
+    @jax.jit
+    def train_selected(flats, sel, rngs):
+        def one(flat, data, r):
+            params = unflatten_pytree(flat, handle)
+            params = local_update(params, data, r)
+            out, _ = flatten_pytree(params)
+            return out
+        trained = jax.vmap(one)(flats, client_data, rngs)
+        return jnp.where(sel[:, None] > 0, trained, flats)
+
+    @jax.jit
+    def aggregate_and_distribute(flats, sel, up_rng, down_rng, conflict_rng,
+                                 prev_global):
+        up = loss_mask(up_rng, K, pshape.n_packets, cfg.uplink_loss)
+        up = up * sel[:, None]                            # only selected join
+        gpk, counts = agg.aggregate_flat(
+            flats, up, cfg.payload, mode=cfg.agg_mode,
+            conflict_rng=conflict_rng, conflict_rate=cfg.conflict_rate,
+            weights=weights * sel)
+        prev_pk = packetize(prev_global, cfg.payload)
+        gpk = jnp.where(counts[:, None] > 0, gpk, prev_pk)
+        new_global = depacketize(gpk, n_params)
+
+        down = loss_mask(down_rng, K, pshape.n_packets, cfg.downlink_loss)
+        local_pk = jax.vmap(lambda f: packetize(f, cfg.payload))(flats)
+        recv = jax.vmap(agg.client_update_with_fallback)(local_pk,
+                                                         jnp.tile(gpk[None], (K, 1, 1)),
+                                                         down)
+        new_flats = jax.vmap(lambda p: depacketize(p, n_params))(recv)
+        if cfg.mix_alpha > 0:                             # APFL-style blend
+            new_flats = (cfg.mix_alpha * flats
+                         + (1 - cfg.mix_alpha) * new_flats)
+        return new_flats, new_global
+
+    history: Dict[str, List[float]] = {"round": [], "test_loss": [],
+                                       "test_acc": []}
+    m = max(int(cfg.client_fraction * K), 1)
+    for t in range(cfg.rounds):
+        rng, r_sel, r_tr, r_up, r_dn, r_cf = jax.random.split(rng, 6)
+        sel_idx = jax.random.permutation(r_sel, K)[:m]
+        sel = jnp.zeros((K,), jnp.float32).at[sel_idx].set(1.0)
+        rngs = jax.random.split(r_tr, K)
+        client_flats = train_selected(client_flats, sel, rngs)
+        client_flats, server_flat = aggregate_and_distribute(
+            client_flats, sel, r_up, r_dn, r_cf, server_flat)
+        metrics = model.test_metrics(unflatten_pytree(server_flat, handle),
+                                     test_data)
+        history["round"].append(t)
+        for k, v in metrics.items():
+            history.setdefault(k, []).append(float(v))
+    return history

@@ -1,0 +1,103 @@
+"""Wire format of the paper's lightweight UDP protocol (§4.1, Fig. 5).
+
+Each UDP payload is a 4-byte packet index followed by 1468 B of float32
+parameters — 367 weights per packet (MTU 1500 = 20 B IP + 8 B UDP + 4 B
+index + 1468 B payload).  ``PAYLOAD_F32 = 367`` is kept byte-faithful for
+the protocol/simulation layer; the device-side aggregation kernels use a
+lane-aligned chunk (multiple of 128) instead, with the mapping handled by
+padding (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MTU = 1500
+IP_HEADER = 20
+UDP_HEADER = 8
+INDEX_BYTES = 4
+PAYLOAD_BYTES = MTU - IP_HEADER - UDP_HEADER - INDEX_BYTES   # 1468
+PAYLOAD_F32 = PAYLOAD_BYTES // 4                             # 367
+ETH_OVERHEAD = 14 + 4 + 8 + 12      # eth hdr + FCS + preamble + IFG
+WIRE_PACKET_BYTES = MTU + ETH_OVERHEAD
+
+# device-side chunk: lane-aligned (multiple of 128 f32)
+DEVICE_CHUNK_F32 = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class PacketizedShape:
+    """Static description of a packetized flat parameter vector."""
+    n_params: int
+    payload: int
+
+    @property
+    def n_packets(self) -> int:
+        return -(-self.n_params // self.payload)
+
+    @property
+    def padded(self) -> int:
+        return self.n_packets * self.payload
+
+
+def packetize(flat: jnp.ndarray, payload: int = PAYLOAD_F32) -> jnp.ndarray:
+    """(P,) f32 -> (n_packets, payload), zero-padded tail."""
+    shape = PacketizedShape(flat.shape[0], payload)
+    pad = shape.padded - shape.n_params
+    out = jnp.pad(flat, (0, pad))
+    return out.reshape(shape.n_packets, payload)
+
+
+def depacketize(packets: jnp.ndarray, n_params: int) -> jnp.ndarray:
+    """(n_packets, payload) -> (P,)."""
+    return packets.reshape(-1)[:n_params]
+
+
+def flatten_pytree(params) -> Tuple[jnp.ndarray, object]:
+    """Flatten a param pytree into one f32 vector + structure handle."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves])
+    shapes = [(l.shape, l.dtype) for l in leaves]
+    return flat, (treedef, shapes)
+
+
+def unflatten_pytree(flat: jnp.ndarray, handle) -> object:
+    treedef, shapes = handle
+    leaves = []
+    off = 0
+    for shape, dtype in shapes:
+        n = int(np.prod(shape)) if shape else 1
+        leaves.append(flat[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Loss / arrival models
+# ---------------------------------------------------------------------------
+
+def loss_mask(rng, n_clients: int, n_packets: int,
+              loss_rate: float) -> jnp.ndarray:
+    """(K, N) float mask — 1 where the packet arrived (Bernoulli loss)."""
+    if loss_rate <= 0.0:
+        return jnp.ones((n_clients, n_packets), jnp.float32)
+    keep = jax.random.bernoulli(rng, 1.0 - loss_rate, (n_clients, n_packets))
+    return keep.astype(jnp.float32)
+
+
+def straggler_mask(rng, n_clients: int, dropout_rate: float) -> jnp.ndarray:
+    """(K,) — 0 for clients that miss the round deadline entirely."""
+    if dropout_rate <= 0.0:
+        return jnp.ones((n_clients,), jnp.float32)
+    keep = jax.random.bernoulli(rng, 1.0 - dropout_rate, (n_clients,))
+    return keep.astype(jnp.float32)
+
+
+def packet_bytes_on_wire(n_params: int, payload: int = PAYLOAD_F32) -> int:
+    """Total bytes on the 25GbE wire for one client's parameter upload."""
+    n_pkts = PacketizedShape(n_params, payload).n_packets
+    return n_pkts * WIRE_PACKET_BYTES

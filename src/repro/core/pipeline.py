@@ -1,0 +1,78 @@
+"""Streaming chunked aggregation — the RX → worker → TX pipeline (§3.2.2).
+
+On the DPU the pipeline is three thread classes connected by DPDK rings;
+on TPU the same overlap appears at two levels:
+
+1. **Device level** (the Pallas kernel, kernels/fedavg_accum.py): the
+   ``pallas_call`` grid walks packet-chunks; Mosaic double-buffers the
+   HBM→VMEM DMAs, so chunk i+1 streams in (RX) while chunk i accumulates
+   (worker) and chunk i-1 streams out (TX).
+
+2. **Host level** (this module): client uploads arrive chunk-by-chunk;
+   ``StreamingAggregator`` dispatches the masked accumulation of chunk i
+   as soon as it lands while chunk i+1 is still in flight — JAX's async
+   dispatch gives the overlap; the element-wise divide happens once at
+   END (the paper's single representative worker).
+
+The aggregator keeps (sum, count) running state, so it also implements
+the paper's "reception and addition in parallel until END" semantics.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def _accum_chunk(total, counts, payload, mask):
+    """total (N,W), counts (N,); payload (N,W) one client's packets,
+    mask (N,) its arrival mask."""
+    total = total + payload.astype(jnp.float32) * mask[:, None]
+    counts = counts + mask
+    return total, counts
+
+
+@jax.jit
+def _finalize(total, counts):
+    avg = total / jnp.maximum(counts, 1e-12)[:, None]
+    return jnp.where(counts[:, None] > 0, avg, 0.0)
+
+
+class StreamingAggregator:
+    """Count-normalized streaming FedAvg server state.
+
+    add() per client upload overlaps with the next upload's transfer
+    (async dispatch); finalize() is the END-triggered divide.
+    """
+
+    def __init__(self, n_packets: int, payload_width: int):
+        self.total = jnp.zeros((n_packets, payload_width), jnp.float32)
+        self.counts = jnp.zeros((n_packets,), jnp.float32)
+        self._finalized: Optional[jnp.ndarray] = None
+
+    def add(self, packets: jnp.ndarray, mask: jnp.ndarray,
+            weight: float = 1.0) -> None:
+        assert self._finalized is None, "aggregator already finalized"
+        self.total, self.counts = _accum_chunk(
+            self.total, self.counts, packets, mask * weight)
+
+    def finalize(self) -> jnp.ndarray:
+        if self._finalized is None:
+            self._finalized = _finalize(self.total, self.counts)
+        return self._finalized
+
+    def reset(self) -> None:
+        self.total = jnp.zeros_like(self.total)
+        self.counts = jnp.zeros_like(self.counts)
+        self._finalized = None
+
+
+def streaming_rounds(uploads: Iterator[Tuple[jnp.ndarray, jnp.ndarray]],
+                     n_packets: int, payload_width: int) -> jnp.ndarray:
+    """Drain an iterator of (packets, mask) uploads through the pipeline."""
+    server = StreamingAggregator(n_packets, payload_width)
+    for packets, mask in uploads:
+        server.add(packets, mask)
+    return server.finalize()

@@ -1,0 +1,216 @@
+"""Application-layer reliable protocol over UDP (paper §3.2.3, Fig. 4).
+
+Control packets START / START_ACK / END / END_ACK frame each direction of
+a round; *data* packets are never retransmitted (loss tolerance lives in
+the count-normalized aggregation), while *control* packets are re-sent
+until acknowledged.  The server answers retransmitted ENDs for a grace
+window after the first END (the paper's 1 s / TCP TIME_WAIT analogue).
+
+These state machines are host-level (they orchestrate rounds; they are
+not traced by JAX) and are exercised directly by hypothesis property
+tests: no loss pattern may deadlock a round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Iterable, List, Optional, Set, Tuple
+
+
+class Kind(enum.Enum):
+    START = "START"
+    START_ACK = "START_ACK"
+    DATA = "DATA"
+    END = "END"
+    END_ACK = "END_ACK"
+
+
+@dataclasses.dataclass(frozen=True)
+class Packet:
+    kind: Kind
+    client: int
+    index: int = -1          # data packet index
+    from_server: bool = False
+
+
+class ClientPhase(enum.Enum):
+    LOCAL_TRAIN = enum.auto()
+    SEND_START = enum.auto()
+    SEND_PARAMS = enum.auto()
+    AWAIT_END_ACK = enum.auto()
+    RECV_GLOBAL = enum.auto()
+    DONE = enum.auto()
+
+
+class ServerPhase(enum.Enum):
+    WAIT_START = enum.auto()
+    RECV_PARAMS = enum.auto()
+    COMPUTE = enum.auto()
+    SEND_GLOBAL = enum.auto()
+    AWAIT_END_ACK = enum.auto()
+    DONE = enum.auto()
+
+
+class ClientFSM:
+    """One client's per-round state machine."""
+
+    def __init__(self, client_id: int, n_packets: int):
+        self.id = client_id
+        self.n_packets = n_packets
+        self.phase = ClientPhase.SEND_START
+        self.next_data = 0
+        self.received: Set[int] = set()
+        self.got_server_end = False
+
+    def emit(self) -> List[Packet]:
+        """Packets the client wants to (re)send now."""
+        if self.phase == ClientPhase.SEND_START:
+            return [Packet(Kind.START, self.id)]
+        if self.phase == ClientPhase.SEND_PARAMS:
+            if self.next_data < self.n_packets:
+                p = Packet(Kind.DATA, self.id, self.next_data)
+                self.next_data += 1
+                return [p]
+            self.phase = ClientPhase.AWAIT_END_ACK
+            return [Packet(Kind.END, self.id)]
+        if self.phase == ClientPhase.AWAIT_END_ACK:
+            return [Packet(Kind.END, self.id)]          # retransmit END
+        return []
+
+    def on_packet(self, p: Packet) -> List[Packet]:
+        """Returns immediate replies.  Crucially, retransmitted server ENDs
+        are re-acked even after the round is locally DONE (the paper's
+        grace window, §3.2.3) — otherwise a dropped final END_ACK
+        deadlocks the server."""
+        assert p.from_server
+        if p.kind == Kind.START_ACK and self.phase == ClientPhase.SEND_START:
+            self.phase = ClientPhase.SEND_PARAMS
+        elif p.kind == Kind.END_ACK and self.phase == ClientPhase.AWAIT_END_ACK:
+            self.phase = ClientPhase.RECV_GLOBAL
+        elif p.kind == Kind.DATA and self.phase == ClientPhase.RECV_GLOBAL:
+            self.received.add(p.index)
+        elif p.kind == Kind.END and self.phase in (ClientPhase.RECV_GLOBAL,
+                                                   ClientPhase.DONE):
+            self.got_server_end = True
+            if self.phase == ClientPhase.RECV_GLOBAL:
+                self.phase = ClientPhase.DONE
+            return [Packet(Kind.END_ACK, self.id)]
+        return []
+
+
+class ServerFSM:
+    """Server per-round state over K clients."""
+
+    def __init__(self, n_clients: int, n_packets: int):
+        self.n_clients = n_clients
+        self.n_packets = n_packets
+        self.phase = {c: ServerPhase.WAIT_START for c in range(n_clients)}
+        self.uplink: List[Set[int]] = [set() for _ in range(n_clients)]
+        self.next_down = [0] * n_clients
+        self.downlink_end_sent = [False] * n_clients
+        self.computed = False
+
+    # -- receive path --------------------------------------------------------
+    def on_packet(self, p: Packet) -> List[Packet]:
+        """Process one client packet; returns immediate replies (RX thread
+        answers control packets directly — §3.2.3)."""
+        c = p.client
+        ph = self.phase[c]
+        if p.kind == Kind.START:
+            if ph == ServerPhase.WAIT_START:
+                self.phase[c] = ServerPhase.RECV_PARAMS
+            # (re)ack START even if already past it — ack lost case
+            if self.phase[c] in (ServerPhase.RECV_PARAMS,):
+                return [Packet(Kind.START_ACK, c, from_server=True)]
+            return []
+        if p.kind == Kind.DATA and ph == ServerPhase.RECV_PARAMS:
+            self.uplink[c].add(p.index)
+            return []
+        if p.kind == Kind.END:
+            # first END moves to COMPUTE; retransmitted ENDs within the
+            # grace window are re-acked without touching worker threads
+            if ph == ServerPhase.RECV_PARAMS:
+                self.phase[c] = ServerPhase.COMPUTE
+            if self.phase[c] in (ServerPhase.COMPUTE, ServerPhase.SEND_GLOBAL,
+                                 ServerPhase.AWAIT_END_ACK):
+                return [Packet(Kind.END_ACK, c, from_server=True)]
+            return []
+        if p.kind == Kind.END_ACK and ph == ServerPhase.AWAIT_END_ACK:
+            self.phase[c] = ServerPhase.DONE
+            return []
+        return []
+
+    # -- aggregation barrier --------------------------------------------------
+    def all_uplinks_done(self) -> bool:
+        return all(ph in (ServerPhase.COMPUTE, ServerPhase.SEND_GLOBAL,
+                          ServerPhase.AWAIT_END_ACK, ServerPhase.DONE)
+                   for ph in self.phase.values())
+
+    def run_aggregation(self) -> None:
+        assert self.all_uplinks_done()
+        self.computed = True
+        for c in range(self.n_clients):
+            if self.phase[c] == ServerPhase.COMPUTE:
+                self.phase[c] = ServerPhase.SEND_GLOBAL
+
+    # -- send path ------------------------------------------------------------
+    def emit(self) -> List[Packet]:
+        out: List[Packet] = []
+        for c in range(self.n_clients):
+            ph = self.phase[c]
+            if ph == ServerPhase.SEND_GLOBAL:
+                if self.next_down[c] < self.n_packets:
+                    out.append(Packet(Kind.DATA, c, self.next_down[c],
+                                      from_server=True))
+                    self.next_down[c] += 1
+                else:
+                    out.append(Packet(Kind.END, c, from_server=True))
+                    self.phase[c] = ServerPhase.AWAIT_END_ACK
+            elif ph == ServerPhase.AWAIT_END_ACK:
+                out.append(Packet(Kind.END, c, from_server=True))
+        return out
+
+    def done(self) -> bool:
+        return all(ph == ServerPhase.DONE for ph in self.phase.values())
+
+
+def run_round(n_clients: int, n_packets: int,
+              drop_fn, max_steps: int = 100000,
+              ) -> Tuple[List[Set[int]], List[Set[int]]]:
+    """Drive one full round; ``drop_fn(packet, step) -> bool`` drops packets.
+
+    Control packets are retransmitted by the FSMs; data packets are sent
+    once.  Returns (uplink_received, downlink_received) index sets.
+
+    Raises RuntimeError on deadlock (cannot happen if drop_fn eventually
+    lets control packets through — the property the tests check).
+    """
+    clients = [ClientFSM(c, n_packets) for c in range(n_clients)]
+    server = ServerFSM(n_clients, n_packets)
+
+    for step in range(max_steps):
+        if server.done() and all(c.phase == ClientPhase.DONE for c in clients):
+            return server.uplink, [c.received for c in clients]
+
+        # client -> server
+        for cl in clients:
+            for p in cl.emit():
+                if drop_fn(p, step):
+                    continue
+                for reply in server.on_packet(p):
+                    if not drop_fn(reply, step):
+                        cl.on_packet(reply)
+
+        # aggregation barrier
+        if server.all_uplinks_done() and not server.computed:
+            server.run_aggregation()
+
+        # server -> client (client replies, e.g. downlink END_ACK, flow back)
+        for p in server.emit():
+            if drop_fn(p, step):
+                continue
+            for reply in clients[p.client].on_packet(p):
+                if not drop_fn(reply, step):
+                    server.on_packet(reply)
+
+    raise RuntimeError("protocol deadlock: round did not complete")

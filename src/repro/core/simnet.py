@@ -1,0 +1,180 @@
+"""Discrete-event model of the six server variants (paper Figs. 6-7).
+
+This container has neither a 25GbE link nor a BlueField-2, so Figs. 6-7
+are reproduced by a calibrated pipeline model:
+
+  (1) host CPU, kernel TCP, locked      (4) DPU, kernel TCP, lock-free
+  (2) host CPU, kernel TCP, lock-free   (5) DPU, DPDK,       locked
+  (3) DPU, kernel TCP, locked           (6) DPU, DPDK,       lock-free
+
+Topology follows the paper (Table 1, §5.1): 10 clients, 2M f32 params
+-> 5,450 packets/client of 367 weights; one 25 GbE link; TCP = one
+thread per client on 8 cores (2 clients/core); DPDK = 1 RX + 5 workers
++ 1 TX core.
+
+Calibration (EXPERIMENTS.md §Paper-validation): the paper reports bar
+*ratios*, not absolute times, so per-packet constants are fitted to the
+server-side ratios the paper states — compute(3)/(4)=6.66,
+recv(3)/(5)=1.65, compute(3)/(5)=1.09, exec(1)/(6)=1.39 — under the
+structural constraints that make them mutually consistent:
+  * DPDK reception runs at line rate (wire-bound; kernel TCP is not),
+  * TCP worker threads add *after* END (no recv/add overlap), DPDK
+    workers overlap only ~8% of the accumulation with reception
+    (ring-backlog effect the paper's 1.09x implies),
+  * TCP TX is paced by the client's receive path, not the server core
+    (UDP TX is not flow-controlled — which is exactly why the paper
+    observes 4.68% downlink loss in variant (6)).
+The client-view response ratio (paper: 3.93x) additionally depends on
+the Python clients' TCP receive rate, which is not identifiable from
+the paper; our model reports its own value and the delta.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core.packets import PAYLOAD_F32, WIRE_PACKET_BYTES
+
+
+@dataclasses.dataclass(frozen=True)
+class HwConstants:
+    link_bps: float = 25e9                 # 25 GbE
+    # per-packet kernel TCP/IP receive processing (server side, host core)
+    tcp_pkt_host: float = 1.56e-6
+    dpu_slowdown: float = 2.6              # A72 @2.5GHz vs i7-11700 per-core
+    # DPDK poll-mode per-packet cost (host-core equivalent; x dpu_slowdown)
+    dpdk_pkt: float = 0.18e-6
+    # element-wise add throughput, unlocked (f32 adds/s, one core, host)
+    add_rate_host: float = 0.98e9
+    # std::atomic_ref<float> fetch-add slowdown of the accumulate loop
+    atomic_factor_host: float = 6.08
+    atomic_factor_dpu: float = 7.2
+    # single-worker division pass (SIMD), host core
+    div_rate_host: float = 5e9
+    # fraction of worker accumulation overlapped with reception (DPDK)
+    dpdk_overlap_frac: float = 0.084
+    # TCP TX pacing (client-receive-bound, NIC-offloaded: not core-scaled)
+    tx_pkt_tcp: float = 9.0e-6
+    tx_pkt_dpdk: float = 0.35e-6           # host-equivalent; x dpu_slowdown
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    n_clients: int = 10
+    n_params: int = 2_000_000
+    payload: int = PAYLOAD_F32
+
+    @property
+    def n_packets(self) -> int:
+        return -(-self.n_params // self.payload)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerVariant:
+    name: str
+    location: str          # 'host' | 'dpu'
+    transport: str         # 'tcp' | 'dpdk'
+    locked: bool
+
+    @property
+    def label(self) -> str:
+        lk = "locked" if self.locked else "lockfree"
+        return f"{self.location}-{self.transport}-{lk}"
+
+
+VARIANTS = (
+    ServerVariant("(1)", "host", "tcp", True),
+    ServerVariant("(2)", "host", "tcp", False),
+    ServerVariant("(3)", "dpu", "tcp", True),
+    ServerVariant("(4)", "dpu", "tcp", False),
+    ServerVariant("(5)", "dpu", "dpdk", True),
+    ServerVariant("(6)", "dpu", "dpdk", False),
+)
+
+
+@dataclasses.dataclass
+class SimResult:
+    recv_time: float           # blue bar: START -> END processed (s)
+    compute_time: float        # red bar: accumulate + divide (s)
+    send_time: float           # TX of global params (s)
+
+    @property
+    def server_exec(self) -> float:       # Fig. 7 total
+        return self.recv_time + self.compute_time
+
+    @property
+    def response_time(self) -> float:     # Fig. 6 (client view)
+        return self.recv_time + self.compute_time + self.send_time
+
+
+def simulate(v: ServerVariant, hw: HwConstants = HwConstants(),
+             wl: Workload = Workload()) -> SimResult:
+    slow = hw.dpu_slowdown if v.location == "dpu" else 1.0
+    n_pkts_total = wl.n_clients * wl.n_packets
+    wire = n_pkts_total * WIRE_PACKET_BYTES * 8 / hw.link_bps
+
+    atomic = (hw.atomic_factor_dpu if v.location == "dpu"
+              else hw.atomic_factor_host) if v.locked else 1.0
+    add_per_pkt = wl.payload / hw.add_rate_host * slow * atomic
+    div_time = wl.n_params / hw.div_rate_host * slow
+
+    if v.transport == "tcp":
+        # one kernel thread per client, 2 clients per core; receive first
+        # (blue = pure protocol processing), accumulate after END (red)
+        n_cores = 8
+        per_core_clients = -(-wl.n_clients // n_cores)
+        recv_time = max(wire, per_core_clients * wl.n_packets
+                        * hw.tcp_pkt_host * slow)
+        compute_time = per_core_clients * wl.n_packets * add_per_pkt \
+            + div_time
+    else:
+        # DPDK pipeline: RX core -> rings -> 5 workers; polling reaches
+        # line rate, workers drain mostly after END (ring backlog)
+        n_workers = 5
+        rx_time = n_pkts_total * hw.dpdk_pkt * slow
+        recv_time = max(wire, rx_time)
+        worker_time = n_pkts_total * add_per_pkt / n_workers
+        compute_time = worker_time * (1.0 - hw.dpdk_overlap_frac) + div_time
+
+    if v.transport == "tcp":
+        send_time = max(wire, (wl.n_clients / 8) * wl.n_packets
+                        * hw.tx_pkt_tcp)
+    else:
+        send_time = max(wire, n_pkts_total * hw.tx_pkt_dpdk * slow)
+
+    return SimResult(recv_time, compute_time, send_time)
+
+
+def simulate_all(hw: HwConstants = HwConstants(), wl: Workload = Workload()
+                 ) -> Dict[str, SimResult]:
+    return {v.name: simulate(v, hw, wl) for v in VARIANTS}
+
+
+def paper_ratios(results: Dict[str, SimResult]) -> Dict[str, float]:
+    """The comparisons the paper calls out in §5.2 / abstract."""
+    r = results
+    return {
+        # (3) vs (4): eliminating exclusive access control, DPU compute
+        "compute_speedup_dpu_lockfree": r["(3)"].compute_time / r["(4)"].compute_time,
+        # (3) vs (5): DPDK vs kernel TCP receive path
+        "recv_speedup_dpdk": r["(3)"].recv_time / r["(5)"].recv_time,
+        "compute_speedup_dpdk": r["(3)"].compute_time / r["(5)"].compute_time,
+        # client-view response: (3) vs (5)
+        "response_speedup_dpdk": r["(3)"].response_time / r["(5)"].response_time,
+        # abstract headline: (1) vs (6) server execution time
+        "exec_speedup_total": r["(1)"].server_exec / r["(6)"].server_exec,
+        # §5.2: (1) vs (6) client-view response
+        "response_speedup_total": r["(1)"].response_time / r["(6)"].response_time,
+        # (1) vs (2): lock-free on host
+        "compute_speedup_host_lockfree": r["(1)"].compute_time / r["(2)"].compute_time,
+    }
+
+
+PAPER_TARGETS = {
+    "compute_speedup_dpu_lockfree": 6.66,
+    "recv_speedup_dpdk": 1.65,
+    "compute_speedup_dpdk": 1.09,
+    "response_speedup_dpdk": 1.25,
+    "exec_speedup_total": 1.39,
+    "response_speedup_total": 3.93,   # depends on unmodeled client TCP rate
+}

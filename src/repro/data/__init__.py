@@ -1,0 +1,1 @@
+"""Data pipelines: synthetic token/image sources + federated partitioner."""

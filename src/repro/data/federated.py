@@ -1,0 +1,52 @@
+"""Federated partitioner: split a dataset across K clients.
+
+- iid: equal random shards (the paper's setting: 50,000/10 = 5,000 each)
+- dirichlet: non-iid label skew with concentration alpha (the paper's
+  stated future work; included for the §2.1.2 algorithm variants)
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def partition_iid(data: Dict[str, jnp.ndarray], n_clients: int,
+                  seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Returns pytree with leading (K, n_k) axes."""
+    n = jax.tree_util.tree_leaves(data)[0].shape[0]
+    per = n // n_clients
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)[: per * n_clients]
+    idx = jnp.asarray(perm.reshape(n_clients, per))
+    return jax.tree_util.tree_map(lambda a: a[idx], data)
+
+
+def partition_dirichlet(data: Dict[str, jnp.ndarray], n_clients: int,
+                        alpha: float = 0.5, seed: int = 0,
+                        label_key: str = "labels") -> Dict[str, jnp.ndarray]:
+    """Label-skewed partition; pads shards to equal length by resampling."""
+    labels = np.asarray(data[label_key])
+    n = labels.shape[0]
+    classes = np.unique(labels)
+    rng = np.random.default_rng(seed)
+    shards = [[] for _ in range(n_clients)]
+    for c in classes:
+        idx = np.where(labels == c)[0]
+        rng.shuffle(idx)
+        p = rng.dirichlet(alpha * np.ones(n_clients))
+        splits = (np.cumsum(p)[:-1] * len(idx)).astype(int)
+        for k, part in enumerate(np.split(idx, splits)):
+            shards[k].extend(part.tolist())
+    per = n // n_clients
+    out = []
+    for k in range(n_clients):
+        s = np.array(shards[k], dtype=np.int64)
+        if len(s) == 0:
+            s = rng.integers(0, n, per)
+        s = rng.choice(s, per, replace=len(s) < per)
+        out.append(s)
+    idx = jnp.asarray(np.stack(out))
+    return jax.tree_util.tree_map(lambda a: a[idx], data)

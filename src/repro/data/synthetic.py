@@ -1,0 +1,79 @@
+"""Synthetic data sources (CIFAR-10 is not available offline; DESIGN.md §2).
+
+- ``synthetic_image_classification``: class-conditional Gaussian images —
+  10 classes, 32x32x3, linearly separable enough that the paper's CNN
+  converges within tens of FedAvg rounds, so the six server variants'
+  convergence curves (Fig. 8) are comparable.
+- ``token_stream``: Zipf-ish LM token batches for the LM-scale examples.
+- ``lm_batch_for``: shape/arch-correct training batches (tokens or stub
+  embeddings + M-RoPE positions) used by examples and smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def synthetic_image_classification(rng: np.random.Generator, n: int,
+                                   image_size: int = 32, channels: int = 3,
+                                   num_classes: int = 10,
+                                   noise: float = 0.35,
+                                   task_seed: int = 1234):
+    """Class templates + Gaussian noise; returns dict(images, labels).
+
+    Templates come from ``task_seed`` (not ``rng``) so train and test
+    splits drawn from separate rng states share the same classification
+    task — only sample noise/labels consume ``rng``.
+    """
+    templates = np.random.default_rng(task_seed).normal(
+        0.0, 1.0, (num_classes, image_size, image_size, channels))
+    labels = rng.integers(0, num_classes, n)
+    images = templates[labels] + noise * rng.normal(
+        0.0, 1.0, (n, image_size, image_size, channels))
+    return {
+        "images": jnp.asarray(images.astype(np.float32)),
+        "labels": jnp.asarray(labels.astype(np.int32)),
+    }
+
+
+def token_stream(rng: np.random.Generator, batch: int, seq: int,
+                 vocab: int, zipf_a: float = 1.2) -> Dict[str, jnp.ndarray]:
+    """One batch of Zipf-distributed tokens with next-token labels."""
+    raw = rng.zipf(zipf_a, size=(batch, seq + 1))
+    toks = (raw % vocab).astype(np.int32)
+    return {
+        "tokens": jnp.asarray(toks[:, :-1]),
+        "labels": jnp.asarray(toks[:, 1:]),
+    }
+
+
+def lm_batch_for(cfg: ModelConfig, batch: int, seq: int,
+                 seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Training batch with the right modality inputs for the arch."""
+    rng = np.random.default_rng(seed)
+    out = token_stream(rng, batch, seq, cfg.vocab_size)
+    if cfg.input_mode == "embeddings":
+        emb = rng.normal(0, 1, (batch, seq, cfg.d_model)).astype(np.float32)
+        out["embeddings"] = jnp.asarray(emb)
+        del out["tokens"]
+    if cfg.needs_mrope_positions:
+        # stub M-RoPE: temporal = arange; h/w = arange of a fake 2d grid
+        t = np.broadcast_to(np.arange(seq, dtype=np.int32), (batch, seq))
+        side = max(1, int(np.sqrt(seq)))
+        h = np.broadcast_to((np.arange(seq) // side).astype(np.int32),
+                            (batch, seq))
+        w = np.broadcast_to((np.arange(seq) % side).astype(np.int32),
+                            (batch, seq))
+        out["positions"] = jnp.asarray(np.stack([t, h, w]))
+    return out
+
+
+def lm_batches(cfg: ModelConfig, batch: int, seq: int, steps: int,
+               seed: int = 0) -> Iterator[Dict[str, jnp.ndarray]]:
+    for i in range(steps):
+        yield lm_batch_for(cfg, batch, seq, seed=seed + i)

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: count-normalized masked FedAvg accumulation.
+
+The paper's worker threads walk RX rings and add each packet into a
+shared float array, then one worker divides by the per-element count.  On
+TPU the packet stream is laid out client-major ``(K, C, W)`` (K clients,
+C chunks, W = 512-float lane-aligned packets); the grid walks chunk
+blocks, so Mosaic's automatic double buffering *is* the RX→worker→TX
+pipeline: the DMA of block i+1 overlaps the accumulate of block i and the
+write-out of block i-1 (DESIGN.md §2).
+
+Per grid step the VMEM working set is (K, BC, W) payloads + (K, BC)
+masks: K=64 clients, BC=8, W=512 -> 1.05 MB, comfortably inside the
+~16 MB VMEM budget, with the last dim a multiple of the 128-lane width
+and the accumulate running on the VPU in f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fedavg_accum_kernel(x_ref, m_ref, out_ref, cnt_ref):
+    """x (K, BC, W) f32; m (K, BC) f32 weighted-arrival mask."""
+    x = x_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    total = jnp.sum(x * m[:, :, None], axis=0)         # (BC, W)
+    counts = jnp.sum(m, axis=0)                        # (BC,)
+    avg = total / jnp.maximum(counts, 1e-12)[:, None]
+    out_ref[...] = jnp.where(counts[:, None] > 0, avg, 0.0)
+    cnt_ref[...] = counts[:, None]
+
+
+def fedavg_accum_pallas(packets: jnp.ndarray, wmask: jnp.ndarray,
+                        *, block_chunks: int = 8,
+                        interpret: bool = False):
+    """packets (K, C, W) any float dtype; wmask (K, C) f32.
+
+    Returns (avg (C, W) f32, counts (C, 1) f32).  C must be a multiple of
+    ``block_chunks`` (ops.py pads with mask-0 chunks).
+    """
+    K, C, W = packets.shape
+    assert C % block_chunks == 0, (C, block_chunks)
+    grid = (C // block_chunks,)
+    return pl.pallas_call(
+        _fedavg_accum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, block_chunks, W), lambda i: (0, i, 0)),
+            pl.BlockSpec((K, block_chunks), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_chunks, W), lambda i: (i, 0)),
+            pl.BlockSpec((block_chunks, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, W), jnp.float32),
+            jax.ShapeDtypeStruct((C, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(packets.astype(jnp.float32), wmask.astype(jnp.float32))

@@ -1,0 +1,63 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On non-TPU backends the kernels run in ``interpret=True`` mode (the
+kernel body executes as traced jnp on CPU), which is how this container
+validates them; on TPU they compile through Mosaic.  Wrappers handle
+padding to block multiples and strip it off again.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedavg_accum import fedavg_accum_pallas
+from repro.kernels.packet_scatter import packet_scatter_pallas
+from repro.kernels.quantized_accum import quantized_accum_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_chunks(arrs_kc, c: int, block: int):
+    """Pad dim 1 (chunks) of each array up to a multiple of ``block``."""
+    pad = (-c) % block
+    if pad == 0:
+        return arrs_kc, c
+    out = []
+    for a in arrs_kc:
+        widths = [(0, 0)] * a.ndim
+        widths[1] = (0, pad)
+        out.append(jnp.pad(a, widths))
+    return out, c + pad
+
+
+@functools.partial(jax.jit, static_argnames=("block_chunks",))
+def fedavg_accum(packets, wmask, block_chunks: int = 8):
+    """(K, C, W) payloads + (K, C) weighted mask -> (avg (C, W), counts (C,))."""
+    K, C, W = packets.shape
+    (packets, wmask), cp = _pad_chunks([packets, wmask], C, block_chunks)
+    avg, cnt = fedavg_accum_pallas(packets, wmask,
+                                   block_chunks=block_chunks,
+                                   interpret=_interpret())
+    return avg[:C], cnt[:C, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_chunks",))
+def quantized_accum(q, scales, wmask, block_chunks: int = 8):
+    """int8 (K, C, W) + scales/mask (K, C) -> (avg (C, W), counts (C,))."""
+    K, C, W = q.shape
+    (q, scales, wmask), cp = _pad_chunks([q, scales, wmask], C, block_chunks)
+    avg, cnt = quantized_accum_pallas(q, scales, wmask,
+                                      block_chunks=block_chunks,
+                                      interpret=_interpret())
+    return avg[:C], cnt[:C, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots",))
+def packet_scatter(packets, idx, n_slots: int):
+    """Place packets (N, W) at rows idx (N,) of a fresh (n_slots, W) buffer."""
+    return packet_scatter_pallas(packets, idx, n_slots,
+                                 interpret=_interpret())

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fedavg_accum_ref(packets: jnp.ndarray, wmask: jnp.ndarray):
+    """packets (K, C, W); wmask (K, C) -> (avg (C, W) f32, counts (C, 1))."""
+    x = packets.astype(jnp.float32)
+    m = wmask.astype(jnp.float32)
+    total = jnp.einsum("kcw,kc->cw", x, m)
+    counts = jnp.sum(m, axis=0)
+    avg = total / jnp.maximum(counts, 1e-12)[:, None]
+    avg = jnp.where(counts[:, None] > 0, avg, 0.0)
+    return avg, counts[:, None]
+
+
+def quantized_accum_ref(q: jnp.ndarray, scales: jnp.ndarray,
+                        wmask: jnp.ndarray):
+    deq = q.astype(jnp.float32) * scales.astype(jnp.float32)[..., None]
+    return fedavg_accum_ref(deq, wmask)
+
+
+def packet_scatter_ref(packets: jnp.ndarray, idx: jnp.ndarray, n_slots: int):
+    out = jnp.zeros((n_slots, packets.shape[1]), packets.dtype)
+    return out.at[idx].set(packets)

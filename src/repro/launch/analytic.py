@@ -1,0 +1,195 @@
+"""Analytic FLOP / HBM-byte model per (arch x shape) cell.
+
+Why analytic: HloCostAnalysis counts ``while`` bodies once, so any
+scanned program (layer-period scan, flash-attention block scan, SSM
+recurrence) under-reports flops/bytes by the trip count.  Collectives we
+recover from the HLO with per-computation trip multipliers
+(dryrun.parse_collectives); compute and HBM traffic we model here and
+cross-check against the HLO numbers (which are lower bounds).
+
+Conventions (documented in EXPERIMENTS.md §Roofline):
+- matmul flops = 2*m*n*k; training cost = fwd + recompute (period remat)
+  + backward(2x fwd) = 4x fwd weight flops -> 8*N*T instead of 6*N*T.
+- attention is computed as a full S x S rectangle (chunked online
+  softmax without causal block skipping) -> 2x the causal-optimal flops;
+  padded heads count at their padded width.  Both are *execution* waste
+  measured by the MODEL_FLOPS / EXEC_FLOPS ratio.
+- MoE executes capacity * top_k dispatch (capacity factor 1.25).
+- HBM bytes: params are read fwd + recompute + bwd (3x) and written once
+  (SGD update), grads written+read once; activations cross HBM at period
+  boundaries (save + read) plus within-block streams ~= 2x block I/O;
+  KV cache decode = full read + 1-token write.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+BF16 = 2
+F32 = 4
+
+
+def _attn_flops_fwd(cfg: ModelConfig, B: int, S: int, rect: bool = True,
+                    q_chunk: int = 512, kv_chunk: int = 1024) -> float:
+    """QK^T + AV for one layer.  rect=True is the uniform-rectangle
+    chunked softmax; rect=False is the unrolled causal diagonal, which
+    visits ~(1 + max_chunk/S)/2 of the blocks."""
+    Hp, hd = cfg.padded_heads, cfg.head_dim
+    if rect:
+        mult = 1.0
+    else:
+        mult = 0.5 * (1.0 + max(q_chunk, kv_chunk) / max(S, 1))
+    return 4.0 * B * Hp * S * S * hd * mult
+
+
+def _proj_flops_fwd(cfg: ModelConfig, spec_mixer: str, spec_ffn: str,
+                    B: int, S: int) -> float:
+    """Per-layer projection (weight) matmul flops, forward, per token*2*N."""
+    D, hd = cfg.d_model, cfg.head_dim
+    T = B * S
+    f = 0.0
+    if spec_mixer == "attn":
+        Hp, KVp = cfg.padded_heads, cfg.padded_kv_heads
+        n = D * Hp * hd + 2 * D * KVp * hd + Hp * hd * D
+        f += 2.0 * T * n
+    elif spec_mixer == "mamba":
+        din, N = cfg.ssm_expand * D, cfg.ssm_state_dim
+        dtr = max(1, D // 16)
+        n = D * 2 * din + din * (dtr + 2 * N) + dtr * din + din * D
+        f += 2.0 * T * n
+        f += T * din * N * 6.0          # recurrence: decay+outer+dot per step
+        f += 2.0 * T * din * cfg.ssm_conv_width
+    elif spec_mixer == "rwkv":
+        n = 6 * D * D + 2 * D * 64
+        f += 2.0 * T * n
+        H, hd_r = D // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+        f += T * H * hd_r * hd_r * 6.0  # wkv state update + readout
+    if spec_ffn == "dense":
+        mult = 3 if cfg.mlp_type == "swiglu" else 2
+        f += 2.0 * T * mult * D * cfg.dense_d_ff
+        if spec_mixer == "rwkv":        # receptance gate D*D
+            f += 2.0 * T * D * D
+    elif spec_ffn == "moe":
+        mult = 3 if cfg.mlp_type == "swiglu" else 2
+        # capacity-bounded dispatch: top_k * cap_factor per token
+        f += 2.0 * T * cfg.moe_top_k * 1.25 * mult * D * cfg.moe_d_ff
+        f += 2.0 * T * D * cfg.moe_num_experts        # router
+        if cfg.moe_shared_expert:
+            f += 2.0 * T * mult * D * cfg.moe_d_ff
+        if cfg.moe_dense_residual:
+            f += 2.0 * T * mult * D * cfg.dense_d_ff
+    return f
+
+
+def _layers(cfg: ModelConfig):
+    out = [("attn", "dense")] * cfg.prefix_dense_layers
+    for _ in range(cfg.num_periods):
+        out.extend((b.mixer, b.ffn) for b in cfg.period)
+    return out
+
+
+def exec_flops(cfg: ModelConfig, shape: ShapeConfig,
+               causal_skip: bool = False) -> Dict[str, float]:
+    """Executed flops (global, all devices) for one step of the cell."""
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind == "train" else (
+        shape.seq_len if shape.kind == "prefill" else 1)
+    fwd = 0.0
+    attn_fwd = 0.0
+    for mixer, ffn in _layers(cfg):
+        fwd += _proj_flops_fwd(cfg, mixer, ffn, B, S)
+        if mixer == "attn":
+            if shape.kind == "decode":
+                # one token against the seq_len cache
+                Hp, hd = cfg.padded_heads, cfg.head_dim
+                attn_fwd += 4.0 * B * Hp * shape.seq_len * hd
+            else:
+                attn_fwd += _attn_flops_fwd(cfg, B, S,
+                                            rect=not causal_skip)
+    head = 2.0 * B * S * cfg.d_model * cfg.vocab_size
+    fwd_total = fwd + attn_fwd + head
+
+    if shape.kind == "train":
+        total = 4.0 * fwd_total          # fwd + remat recompute + bwd(2x)
+    else:
+        total = fwd_total
+    model = 6.0 * cfg.active_param_count() * B * S if shape.kind == "train" \
+        else 2.0 * cfg.active_param_count() * B * S
+    return {"exec_flops": total, "fwd_flops": fwd_total,
+            "model_flops": model, "attn_fraction": attn_fwd / max(fwd_total, 1)}
+
+
+def hbm_bytes(cfg: ModelConfig, shape: ShapeConfig,
+              n_devices: int, kv_quant: bool = False) -> Dict[str, float]:
+    """Per-device HBM traffic model for one step."""
+    B = shape.global_batch
+    S = shape.seq_len
+    N = cfg.param_count()
+    D = cfg.d_model
+    if shape.kind == "train":
+        param_traffic = N * BF16 * (3 + 1)        # read fwd/remat/bwd + write
+        grad_traffic = N * BF16 * 2               # write + optimizer read
+        # activations: period-boundary saves + block-internal streams
+        n_layers = cfg.num_layers
+        act = B * S * D * BF16 * n_layers * 4.0
+        logits = B * S * cfg.vocab_size * F32 * 2
+        total = param_traffic + grad_traffic + act + logits
+    elif shape.kind == "prefill":
+        param_traffic = N * BF16
+        act = B * S * D * BF16 * cfg.num_layers * 2.0
+        kv_write = _kv_bytes(cfg, B, S, kv_quant)
+        total = param_traffic + act + kv_write + B * S * cfg.vocab_size * F32
+    else:  # decode
+        param_traffic = cfg.active_param_count() * BF16
+        kv_read = _kv_bytes(cfg, B, S, kv_quant)
+        total = param_traffic + kv_read + B * cfg.vocab_size * F32
+    return {"hbm_bytes_global": total,
+            "hbm_bytes_per_device": total / n_devices,
+            "kv_bytes_global": _kv_bytes(cfg, B, S, kv_quant)}
+
+
+def _kv_bytes(cfg: ModelConfig, B: int, S: int,
+              kv_quant: bool = False) -> float:
+    n_attn = sum(1 for m, _ in _layers(cfg) if m == "attn")
+    elem = (1 + F32 / max(cfg.head_dim, 1)) if kv_quant else BF16
+    kv = n_attn * B * S * cfg.padded_kv_heads * cfg.head_dim * 2 * elem
+    # ssm/rwkv states are O(1) in S
+    din = cfg.ssm_expand * cfg.d_model
+    n_mamba = sum(1 for m, _ in _layers(cfg) if m == "mamba")
+    kv += n_mamba * B * din * cfg.ssm_state_dim * F32
+    n_rwkv = sum(1 for m, _ in _layers(cfg) if m == "rwkv")
+    if cfg.rwkv_head_dim:
+        kv += n_rwkv * B * cfg.d_model * cfg.rwkv_head_dim * F32
+    return kv
+
+
+# hardware constants (TPU v5e, per assignment)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s per link (~per chip, one direction)
+
+
+def roofline_terms(cfg: ModelConfig, shape: ShapeConfig, n_devices: int,
+                   collective_bytes_per_device: float,
+                   kv_quant: bool = False,
+                   causal_skip: bool = False) -> Dict[str, float]:
+    fl = exec_flops(cfg, shape, causal_skip=causal_skip)
+    mem = hbm_bytes(cfg, shape, n_devices, kv_quant=kv_quant)
+    t_compute = fl["exec_flops"] / (n_devices * PEAK_FLOPS)
+    t_memory = mem["hbm_bytes_per_device"] / HBM_BW
+    t_coll = collective_bytes_per_device / ICI_BW
+    bottleneck = max(("compute", t_compute), ("memory", t_memory),
+                     ("collective", t_coll), key=lambda kv: kv[1])[0]
+    t_bound = max(t_compute, t_memory, t_coll)
+    return {
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "bottleneck": bottleneck,
+        "model_flops": fl["model_flops"], "exec_flops": fl["exec_flops"],
+        "useful_ratio": fl["model_flops"] / max(fl["exec_flops"], 1),
+        "attn_fraction": fl["attn_fraction"],
+        "hbm_bytes_per_device": mem["hbm_bytes_per_device"],
+        "mfu_upper_bound": fl["model_flops"]
+            / (n_devices * PEAK_FLOPS) / max(t_bound, 1e-12),
+    }

@@ -1,0 +1,452 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init).  Everything below is normal code.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces a JSON artifact with:
+  - memory_analysis (per-device argument/output/temp/peak bytes)
+  - cost_analysis   (HLO flops / bytes accessed, per-device)
+  - parsed collective schedule (op kind, dtype, result bytes, count)
+  - analytic MODEL_FLOPS = 6*N*D (active N for MoE)
+benchmarks/roofline.py turns these into the §Roofline table.
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-coder-33b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod --out runs/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES_BY_NAME, get_config, shapes_for
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.distributed import make_fl_aggregate_step
+from repro.launch import steps as S
+from repro.launch.mesh import make_production_mesh
+from repro.optim import sgd
+from repro.runtime.sharding import (ParallelCtx, cache_pspecs, param_pspecs,
+                                    param_shardings)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|s32|u32|s16|u16|s8|u8|pred|"
+                       r"f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[tok_dtype]
+
+
+def _line_collective(line: str):
+    """Returns (kind, result_bytes, is_f32) if the line is a collective."""
+    if "=" not in line:
+        return None
+    for kind in _COLLECTIVES:
+        if f" {kind}(" in line or f" {kind}-start(" in line:
+            if f" {kind}-done(" in line:
+                return None
+            lhs = line.split("=", 1)[1]
+            lhs = lhs.split(f" {kind}", 1)[0]
+            parts = _SHAPE_RE.findall(lhs)
+            total = sum(_shape_bytes(d, s) for d, s in parts)
+            is_f32 = bool(parts) and all(d == "f32" for d, _ in parts)
+            return kind, total, is_f32
+    return None
+
+
+def parse_collectives(hlo_text: str, loop_trip_count: int = 1,
+                      depth_trips: Optional[List[int]] = None
+                      ) -> Dict[str, Any]:
+    """Sum wire bytes of every collective in the post-SPMD module.
+
+    Methodology (EXPERIMENTS.md §Dry-run):
+    - shapes in the partitioned module are *per-device*; wire bytes per
+      device ~= result_bytes x 2 for all-reduce (ring reduce-scatter +
+      all-gather pass), x 1 for the others.
+    - HloCostAnalysis-style single counting undercounts loops, so
+      collectives are attributed per *computation*: ops in the entry
+      computation count once; ops inside while-loop body computations
+      count ``loop_trip_count`` times (the layer-period scan — the only
+      loop with collectives; attention/SSM chunk scans are collective-
+      free, asserted by the nested-loop sweep).
+    - The CPU backend float-normalizes bf16 compute to f32 (no native
+      bf16), so bf16 tensors appear as f32 in collectives — 2x their TPU
+      wire size.  ``total_bytes_tpu`` halves f32 collectives >= 1 MiB
+      (params/activations/grads, all bf16 on the TPU target; the
+      genuinely-f32 large reductions in these programs are < 2% of
+      bytes, verified on the jamba HLO).  FL-aggregation programs sum in
+      f32 *by design* and use the raw total.
+    """
+    if depth_trips is None:
+        depth_trips = [loop_trip_count]
+
+    comp_ops: Dict[str, List] = {}
+    comp_whiles: Dict[str, List[str]] = {}
+    comp_name = None
+    entry_name = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(ENTRY\s+)?(%?[\w\.\-]+)\s*\([^)]*\)\s*->.*\{",
+                     stripped)
+        if m and not stripped.startswith("ROOT"):
+            comp_name = m.group(2).lstrip("%")
+            comp_ops.setdefault(comp_name, [])
+            comp_whiles.setdefault(comp_name, [])
+            if m.group(1):
+                entry_name = comp_name
+        if comp_name is not None:
+            for b in re.findall(r"body=%?([\w\.\-]+)", line):
+                comp_whiles[comp_name].append(b)
+        c = _line_collective(line)
+        if c and comp_name is not None:
+            comp_ops[comp_name].append(c)
+
+    # nesting depth of each while body (entry = depth 0); bodies reached
+    # from depth-d code run at depth d+1
+    depth: Dict[str, int] = {}
+    frontier = [(entry_name, 0)] if entry_name else []
+    seen = set()
+    while frontier:
+        name, d = frontier.pop()
+        if name in seen or name not in comp_whiles:
+            continue
+        seen.add(name)
+        for b in comp_whiles[name]:
+            depth[b] = max(depth.get(b, 0), d + 1)
+            frontier.append((b, d + 1))
+
+    def mult_for(name: str) -> int:
+        d = depth.get(name, 0)
+        if d == 0 and name != entry_name and name in depth:
+            d = depth[name]
+        m = 1
+        for level in range(min(d, len(depth_trips))):
+            m *= depth_trips[level]
+        return m
+
+    per_kind: Dict[str, Any] = {k: {"count": 0, "bytes": 0}
+                                for k in _COLLECTIVES}
+    in_loop_bytes = 0
+    f32_large_bytes = 0
+    for name, ops_list in comp_ops.items():
+        mult_loop = mult_for(name)
+        for kind, nbytes, is_f32 in ops_list:
+            wire = nbytes * (2 if kind == "all-reduce" else 1)
+            per_kind[kind]["count"] += mult_loop
+            per_kind[kind]["bytes"] += wire * mult_loop
+            if mult_loop > 1:
+                in_loop_bytes += wire * mult_loop
+            if is_f32 and nbytes >= 2**20:
+                f32_large_bytes += wire * mult_loop
+    total = sum(v["bytes"] for v in per_kind.values() if isinstance(v, dict))
+    per_kind["total_bytes"] = total
+    per_kind["f32_large_bytes"] = f32_large_bytes
+    per_kind["total_bytes_tpu"] = total - f32_large_bytes // 2
+    per_kind["loop_bytes"] = in_loop_bytes
+    per_kind["loop_trip_count"] = loop_trip_count
+    return per_kind
+
+
+def _memory_analysis_dict(compiled) -> Dict[str, float]:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+        if "argument_size_in_bytes" in out:
+            out["peak_bytes_estimate"] = (
+                out.get("argument_size_in_bytes", 0)
+                + out.get("output_size_in_bytes", 0)
+                + out.get("temp_size_in_bytes", 0)
+                - out.get("alias_size_in_bytes", 0))
+    except Exception as e:                                  # CPU backend quirks
+        out["error"] = repr(e)
+    return out
+
+
+def _cost_analysis_dict(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    k in ("flops", "transcendentals", "bytes accessed")
+                    or k.startswith("bytes accessed"))}
+    except Exception as e:
+        return {"error": repr(e)}
+
+
+# ---------------------------------------------------------------------------
+
+def optimized_overrides(shape_kind: str, multi_pod: bool = False) -> dict:
+    """The §Perf-winning parallelism policy per shape kind."""
+    if shape_kind == "decode":
+        return {"moe_decode_tp": True, "fsdp": False, "kv_quant": True,
+                "vocab_sharded_embed": True}
+    if shape_kind == "train":
+        # each microbatch must still cover every DP shard
+        return {"microbatches": 8 if multi_pod else 16,
+                "attn_causal_skip": True}
+    return {"attn_causal_skip": True}    # prefill
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               ctx_overrides: Optional[dict] = None,
+               program: str = "auto") -> Dict[str, Any]:
+    """Lower+compile one cell; returns the artifact dict."""
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    if shape not in shapes_for(cfg):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "long_500k requires sub-quadratic mixing "
+                          "(DESIGN.md §Arch-applicability)"}
+
+    # pad q-heads to the model-axis width (zero-padded, output-masked)
+    if cfg.num_heads:
+        cfg = dataclasses.replace(cfg, head_pad_to=16)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = S.make_ctx(mesh, cfg, shape, **(ctx_overrides or {}))
+    t0 = time.time()
+
+    params_shape = jax.eval_shape(
+        lambda r: __import__("repro.models.transformer",
+                             fromlist=["init_params"]).init_params(r, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspecs = param_pspecs(params_shape, ctx)
+    ns = lambda spec: jax.sharding.NamedSharding(mesh, spec)
+    pshard = jax.tree_util.tree_map(ns, pspecs,
+                                    is_leaf=lambda x: isinstance(
+                                        x, jax.sharding.PartitionSpec))
+    batch_sds = S.input_specs(cfg, shape)
+    bshard = {k: ns(v) for k, v in S.batch_pspecs(cfg, shape, ctx).items()}
+
+    kind = shape.kind if program == "auto" else program
+    if kind == "train":
+        opt = sgd(1e-2)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        opt_shard = jax.tree_util.tree_map(
+            lambda l: pshard, opt_shape) if opt_shape else ()
+        # sgd() has empty state; momentum/adam states mirror param specs
+        step = S.make_train_step(cfg, ctx, opt)
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, (), bshard),
+                         out_shardings=(pshard, (), None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_shape, (), batch_sds)
+    elif kind == "prefill":
+        step = S.make_prefill_step(cfg, ctx)
+        cache_shape = jax.eval_shape(
+            lambda p, b: step(p, b)[1], params_shape, batch_sds)
+        cshard = jax.tree_util.tree_map(
+            ns, cache_pspecs(cache_shape, ctx),
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        jitted = jax.jit(step, in_shardings=(pshard, bshard),
+                         out_shardings=(None, cshard))
+        lowered = jitted.lower(params_shape, batch_sds)
+    else:  # decode
+        from repro.models.transformer import init_cache
+        step = S.make_serve_step(cfg, ctx)
+        cache_shape = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                               kv_quant=ctx.kv_quant))
+        cshard = jax.tree_util.tree_map(
+            ns, cache_pspecs(cache_shape, ctx),
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, cshard, bshard),
+                         out_shardings=(None, None, cshard),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(params_shape, cache_shape, batch_sds)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    hlo = compiled.as_text()
+    n_dev = mesh.devices.size
+    if kind == "train" and ctx.microbatches > 1:
+        depth_trips = [ctx.microbatches, cfg.num_periods]
+    else:
+        depth_trips = [cfg.num_periods]
+    coll = parse_collectives(hlo, depth_trips=depth_trips)
+    from repro.launch.analytic import roofline_terms
+    analytic = roofline_terms(cfg, shape, int(n_dev),
+                              coll["total_bytes_tpu"],
+                              kv_quant=ctx.kv_quant,
+                              causal_skip=ctx.attn_causal_skip)
+    art: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "program": kind,
+        "mesh": list(mesh.devices.shape), "axis_names": list(mesh.axis_names),
+        "n_devices": int(n_dev),
+        "ctx": {f.name: getattr(ctx, f.name)
+                for f in dataclasses.fields(ctx) if f.name != "mesh"},
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": _memory_analysis_dict(compiled),
+        "cost_analysis": _cost_analysis_dict(compiled),
+        "collectives": coll,
+        "analytic": analytic,
+        "hlo_bytes": len(hlo),
+        "param_count": int(cfg.param_count()),
+        "active_param_count": int(cfg.active_param_count()),
+        "tokens": int(shape.global_batch * (shape.seq_len
+                      if kind == "train" else 1)),
+    }
+    return art
+
+
+def lower_fl_aggregate(arch: str, *, mode: str = "exact",
+                       n_pods: int = 2) -> Dict[str, Any]:
+    """Lower the cross-pod FL aggregation program (the paper's technique)."""
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=True)
+    ctx = ParallelCtx(mesh=mesh)
+    t0 = time.time()
+    params_shape = jax.eval_shape(
+        lambda r: __import__("repro.models.transformer",
+                             fromlist=["init_params"]).init_params(r, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    # pod-stacked params: leading n_pods axis sharded over 'pod'
+    stacked_shape = jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct((n_pods,) + l.shape, l.dtype),
+        params_shape)
+    pspecs = param_pspecs(params_shape, ctx)
+    is_spec = lambda x: isinstance(x, jax.sharding.PartitionSpec)
+    pod_specs = jax.tree_util.tree_map(
+        lambda spec: jax.sharding.PartitionSpec(*(("pod",) + tuple(spec))),
+        pspecs, is_leaf=is_spec)
+    ns = lambda spec: jax.sharding.NamedSharding(mesh, spec)
+    sshard = jax.tree_util.tree_map(ns, pod_specs, is_leaf=is_spec)
+    step = make_fl_aggregate_step(mode, ctx, pod_specs=pod_specs)
+    jitted = jax.jit(step, in_shardings=(sshard, None),
+                     out_shardings=sshard, donate_argnums=(0,))
+    lowered = jitted.lower(stacked_shape,
+                           jax.ShapeDtypeStruct((n_pods,), jnp.float32))
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    from repro.launch.analytic import ICI_BW
+    return {
+        "arch": arch, "shape": f"fl_aggregate_{mode}", "program": "fl",
+        "mesh": list(mesh.devices.shape), "n_devices": int(mesh.devices.size),
+        "compile_s": round(time.time() - t0, 2),
+        "memory_analysis": _memory_analysis_dict(compiled),
+        "cost_analysis": _cost_analysis_dict(compiled),
+        # FL aggregation reduces in f32 by design: use the raw byte count
+        "collectives": coll,
+        "analytic": {"t_collective_s": coll["total_bytes"] / ICI_BW,
+                     "bottleneck": "collective"},
+        "param_count": int(cfg.param_count()),
+    }
+
+
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--fl-mode", default=None,
+                    help="lower fl_aggregate instead (exact|approx|int8)")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--ctx", default=None,
+                    help="JSON dict of ParallelCtx overrides")
+    ap.add_argument("--preset", default="baseline",
+                    choices=["baseline", "optimized"],
+                    help="'optimized' applies the §Perf-winning policy "
+                         "(weight-stationary+int8-KV decode, µbatched train)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    overrides = json.loads(args.ctx) if args.ctx else None
+
+    cells: List = []
+    if args.fl_mode:
+        archs = [args.arch] if args.arch else ["deepseek-coder-33b"]
+        for a in archs:
+            cells.append(("fl", a, args.fl_mode, True))
+    else:
+        archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+        for a in archs:
+            cfg = get_config(a)
+            shp = ([args.shape] if args.shape
+                   else [s.name for s in shapes_for(cfg)])
+            meshes = ([False, True] if args.both_meshes
+                      else [args.multi_pod])
+            for s in shp:
+                for mp in meshes:
+                    cells.append(("cell", a, s, mp))
+
+    failures = 0
+    for kind, a, s, mp in cells:
+        tag = f"{a}__{s}__{'pod2' if mp else 'pod1'}"
+        path = os.path.join(args.out, tag + ".json")
+        try:
+            if kind == "fl":
+                art = lower_fl_aggregate(a, mode=s)
+            else:
+                ov = dict(overrides or {})
+                if args.preset == "optimized":
+                    shp = SHAPES_BY_NAME[s]
+                    ov = {**optimized_overrides(shp.kind, multi_pod=mp),
+                          **ov}
+                art = lower_cell(a, s, multi_pod=mp,
+                                 ctx_overrides=ov or None)
+            with open(path, "w") as f:
+                json.dump(art, f, indent=1)
+            if art.get("skipped"):
+                print(f"SKIP {tag}: {art['reason']}")
+                continue
+            ma = art.get("memory_analysis", {})
+            an = art.get("analytic", {})
+            coll_show = art["collectives"].get(
+                "total_bytes_tpu", art["collectives"]["total_bytes"])
+            print(f"OK   {tag}: compile={art.get('compile_s')}s "
+                  f"coll/dev={coll_show:.2e}B "
+                  f"args/dev={ma.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"temp/dev={ma.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"t=({an.get('t_compute_s', 0)*1e3:.1f},"
+                  f"{an.get('t_memory_s', 0)*1e3:.1f},"
+                  f"{an.get('t_collective_s', 0)*1e3:.1f})ms "
+                  f"bound={an.get('bottleneck')} "
+                  f"useful={an.get('useful_ratio', 0):.2f}")
+        except Exception:
+            failures += 1
+            err = traceback.format_exc()
+            with open(path, "w") as f:
+                json.dump({"arch": a, "shape": s, "multi_pod": mp,
+                           "failed": True, "error": err[-4000:]}, f, indent=1)
+            print(f"FAIL {tag}:\n{err[-1500:]}")
+    print(f"done: {len(cells) - failures}/{len(cells)} cells succeeded")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

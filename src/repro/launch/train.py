@@ -1,0 +1,168 @@
+"""Training launcher.
+
+Two modes:
+- plain   : standard DP/TP/FSDP trainer (``train_step`` per batch)
+- fl      : federated rounds — L local steps per pod group, then the
+            paper's count-normalized aggregation across pods
+            (core/distributed.py).  In production each pod is its own
+            process group running this same binary with ``--fl-pods`` and
+            a pod-local mesh; aggregation runs on the multi-pod mesh.
+
+CPU-friendly: ``--reduced`` swaps in the tiny same-family config and a
+small mesh so the full loop (data → steps → checkpoint → restart) runs in
+this container; full configs are exercised via dryrun.py.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch chatglm3-6b \
+      --reduced --steps 20 --mode fl --fl-local-steps 5 --agg-mode approx
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import SHAPES_BY_NAME, get_config, reduced
+from repro.core.distributed import make_fl_aggregate_step
+from repro.data.synthetic import lm_batch_for
+from repro.launch import steps as S
+from repro.launch.mesh import make_mesh_for, make_production_mesh
+from repro.models.transformer import init_params
+from repro.optim import adamw, sgd
+from repro.runtime.fault_tolerance import DeadlineMonitor, RoundRobustState
+from repro.runtime.sharding import param_shardings
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=0, help="override batch")
+    ap.add_argument("--seq", type=int, default=0, help="override seq")
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
+    ap.add_argument("--mode", default="plain", choices=["plain", "fl"])
+    ap.add_argument("--fl-pods", type=int, default=2)
+    ap.add_argument("--fl-local-steps", type=int, default=4)
+    ap.add_argument("--agg-mode", default="exact",
+                    choices=["exact", "approx", "int8"])
+    ap.add_argument("--straggler-rate", type=float, default=0.0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16(x2) mesh (needs 256/512 devices)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    shape = SHAPES_BY_NAME[args.shape]
+    B = args.batch or (8 if args.reduced else shape.global_batch)
+    Sq = args.seq or (32 if args.reduced else shape.seq_len)
+
+    n_dev = len(jax.devices())
+    ctx = None
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.mode == "fl")
+        ctx = S.make_ctx(mesh, cfg, shape)
+    elif n_dev > 1:
+        mesh = make_mesh_for(n_dev, pods=args.fl_pods
+                             if args.mode == "fl" else 1)
+        ctx = S.make_ctx(mesh, cfg, shape)
+
+    optimizer = (sgd(args.lr) if args.optimizer == "sgd"
+                 else adamw(args.lr))
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    if ctx is not None:
+        shardings = param_shardings(jax.eval_shape(lambda p: p, params), ctx)
+        params = jax.device_put(params, shardings)
+    opt_state = optimizer.init(params)
+    train_step = jax.jit(S.make_train_step(cfg, ctx, optimizer),
+                         donate_argnums=(0, 1))
+
+    ckpt = Checkpointer(args.ckpt_dir, keep=3) if args.ckpt_dir else None
+    start_step = 0
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        (params, opt_state), extra = ckpt.restore((params, opt_state))
+        start_step = int(extra.get("step", 0))
+        print(f"resumed from step {start_step}")
+
+    if args.mode == "fl":
+        _run_fl(args, cfg, ctx, params, opt_state, train_step, B, Sq, ckpt)
+        return
+
+    t0 = time.time()
+    for i in range(start_step, args.steps):
+        batch = lm_batch_for(cfg, B, Sq, seed=i)
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        print(f"step {i}: loss={loss:.4f} "
+              f"({(time.time()-t0)/(i-start_step+1):.2f}s/step)")
+        assert np.isfinite(loss), "loss diverged"
+        if ckpt and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
+            ckpt.async_save(i + 1, (params, opt_state),
+                            extra={"step": i + 1})
+    if ckpt:
+        ckpt.wait()
+    print("done")
+
+
+def _run_fl(args, cfg, ctx, params, opt_state, train_step, B, Sq, ckpt):
+    """Federated rounds: each pod trains locally, then aggregate."""
+    n_pods = args.fl_pods
+    agg = make_fl_aggregate_step(args.agg_mode, ctx)
+    if ctx is not None and "pod" in ctx.axis_names:
+        agg = jax.jit(agg)
+    robust = RoundRobustState()
+    rng = np.random.default_rng(0)
+
+    # pod-stacked params (simulated as a leading axis when no pod mesh)
+    stacked = jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p[None], (n_pods,) + p.shape).copy(),
+        params)
+    opt_states = [opt_state] * n_pods
+
+    rounds = args.steps
+    for r in range(rounds):
+        t0 = time.time()
+        new_rows, losses = [], []
+        for pod in range(n_pods):
+            row = jax.tree_util.tree_map(lambda s: s[pod], stacked)
+            ostate = opt_states[pod]
+            for j in range(args.fl_local_steps):
+                batch = lm_batch_for(cfg, B, Sq,
+                                     seed=r * 1000 + pod * 100 + j)
+                row, ostate, m = train_step(row, ostate, batch)
+            losses.append(float(m["loss"]))
+            opt_states[pod] = ostate
+            new_rows.append(row)
+        stacked = jax.tree_util.tree_map(
+            lambda *rows: jnp.stack(rows), *new_rows)
+        alive = (rng.random(n_pods) >= args.straggler_rate).astype(np.float32)
+        if alive.sum() == 0:
+            alive[0] = 1.0
+        stacked = agg(stacked, jnp.asarray(alive))
+        robust.on_round_complete()
+        print(f"round {r}: losses={['%.3f' % l for l in losses]} "
+              f"alive={alive.tolist()} ({time.time()-t0:.2f}s)")
+        if ckpt and args.ckpt_every and (r + 1) % args.ckpt_every == 0:
+            global_params = jax.tree_util.tree_map(lambda s: s[0], stacked)
+            ckpt.async_save(r + 1, global_params,
+                            extra={"round": r + 1, **robust.to_extra()})
+    if ckpt:
+        ckpt.wait()
+    print("fl done")
+
+
+if __name__ == "__main__":
+    main()

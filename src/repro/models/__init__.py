@@ -1,0 +1,2 @@
+"""Model zoo: generic decoder LM covering all 10 assigned architectures,
+plus the paper's 4-conv CNN."""

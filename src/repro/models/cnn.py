@@ -1,0 +1,85 @@
+"""The paper's federated-learning model (§5.1, footnote 1):
+
+Conv(32,3)→ReLU→Conv(64,3)→ReLU→MaxPool(2)→Conv(128,3)→ReLU→Conv(256,3)
+→ReLU→MaxPool(2)→FC(256)→Dropout(0.5)→FC(10)→Softmax — ~2M float32 params
+on CIFAR-10-shaped inputs (32×32×3, 10 classes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.paper_cnn import CNNConfig
+
+
+def init_cnn(rng, cfg: CNNConfig):
+    ks = jax.random.split(rng, len(cfg.conv_channels) + 2)
+    params = {}
+    cin = cfg.in_channels
+    k = cfg.kernel_size
+    for i, cout in enumerate(cfg.conv_channels):
+        fan_in = k * k * cin
+        params[f"conv{i}"] = {
+            "w": (jax.random.normal(ks[i], (k, k, cin, cout), jnp.float32)
+                  * (2.0 / fan_in) ** 0.5),
+            "b": jnp.zeros((cout,), jnp.float32),
+        }
+        cin = cout
+    # two 2x maxpools with 'same' convs: spatial = image_size / 4
+    spatial = cfg.image_size // 4
+    flat = spatial * spatial * cfg.conv_channels[-1]
+    params["fc0"] = {
+        "w": jax.random.normal(ks[-2], (flat, cfg.fc_hidden), jnp.float32)
+             * (2.0 / flat) ** 0.5,
+        "b": jnp.zeros((cfg.fc_hidden,), jnp.float32),
+    }
+    params["fc1"] = {
+        "w": jax.random.normal(ks[-1], (cfg.fc_hidden, cfg.num_classes),
+                               jnp.float32) * (2.0 / cfg.fc_hidden) ** 0.5,
+        "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+    return params
+
+
+def _conv(x, p):
+    y = lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_forward(params, images, cfg: CNNConfig, *, dropout_rng=None,
+                train: bool = False):
+    """images (B, H, W, C) -> logits (B, num_classes)."""
+    x = images
+    for i in range(len(cfg.conv_channels)):
+        x = jax.nn.relu(_conv(x, params[f"conv{i}"]))
+        if i in (1, 3):
+            x = _maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc0"]["w"] + params["fc0"]["b"])
+    if train and dropout_rng is not None and cfg.dropout > 0:
+        keep = jax.random.bernoulli(dropout_rng, 1.0 - cfg.dropout, x.shape)
+        x = jnp.where(keep, x / (1.0 - cfg.dropout), 0.0)
+    return x @ params["fc1"]["w"] + params["fc1"]["b"]
+
+
+def cnn_loss(params, batch, cfg: CNNConfig, dropout_rng=None,
+             train: bool = True):
+    logits = cnn_forward(params, batch["images"], cfg,
+                         dropout_rng=dropout_rng, train=train)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - ll)
+
+
+def cnn_accuracy(params, batch, cfg: CNNConfig):
+    logits = cnn_forward(params, batch["images"], cfg, train=False)
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))

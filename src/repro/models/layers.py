@@ -1,0 +1,344 @@
+"""Shared transformer layers: norms, RoPE (standard / 2d / M-RoPE), GQA
+attention (chunked-flash for train/prefill, cache attention for decode),
+and the three FFN variants (SwiGLU, squared-ReLU, GELU)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.runtime.sharding import ParallelCtx, shard_act
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(rng, shape, dtype, scale=0.02):
+    return (scale * jax.random.normal(rng, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), _dtype(cfg))}
+    if cfg.norm_type == "layernorm" and cfg.use_bias:
+        p["bias"] = jnp.zeros((d,), _dtype(cfg))
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * lax.rsqrt(var + cfg.norm_eps)
+    else:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + cfg.norm_eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings: standard / 2d (partial, chatglm) / mrope (qwen2-vl)
+# ---------------------------------------------------------------------------
+
+def _rope_cos_sin(positions, n_freqs: int, theta: float):
+    """positions (...,) -> cos,sin (..., n_freqs) in f32."""
+    freqs = 1.0 / (theta ** (jnp.arange(n_freqs, dtype=jnp.float32) / n_freqs))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate_pairs(x, cos, sin):
+    """x (..., 2*n): interleaved-half convention (llama): split halves."""
+    n = x.shape[-1] // 2
+    x1, x2 = x[..., :n], x[..., n:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_rope(x, positions, cfg: ModelConfig):
+    """x: (B, S, N, hd); positions: (B, S) int32, or (3, B, S) for mrope."""
+    hd = x.shape[-1]
+    if cfg.rope_mode == "none":
+        return x
+    if cfg.rope_mode == "standard":
+        cos, sin = _rope_cos_sin(positions, hd // 2, cfg.rope_theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+        return _rotate_pairs(x, cos, sin)
+    if cfg.rope_mode == "2d":
+        # chatglm: rotary on the first half of head_dim only
+        rot, keep = x[..., : hd // 2], x[..., hd // 2:]
+        cos, sin = _rope_cos_sin(positions, hd // 4, cfg.rope_theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+        return jnp.concatenate([_rotate_pairs(rot, cos, sin), keep], axis=-1)
+    if cfg.rope_mode == "mrope":
+        # positions (3, B, S): temporal / height / width streams.
+        # head_dim pairs split into sections (1/4 t, 3/8 h, 3/8 w) like qwen2-vl.
+        n = hd // 2
+        st = n // 4
+        sh = (n - st) // 2
+        sections = (st, sh, n - st - sh)
+        cos_parts, sin_parts = [], []
+        off = 0
+        for comp, sec in enumerate(sections):
+            freqs = 1.0 / (cfg.rope_theta ** (
+                (jnp.arange(off, off + sec, dtype=jnp.float32)) / n))
+            ang = positions[comp].astype(jnp.float32)[..., None] * freqs
+            cos_parts.append(jnp.cos(ang))
+            sin_parts.append(jnp.sin(ang))
+            off += sec
+        cos = jnp.concatenate(cos_parts, -1)[:, :, None, :]
+        sin = jnp.concatenate(sin_parts, -1)[:, :, None, :]
+        return _rotate_pairs(x, cos, sin)
+    raise ValueError(cfg.rope_mode)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attn(rng, cfg: ModelConfig):
+    """Padded-head storage: wq/wo hold ``padded_heads`` (zero-initialized
+    beyond ``num_heads``); outputs of pad heads are statically masked in
+    attn_out, so the real heads' math and gradients are unchanged while
+    every stored dim divides the 16-wide 'model' axis."""
+    D, hd = cfg.d_model, cfg.head_dim
+    H, Hp = cfg.num_heads, cfg.padded_heads
+    KVp = cfg.padded_kv_heads
+    ks = jax.random.split(rng, 4)
+    dt = _dtype(cfg)
+
+    def padded(key, shape, pad_axis, n_real):
+        w = dense_init(key, shape, dt)
+        if shape[pad_axis] == n_real:
+            return w
+        mask_shape = [1] * len(shape)
+        mask_shape[pad_axis] = shape[pad_axis]
+        mask = (jnp.arange(shape[pad_axis]) < n_real).reshape(mask_shape)
+        return w * mask.astype(dt)
+
+    p = {
+        "wq": padded(ks[0], (D, Hp, hd), 1, H),
+        "wk": padded(ks[1], (D, KVp, hd), 1, cfg.num_kv_heads),
+        "wv": padded(ks[2], (D, KVp, hd), 1, cfg.num_kv_heads),
+        "wo": padded(ks[3], (Hp, hd, D), 0, H),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hp, hd), dt)
+        p["bk"] = jnp.zeros((KVp, hd), dt)
+        p["bv"] = jnp.zeros((KVp, hd), dt)
+    if cfg.use_bias:
+        p["bo"] = jnp.zeros((cfg.d_model,), dt)
+    return p
+
+
+def head_mask(cfg: ModelConfig):
+    """(Hp, 1) static 0/1 mask of real heads (None if no padding)."""
+    if cfg.padded_heads == cfg.num_heads:
+        return None
+    return (jnp.arange(cfg.padded_heads) < cfg.num_heads
+            )[:, None].astype(jnp.float32)
+
+
+def _qkv(p, x, positions, cfg: ModelConfig, ctx):
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = shard_act(q, ("batch", "seq", "heads", None), ctx)
+    k = shard_act(k, ("batch", "seq", "kv_heads", None), ctx)
+    v = shard_act(v, ("batch", "seq", "kv_heads", None), ctx)
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+    return q, k, v
+
+
+def flash_attention(q, k, v, *, causal: bool, q_chunk: int, kv_chunk: int,
+                    causal_skip: bool = False):
+    """Chunked online-softmax attention in pure XLA (scan over blocks).
+
+    q (B,Sq,H,hd); k,v (B,Sk,KV,hd) with H % KV == 0.  Memory is
+    O(B * H * q_chunk * kv_chunk) instead of O(B * H * S^2).
+
+    ``causal_skip`` unrolls the q-block loop so each q block only visits
+    kv blocks <= its diagonal — halving attention flops at long S at the
+    cost of an HLO ~nq x larger for this region (the §Perf compute
+    lever; baseline keeps the uniform rectangle).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / (hd ** 0.5)
+    if Sq % q_chunk != 0:
+        q_chunk = Sq
+    if Sk % kv_chunk != 0:
+        kv_chunk = Sk
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+
+    # (B, KV, G, S, hd) grouped layout
+    qg = q.reshape(B, Sq, KV, G, hd).transpose(0, 2, 3, 1, 4)
+    kg = k.transpose(0, 2, 1, 3)                   # (B, KV, Sk, hd)
+    vg = v.transpose(0, 2, 1, 3)
+
+    def q_block(iq, nk_visit):
+        qb = lax.dynamic_slice_in_dim(qg, iq * q_chunk, q_chunk, axis=3)
+        qb = qb.astype(jnp.float32) * scale
+        m0 = jnp.full((B, KV, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32)
+
+        # nested remat: during the block's backward only one (iq, ik)
+        # score tile lives at a time (otherwise nq*nk tiles of
+        # B*KV*G*cq*ck f32 residuals materialize at once)
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            kb = lax.dynamic_slice_in_dim(kg, ik * kv_chunk, kv_chunk, axis=2)
+            vb = lax.dynamic_slice_in_dim(vg, ik * kv_chunk, kv_chunk, axis=2)
+            s = jnp.einsum("bngqh,bnkh->bngqk", qb, kb.astype(jnp.float32))
+            if causal:
+                qi = iq * q_chunk + jnp.arange(q_chunk)
+                ki = ik * kv_chunk + jnp.arange(kv_chunk)
+                s = jnp.where(qi[:, None] >= ki[None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows (m_new = -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bngqk,bnkh->bngqh", p, vb.astype(jnp.float32))
+            l = l * corr + jnp.sum(p, axis=-1)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0),
+                                  jnp.arange(nk_visit))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out                                  # (B, KV, G, cq, hd)
+
+    if nq == 1:
+        og = q_block(0, nk)
+    elif causal and causal_skip:
+        # unrolled diagonal: q block iq only visits kv blocks 0..diag(iq)
+        blocks = []
+        for iq in range(nq):
+            q_end = (iq + 1) * q_chunk
+            nk_visit = min(nk, -(-q_end // kv_chunk))
+            blocks.append(q_block(iq, nk_visit))
+        og = jnp.concatenate(blocks, axis=3)
+    else:
+        _, og = lax.scan(lambda _, iq: (None, q_block(iq, nk)), None,
+                         jnp.arange(nq))
+        og = og.transpose(1, 2, 3, 0, 4, 5).reshape(B, KV, G, Sq, hd)
+    out = og.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def quantize_kv(x):
+    """(B,T,KV,hd) -> (int8, scales (B,T,KV)) per-(position, head) absmax."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def decode_attention(q, k_cache, v_cache, pos, k_scale=None, v_scale=None):
+    """Single-token attention over a KV cache.
+
+    q (B,1,H,hd); caches (B,S,KV,hd) bf16 — or int8 with per-(pos, head)
+    scales (B,S,KV) (the quantized-KV decode path: ~2x less HBM read,
+    which is the decode bottleneck).  pos scalar int32 masks positions
+    > pos.  Runs in f32 internally.
+    """
+    B, _, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32) / (hd ** 0.5)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale[..., None]
+    if v_scale is not None:
+        vf = vf * v_scale[..., None]
+    s = jnp.einsum("bngh,bsnh->bngs", qg, kf)
+    mask = (jnp.arange(S) <= pos)[None, None, None, :]
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bngs,bsnh->bngh", p, vf)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def update_kv_cache(cache, new, pos):
+    """Write one token (B,1,KV,hd) at sequence position ``pos``."""
+    return lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype),
+                                           pos, axis=1)
+
+
+def attn_out(p, ctx_out, cfg: ModelConfig, ctx):
+    hm = head_mask(cfg)
+    if hm is not None:      # zero pad-head outputs (keeps their grads zero)
+        ctx_out = ctx_out * hm.astype(ctx_out.dtype)
+    y = jnp.einsum("bsnh,nhd->bsd", ctx_out, p["wo"])
+    if cfg.use_bias and "bo" in p:
+        y = y + p["bo"]
+    return shard_act(y, ("batch", "seq", "embed"), ctx)
+
+
+# ---------------------------------------------------------------------------
+# FFN variants
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, cfg: ModelConfig, d_ff: Optional[int] = None):
+    D = cfg.d_model
+    F = d_ff or cfg.dense_d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 3)
+    if cfg.mlp_type == "swiglu":
+        p = {"w1": dense_init(ks[0], (D, F), dt),
+             "w3": dense_init(ks[1], (D, F), dt),
+             "w2": dense_init(ks[2], (F, D), dt)}
+    else:  # squared_relu | gelu — non-gated
+        p = {"w1": dense_init(ks[0], (D, F), dt),
+             "w2": dense_init(ks[1], (F, D), dt)}
+    if cfg.use_bias:
+        p["b1"] = jnp.zeros((F,), dt)
+        p["b2"] = jnp.zeros((D,), dt)
+    return p
+
+
+def mlp_hidden(p, x, cfg: ModelConfig):
+    h = x @ p["w1"]
+    if "b1" in p:
+        h = h + p["b1"]
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"])
+    elif cfg.mlp_type == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return h
+
+
+def apply_mlp(p, x, cfg: ModelConfig, ctx):
+    h = mlp_hidden(p, x, cfg)
+    h = shard_act(h, ("batch", "seq", "mlp"), ctx)
+    y = h @ p["w2"]
+    if "b2" in p:
+        y = y + p["b2"]
+    return shard_act(y, ("batch", "seq", "embed"), ctx)

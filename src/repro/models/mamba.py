@@ -1,0 +1,158 @@
+"""Mamba (selective SSM) block for the Jamba hybrid architecture.
+
+Training runs the recurrence as a chunked-remat ``lax.scan`` over the
+sequence (state (B, d_inner, N) per step — materializing the full
+(B, S, d_inner, N) discretization would be ~17 GB/device at the assigned
+shapes).  Decode carries (conv_state, ssm_state) in the cache.
+
+Sharding: d_inner over ``'model'`` (TP); out_proj contracts d_inner so XLA
+inserts the usual TP psum.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.scan_utils import remat_chunked_scan
+from repro.runtime.sharding import ParallelCtx, shard_act
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    din = cfg.ssm_expand * cfg.d_model
+    dtr = max(1, cfg.d_model // 16)
+    return din, cfg.ssm_state_dim, dtr, cfg.ssm_conv_width
+
+
+def init_mamba(rng, cfg: ModelConfig):
+    D = cfg.d_model
+    din, N, dtr, cw = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 8)
+    a = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (din, 1))
+    # x/z and dt/B/C projections are stored as separate weights (not one
+    # fused matrix + jnp.split): splitting a 'model'-sharded output dim at
+    # non-shard boundaries forces GSPMD collective-permutes/all-to-alls
+    # per layer (§Perf Cell 2, iteration 2).
+    return {
+        "in_proj_x": dense_init(ks[0], (D, din), dt),
+        "in_proj_z": dense_init(ks[5], (D, din), dt),
+        "conv_w": dense_init(ks[1], (din, cw), dt, scale=0.1),
+        "conv_b": jnp.zeros((din,), dt),
+        "xp_dt": dense_init(ks[2], (din, dtr), dt),
+        "xp_b": dense_init(ks[6], (din, N), dt),
+        "xp_c": dense_init(ks[7], (din, N), dt),
+        "dt_proj": dense_init(ks[3], (dtr, din), dt, scale=dtr ** -0.5),
+        "dt_bias": jnp.full((din,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "a_log": jnp.log(a),                              # (din, N) f32
+        "d_skip": jnp.ones((din,), jnp.float32),
+        "out_proj": dense_init(ks[4], (din, D), dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along S.  x (B,S,din); w (din,cw)."""
+    cw = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = lax.conv_general_dilated(
+        xp, w.T[None],                           # (I=1, W=cw, O=din)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "IWO", "NWC"),
+        feature_group_count=w.shape[0])
+    return out + b
+
+
+def _ssm_inputs(p, x, cfg: ModelConfig, ctx):
+    """Shared pre-recurrence compute.  Returns (x_in, xc, z, dt, Bc, Cc, A)."""
+    din, N, dtr, _ = _dims(cfg)
+    x_in = shard_act(x @ p["in_proj_x"], ("batch", "seq", "dinner"), ctx)
+    z = shard_act(x @ p["in_proj_z"], ("batch", "seq", "dinner"), ctx)
+    xc = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+    xc = shard_act(xc, ("batch", "seq", "dinner"), ctx)
+    dt_r = xc @ p["xp_dt"]                        # (B,S,dtr)
+    Bc = xc @ p["xp_b"]                           # (B,S,N)
+    Cc = xc @ p["xp_c"]
+    dt = jax.nn.softplus(
+        (dt_r @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])
+    dt = shard_act(dt, ("batch", "seq", "dinner"), ctx)
+    A = -jnp.exp(p["a_log"])                      # (din, N)
+    return x_in, xc, z, dt, Bc.astype(jnp.float32), Cc.astype(jnp.float32), A
+
+
+def _ssm_step(A, h, dt_t, B_t, C_t, x_t):
+    """h (B,din,N); dt_t,x_t (B,din); B_t,C_t (B,N) — one recurrence step."""
+    da = jnp.exp(dt_t[..., None] * A)                       # (B,din,N)
+    h = da * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, C_t)
+    return h, y
+
+
+def apply_mamba_train(p, x, cfg: ModelConfig, ctx: Optional[ParallelCtx],
+                      return_final: bool = False):
+    B, S, D = x.shape
+    din, N, _, cw = _dims(cfg)
+    x_in, xc, z, dt, Bc, Cc, A = _ssm_inputs(p, x, cfg, ctx)
+
+    xs = (dt.transpose(1, 0, 2),                   # (S,B,din)
+          Bc.transpose(1, 0, 2),                   # (S,B,N)
+          Cc.transpose(1, 0, 2),
+          xc.astype(jnp.float32).transpose(1, 0, 2))
+
+    def step(h, t):
+        dt_t, B_t, C_t, x_t = t
+        h, y = _ssm_step(A, h, dt_t, B_t, C_t, x_t)
+        return h, y
+
+    h0 = jnp.zeros((B, din, N), jnp.float32)
+    chunk = ctx.ssm_scan_chunk if ctx is not None else 128
+    h_final, ys = remat_chunked_scan(step, h0, xs, chunk)
+    y = ys.transpose(1, 0, 2)                      # (B,S,din)
+    y = y + p["d_skip"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+    out = shard_act(out, ("batch", "seq", "embed"), ctx)
+    if return_final:
+        # decode conv window needs the last cw-1 *pre-conv* inputs
+        tail = x_in[:, -(cw - 1):, :] if S >= cw - 1 else jnp.pad(
+            x_in, ((0, 0), (cw - 1 - S, 0), (0, 0)))
+        return out, {"conv": tail, "h": h_final}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    din, N, _, cw = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cw - 1, din), dtype),
+        "h": jnp.zeros((batch, din, N), jnp.float32),
+    }
+
+
+def apply_mamba_decode(p, x, cache, cfg: ModelConfig,
+                       ctx: Optional[ParallelCtx]):
+    """x (B,1,D); cache {'conv': (B,cw-1,din), 'h': (B,din,N)}."""
+    B = x.shape[0]
+    din, N, dtr, cw = _dims(cfg)
+    x_in = x[:, 0] @ p["in_proj_x"]                # (B,din)
+    z = x[:, 0] @ p["in_proj_z"]
+    window = jnp.concatenate([cache["conv"], x_in[:, None, :]], axis=1)
+    xc = jnp.einsum("bwd,dw->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    dt_r, Bc, Cc = xc @ p["xp_dt"], xc @ p["xp_b"], xc @ p["xp_c"]
+    dt = jax.nn.softplus(
+        (dt_r @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    h, y = _ssm_step(A, cache["h"], dt, Bc.astype(jnp.float32),
+                     Cc.astype(jnp.float32), xc.astype(jnp.float32))
+    y = y + p["d_skip"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = (y @ p["out_proj"])[:, None, :]
+    new_cache = {"conv": window[:, 1:, :], "h": h}
+    return out, new_cache

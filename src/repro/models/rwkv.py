@@ -1,0 +1,204 @@
+"""RWKV6 (Finch) block: attention-free time-mix with data-dependent decay
+(arXiv:2404.05892), plus the RWKV channel-mix FFN.
+
+Time-mix recurrence per head h with state S (hd x hd):
+    w_t = exp(-exp(w_base + tanh(x~ @ A) @ B))        (data-dependent decay)
+    y_t = r_t · S_{t-1} + (r_t · (u ⊙ k_t)) v_t       (with bonus u)
+    S_t = diag(w_t) S_{t-1} + k_t^T ⊗ v_t
+Run as a chunked-remat scan; decode carries (S, shift states).
+
+Sharding: heads over 'model' (all D->D projections are head-parallel).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.scan_utils import remat_chunked_scan
+from repro.runtime.sharding import ParallelCtx, shard_act
+
+_LORA = 64
+
+
+def _heads(cfg: ModelConfig):
+    hd = cfg.rwkv_head_dim
+    assert cfg.d_model % hd == 0
+    return cfg.d_model // hd, hd
+
+
+def init_rwkv(rng, cfg: ModelConfig):
+    D = cfg.d_model
+    H, hd = _heads(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 8)
+    p = {
+        "w_r": dense_init(ks[0], (D, D), dt),
+        "w_k": dense_init(ks[1], (D, D), dt),
+        "w_v": dense_init(ks[2], (D, D), dt),
+        "w_g": dense_init(ks[3], (D, D), dt),
+        "w_o": dense_init(ks[4], (D, D), dt),
+        "lora_a": dense_init(ks[5], (D, _LORA), dt),
+        "lora_b": dense_init(ks[6], (_LORA, D), dt),
+        "w_base": jnp.full((D,), -1.0, jnp.float32),
+        "u": 0.5 * jnp.ones((H, hd), jnp.float32),
+        "ln_x_scale": jnp.ones((D,), jnp.float32),
+    }
+    for name in ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w"):
+        p[name] = 0.5 * jnp.ones((D,), dt)
+    return p
+
+
+def _token_shift(x, prev=None):
+    """x (B,S,D) -> previous-token tensor; prev (B,D) seeds position 0."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1)
+
+
+def _mix(x, xx, mu):
+    return x + (xx - x) * mu
+
+
+def _tm_projections(p, x, xx, cfg: ModelConfig):
+    """Returns r,k,v,g (B,S,D) and decay w (B,S,D) in f32-for-w."""
+    r = _mix(x, xx, p["mu_r"]) @ p["w_r"]
+    k = _mix(x, xx, p["mu_k"]) @ p["w_k"]
+    v = _mix(x, xx, p["mu_v"]) @ p["w_v"]
+    g = jax.nn.silu(_mix(x, xx, p["mu_g"]) @ p["w_g"])
+    lo = jnp.tanh(_mix(x, xx, p["mu_w"]) @ p["lora_a"]) @ p["lora_b"]
+    w = jnp.exp(-jnp.exp(p["w_base"] + lo.astype(jnp.float32)))
+    return r, k, v, g, w
+
+
+def _wkv_step(state, r_t, k_t, v_t, w_t, u):
+    """state (B,H,hd,hd); r/k/v/w (B,H,hd); u (H,hd) -> (state', y (B,H,hd))."""
+    a = k_t[..., :, None] * v_t[..., None, :]            # outer (B,H,hd,hd)
+    y = jnp.einsum("bhi,bhij->bhj", r_t, state)
+    y = y + jnp.einsum("bhi,bhi->bh", r_t, u * k_t)[..., None] * v_t
+    state = w_t[..., :, None] * state + a
+    return state, y
+
+
+def _group_norm(y, scale, H, hd, eps=1e-5):
+    """Per-head layer norm over hd (rwkv ln_x)."""
+    shape = y.shape
+    yf = y.reshape(shape[:-1] + (H, hd)).astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yf = (yf - mu) * lax.rsqrt(var + eps)
+    return (yf.reshape(shape) * scale).astype(y.dtype)
+
+
+def apply_rwkv_train(p, x, cfg: ModelConfig, ctx: Optional[ParallelCtx],
+                     return_final: bool = False):
+    B, S, D = x.shape
+    H, hd = _heads(cfg)
+    xx = _token_shift(x)
+    r, k, v, g, w = _tm_projections(p, x, xx, cfg)
+
+    def hsplit(t):
+        t = shard_act(t, ("batch", "seq", "mlp"), ctx)   # D over 'model'
+        return t.reshape(B, S, H, hd).astype(jnp.float32).transpose(1, 0, 2, 3)
+
+    xs = (hsplit(r), hsplit(k), hsplit(v), w.reshape(B, S, H, hd).transpose(1, 0, 2, 3))
+    u = p["u"]
+
+    def step(state, t):
+        r_t, k_t, v_t, w_t = t
+        return _wkv_step(state, r_t, k_t, v_t, w_t, u)
+
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    chunk = ctx.ssm_scan_chunk if ctx is not None else 128
+    s_final, ys = remat_chunked_scan(step, s0, xs, chunk)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, D)        # (B,S,D)
+    y = _group_norm(y, p["ln_x_scale"], H, hd).astype(x.dtype)
+    y = y * g
+    out = y @ p["w_o"]
+    out = shard_act(out, ("batch", "seq", "embed"), ctx)
+    if return_final:
+        return out, {"state": s_final}
+    return out
+
+
+# --- channel mix (the RWKV FFN) --------------------------------------------
+
+def init_rwkv_cm(rng, cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 3)
+    return {
+        "cm_mu_k": 0.5 * jnp.ones((D,), dt),
+        "cm_mu_r": 0.5 * jnp.ones((D,), dt),
+        "mlp": {
+            "w1": dense_init(ks[0], (D, F), dt),
+            "w2": dense_init(ks[1], (F, D), dt),
+            "w3": dense_init(ks[2], (D, D), dt),   # receptance gate
+        },
+    }
+
+
+def apply_rwkv_cm(p, x, cfg: ModelConfig, ctx, prev=None):
+    xx = _token_shift(x, prev) if x.ndim == 3 else prev
+    xk = _mix(x, xx, p["cm_mu_k"])
+    xr = _mix(x, xx, p["cm_mu_r"])
+    h = jnp.square(jax.nn.relu(xk @ p["mlp"]["w1"]))
+    h = shard_act(h, ("batch", "seq", "mlp"), ctx) if h.ndim == 3 else h
+    y = h @ p["mlp"]["w2"]
+    gate = jax.nn.sigmoid(xr @ p["mlp"]["w3"])
+    out = gate * y
+    if out.ndim == 3:
+        out = shard_act(out, ("batch", "seq", "embed"), ctx)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype):
+    H, hd = _heads(cfg)
+    D = cfg.d_model
+    return {
+        "state": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "tm_shift": jnp.zeros((batch, D), dtype),
+        "cm_shift": jnp.zeros((batch, D), dtype),
+    }
+
+
+def apply_rwkv_decode(p, cm_p, x_raw, cache, cfg: ModelConfig, ctx,
+                      norm1_fn, norm2_fn):
+    """Full rwkv block decode (time-mix + channel-mix share the cache).
+
+    x_raw (B,1,D) is the *raw* block input; norms are applied here so the
+    residual structure exactly matches the train path:
+        x += tm(norm1(x));  x += cm(norm2(x))
+    tm_shift / cm_shift cache the *normed* previous-token activations,
+    matching the token_shift of the train path.
+    Returns (out (B,1,D), new_cache).
+    """
+    B, _, D = x_raw.shape
+    H, hd = _heads(cfg)
+    x1 = x_raw[:, 0]
+    h = norm1_fn(x_raw)[:, 0]                         # normed time-mix input
+    xx = cache["tm_shift"]
+    r, k, v, g, w = _tm_projections(p, h[:, None], xx[:, None], cfg)
+
+    def hs(t):
+        return t.reshape(B, H, hd).astype(jnp.float32)
+
+    state, y = _wkv_step(cache["state"], hs(r[:, 0]), hs(k[:, 0]),
+                         hs(v[:, 0]), w[:, 0].reshape(B, H, hd), p["u"])
+    y = _group_norm(y.reshape(B, D), p["ln_x_scale"], H, hd).astype(x_raw.dtype)
+    tm_out = (y * g[:, 0]) @ p["w_o"]
+
+    x2 = x1 + tm_out                                  # residual after time-mix
+    h2 = norm2_fn(x2[:, None])[:, 0]
+    cm_out = apply_rwkv_cm(cm_p, h2, cfg, ctx, prev=cache["cm_shift"])
+    out = x2 + cm_out
+    new_cache = {"state": state, "tm_shift": h, "cm_shift": h2}
+    return out[:, None], new_cache

@@ -1,0 +1,40 @@
+"""Scan helpers: chunked-remat scan for recurrent (SSM / RWKV) layers.
+
+A plain ``lax.scan`` over S steps stores the carry at every step for the
+backward pass — O(S * carry_bytes), which is catastrophic for Mamba/RWKV
+states (e.g. (B, 8192, 16) * 4096 steps).  We scan over chunks of
+``chunk`` steps with ``jax.checkpoint`` on the chunk body: the backward
+pass stores carries only at chunk boundaries and recomputes inside.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def remat_chunked_scan(step_fn, carry, xs, chunk: int):
+    """Like ``lax.scan(step_fn, carry, xs)`` with chunk-boundary remat.
+
+    step_fn: (carry, x_t) -> (carry, y_t).  xs leaves have leading dim S
+    (divisible by ``chunk`` — callers pad or choose a divisor).
+    """
+    S = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if S % chunk != 0 or S == chunk:
+        # fall back to plain scan for tiny / indivisible sequences
+        return lax.scan(step_fn, carry, xs)
+    n_chunks = S // chunk
+
+    xs_c = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_chunks, chunk) + a.shape[1:]), xs)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_body(c, x_chunk):
+        return lax.scan(step_fn, c, x_chunk)
+
+    carry, ys_c = lax.scan(chunk_body, carry, xs_c)
+    ys = jax.tree_util.tree_map(
+        lambda a: a.reshape((S,) + a.shape[2:]), ys_c)
+    return carry, ys

@@ -1,0 +1,351 @@
+"""Generic decoder LM assembling all 10 assigned architectures.
+
+A model is ``prefix_dense_layers`` unrolled blocks followed by a
+``lax.scan`` over ``num_periods`` repetitions of the config's block
+*period* (length 1 for homogeneous archs, 8 for Jamba).  Scanning the
+periods keeps the HLO size O(period) instead of O(layers) — essential for
+compiling the 61-layer / 62-layer cells on the 512-device dry-run mesh.
+
+Three modes share the block definitions:
+  train   : full-sequence forward (chunked-flash attention, SSM scans)
+  prefill : forward that also emits the decode cache
+  decode  : single-token step against the cache (``serve_step``)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import BlockSpec, ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models import rwkv as R
+from repro.runtime.sharding import ParallelCtx, shard_act
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_block(rng, cfg: ModelConfig, spec: BlockSpec):
+    ks = jax.random.split(rng, 4)
+    p: Dict[str, Any] = {"norm1": L.init_norm(cfg)}
+    if spec.mixer == "attn":
+        p["attn"] = L.init_attn(ks[0], cfg)
+    elif spec.mixer == "mamba":
+        p["mamba"] = M.init_mamba(ks[0], cfg)
+    elif spec.mixer == "rwkv":
+        p["rwkv"] = R.init_rwkv(ks[0], cfg)
+    else:
+        raise ValueError(spec.mixer)
+    p["norm2"] = L.init_norm(cfg)
+    if spec.mixer == "rwkv":
+        p["cm"] = R.init_rwkv_cm(ks[1], cfg)
+    elif spec.ffn == "moe":
+        p["moe"] = MOE.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg, d_ff=cfg.dense_d_ff)
+    return p
+
+
+def init_params(rng, cfg: ModelConfig):
+    ks = jax.random.split(rng, 5)
+    dt = jnp.dtype(cfg.dtype)
+    params: Dict[str, Any] = {
+        "embed": {"table": L.dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dt)},
+        "final_norm": L.init_norm(cfg),
+    }
+    if cfg.prefix_dense_layers:
+        pks = jax.random.split(ks[1], cfg.prefix_dense_layers)
+        params["prefix"] = [
+            init_block(pks[i], cfg, BlockSpec("attn", "dense"))
+            for i in range(cfg.prefix_dense_layers)]
+    period_keys = jax.random.split(ks[2], len(cfg.period))
+    periods = {}
+    for j, spec in enumerate(cfg.period):
+        stack_keys = jax.random.split(period_keys[j], cfg.num_periods)
+        periods[f"b{j}"] = jax.vmap(
+            lambda k, s=spec: init_block(k, cfg, s))(stack_keys)
+    params["periods"] = periods
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": L.dense_init(ks[3], (cfg.d_model, cfg.vocab_size), dt)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block application (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_block(p, x, spec: BlockSpec, cfg: ModelConfig,
+                 ctx: Optional[ParallelCtx], positions, mode: str):
+    """Returns (x, (lb_loss, z_loss), cache_entry_or_None)."""
+    zero = jnp.zeros((), jnp.float32)
+    aux = (zero, zero)
+    cache_entry = None
+
+    if spec.mixer == "rwkv":
+        h = L.apply_norm(p["norm1"], x, cfg)
+        if mode == "prefill":
+            tm, tm_cache = R.apply_rwkv_train(p["rwkv"], h, cfg, ctx,
+                                              return_final=True)
+        else:
+            tm = R.apply_rwkv_train(p["rwkv"], h, cfg, ctx)
+        x = x + tm
+        h2 = L.apply_norm(p["norm2"], x, cfg)
+        x = x + R.apply_rwkv_cm(p["cm"], h2, cfg, ctx)
+        if mode == "prefill":
+            cache_entry = dict(tm_cache, tm_shift=h[:, -1], cm_shift=h2[:, -1])
+        return x, aux, cache_entry
+
+    h = L.apply_norm(p["norm1"], x, cfg)
+    if spec.mixer == "attn":
+        q, k, v = L._qkv(p["attn"], h, positions, cfg, ctx)
+        qc = ctx.attn_q_chunk if ctx else 512
+        kc = ctx.attn_kv_chunk if ctx else 1024
+        skip = ctx.attn_causal_skip if ctx else False
+        o = L.flash_attention(q, k, v, causal=True, q_chunk=qc, kv_chunk=kc,
+                              causal_skip=skip)
+        x = x + L.attn_out(p["attn"], o, cfg, ctx)
+        if mode == "prefill":
+            cache_entry = {"k": k, "v": v}
+    else:  # mamba
+        if mode == "prefill":
+            mo, cache_entry = M.apply_mamba_train(p["mamba"], h, cfg, ctx,
+                                                  return_final=True)
+        else:
+            mo = M.apply_mamba_train(p["mamba"], h, cfg, ctx)
+        x = x + mo
+
+    h2 = L.apply_norm(p["norm2"], x, cfg)
+    if spec.ffn == "moe":
+        y, moe_aux = MOE.apply_moe(p["moe"], h2, cfg, ctx)
+        aux = (moe_aux["moe_load_balance"], moe_aux["moe_z_loss"])
+    else:
+        y = L.apply_mlp(p["mlp"], h2, cfg, ctx)
+    x = x + y
+    return x, aux, cache_entry
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def embed_input(params, batch, cfg: ModelConfig, ctx):
+    if cfg.input_mode == "embeddings":
+        x = batch["embeddings"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = jnp.take(params["embed"]["table"], batch["tokens"], axis=0)
+    return shard_act(x, ("batch", "seq", "embed"), ctx)
+
+
+def _positions_for(batch, cfg: ModelConfig):
+    if cfg.needs_mrope_positions:
+        return batch["positions"]
+    ref = batch["embeddings"] if cfg.input_mode == "embeddings" else batch["tokens"]
+    B, S = ref.shape[0], ref.shape[1]
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+
+
+def lm_logits(params, x, cfg: ModelConfig, ctx):
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"]                    # (V, D)
+        if ctx is not None:
+            w = jax.lax.with_sharding_constraint(
+                w, jax.sharding.NamedSharding(
+                    ctx.mesh, jax.sharding.PartitionSpec("model", None)))
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        logits = x @ params["lm_head"]["w"]
+    logits = shard_act(logits, ("batch", "seq", "vocab"), ctx)
+    return logits.astype(jnp.float32)
+
+
+def forward(params, batch, cfg: ModelConfig, ctx: Optional[ParallelCtx],
+            mode: str = "train"):
+    """Returns (logits, aux_dict, cache_or_None)."""
+    assert mode in ("train", "prefill")
+    x = embed_input(params, batch, cfg, ctx)
+    positions = _positions_for(batch, cfg)
+
+    prefix_cache = []
+    for p in params.get("prefix", []):
+        x, _, ce = _apply_block(p, x, BlockSpec("attn", "dense"), cfg, ctx,
+                                positions, mode)
+        prefix_cache.append(ce)
+
+    period = cfg.period
+
+    def period_body(carry, period_params):
+        x, lb, zl = carry
+        entries = {}
+        for j, spec in enumerate(period):
+            x, (a_lb, a_zl), ce = _apply_block(
+                period_params[f"b{j}"], x, spec, cfg, ctx, positions, mode)
+            lb, zl = lb + a_lb, zl + a_zl
+            if ce is not None:
+                entries[f"b{j}"] = ce
+        return (x, lb, zl), entries
+
+    body = period_body
+    if ctx is None or ctx.scan_remat:
+        body = jax.checkpoint(period_body, prevent_cse=False)
+
+    zero = jnp.zeros((), jnp.float32)
+    (x, lb, zl), period_cache = lax.scan(
+        body, (x, zero, zero), params["periods"])
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = lm_logits(params, x, cfg, ctx)
+    n_moe = max(1, sum(1 for _ in range(cfg.num_periods) for s in period
+                       if s.ffn == "moe"))
+    aux = {"moe_load_balance": lb / n_moe, "moe_z_loss": zl / n_moe}
+    if mode == "prefill":
+        cache = {"periods": period_cache}
+        if prefix_cache:
+            cache["prefix"] = prefix_cache
+        return logits, aux, cache
+    return logits, aux, None
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def _block_cache_shape(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                       max_seq: int, dtype, kv_quant: bool = False):
+    if spec.mixer == "attn":
+        kv = cfg.padded_kv_heads
+        if kv_quant:
+            return {
+                "k": jnp.zeros((batch, max_seq, kv, cfg.head_dim), jnp.int8),
+                "v": jnp.zeros((batch, max_seq, kv, cfg.head_dim), jnp.int8),
+                "k_scale": jnp.zeros((batch, max_seq, kv), jnp.float32),
+                "v_scale": jnp.zeros((batch, max_seq, kv), jnp.float32),
+            }
+        return {
+            "k": jnp.zeros((batch, max_seq, kv, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, max_seq, kv, cfg.head_dim), dtype),
+        }
+    if spec.mixer == "mamba":
+        return M.init_mamba_cache(cfg, batch, dtype)
+    if spec.mixer == "rwkv":
+        return R.init_rwkv_cache(cfg, batch, dtype)
+    raise ValueError(spec.mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               kv_quant: bool = False):
+    dt = jnp.dtype(cfg.dtype)
+    cache: Dict[str, Any] = {}
+    if cfg.prefix_dense_layers:
+        cache["prefix"] = [
+            _block_cache_shape(cfg, BlockSpec("attn", "dense"), batch,
+                               max_seq, dt, kv_quant)
+            for _ in range(cfg.prefix_dense_layers)]
+    periods = {}
+    for j, spec in enumerate(cfg.period):
+        one = _block_cache_shape(cfg, spec, batch, max_seq, dt, kv_quant)
+        periods[f"b{j}"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_periods,) + a.shape).copy(),
+            one)
+    cache["periods"] = periods
+    return cache
+
+
+def _apply_block_decode(p, x, cache, spec: BlockSpec, cfg: ModelConfig,
+                        ctx, pos, positions):
+    if spec.mixer == "rwkv":
+        norm1 = lambda t: L.apply_norm(p["norm1"], t, cfg)
+        norm2 = lambda t: L.apply_norm(p["norm2"], t, cfg)
+        return R.apply_rwkv_decode(
+            p["rwkv"], p["cm"], x, cache, cfg, ctx, norm1, norm2)
+
+    h = L.apply_norm(p["norm1"], x, cfg)
+    if spec.mixer == "attn":
+        q, k, v = L._qkv(p["attn"], h, positions, cfg, ctx)
+        if "k_scale" in cache:          # int8 KV cache (§Perf)
+            k8, ks = L.quantize_kv(k)
+            v8, vs = L.quantize_kv(v)
+            ck = L.update_kv_cache(cache["k"], k8, pos)
+            cv = L.update_kv_cache(cache["v"], v8, pos)
+            cks = lax.dynamic_update_slice_in_dim(cache["k_scale"], ks,
+                                                  pos, axis=1)
+            cvs = lax.dynamic_update_slice_in_dim(cache["v_scale"], vs,
+                                                  pos, axis=1)
+            ck = shard_act(ck, ("batch", "kv_seq", "kv_heads", None), ctx)
+            cv = shard_act(cv, ("batch", "kv_seq", "kv_heads", None), ctx)
+            o = L.decode_attention(q, ck, cv, pos, k_scale=cks, v_scale=cvs)
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+        else:
+            ck = L.update_kv_cache(cache["k"], k, pos)
+            cv = L.update_kv_cache(cache["v"], v, pos)
+            ck = shard_act(ck, ("batch", "kv_seq", "kv_heads", None), ctx)
+            cv = shard_act(cv, ("batch", "kv_seq", "kv_heads", None), ctx)
+            o = L.decode_attention(q, ck, cv, pos)
+            new_cache = {"k": ck, "v": cv}
+        x = x + L.attn_out(p["attn"], o, cfg, ctx)
+    else:  # mamba
+        mo, new_cache = M.apply_mamba_decode(p["mamba"], h, cache, cfg, ctx)
+        x = x + mo
+
+    h2 = L.apply_norm(p["norm2"], x, cfg)
+    if spec.ffn == "moe":
+        y, _ = MOE.apply_moe(p["moe"], h2, cfg, ctx)
+    else:
+        y = L.apply_mlp(p["mlp"], h2, cfg, ctx)
+    return x + y, new_cache
+
+
+def decode_step(params, cache, batch, cfg: ModelConfig,
+                ctx: Optional[ParallelCtx]):
+    """One-token step.  batch: {'token': (B,) | 'embeddings': (B,1,D),
+    'pos': scalar i32, ['positions': (3,B,1) for mrope]}.
+
+    Returns (logits (B, V), new_cache).
+    """
+    pos = batch["pos"]
+    if cfg.input_mode == "embeddings":
+        x = batch["embeddings"].astype(jnp.dtype(cfg.dtype))
+        B = x.shape[0]
+    else:
+        x = jnp.take(params["embed"]["table"], batch["token"][:, None], axis=0)
+        B = batch["token"].shape[0]
+    x = shard_act(x, ("batch", None, "embed"), ctx)
+    if cfg.needs_mrope_positions:
+        positions = batch["positions"]
+    else:
+        positions = jnp.broadcast_to(pos.astype(jnp.int32), (B, 1))
+
+    new_prefix = []
+    for i, p in enumerate(params.get("prefix", [])):
+        x, nc = _apply_block_decode(p, x, cache["prefix"][i],
+                                    BlockSpec("attn", "dense"), cfg, ctx,
+                                    pos, positions)
+        new_prefix.append(nc)
+
+    period = cfg.period
+
+    def body(x, xs):
+        period_params, period_cache = xs
+        new_entries = {}
+        for j, spec in enumerate(period):
+            x, nc = _apply_block_decode(
+                period_params[f"b{j}"], x, period_cache[f"b{j}"], spec,
+                cfg, ctx, pos, positions)
+            new_entries[f"b{j}"] = nc
+        return x, new_entries
+
+    x, new_periods = lax.scan(body, x, (params["periods"], cache["periods"]))
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = lm_logits(params, x, cfg, ctx)[:, 0]
+    new_cache = {"periods": new_periods}
+    if new_prefix:
+        new_cache["prefix"] = new_prefix
+    return logits, new_cache

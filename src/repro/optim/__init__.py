@@ -1,0 +1,7 @@
+"""Optimizers.  FedAvg's ClientUpdate is plain SGD (Algorithm 1 line 13);
+SGD is therefore the default trainer optimizer — which also keeps the
+≥480B cells inside 16 GB/chip (no moment buffers; DESIGN.md §6).
+"""
+from repro.optim.optimizers import Optimizer, adamw, sgd
+
+__all__ = ["Optimizer", "sgd", "adamw"]

@@ -1,0 +1,42 @@
+"""Elastic scaling: resume training under a different pod count.
+
+Because FL state is a *replicated* global parameter set at every round
+boundary (post-aggregation cut), elasticity is resharding, not resharming:
+restore the latest checkpoint with the new mesh's shardings and rebuild
+the pod-stacked view for the new n_pods.  Works for both growth (new pods
+join with the global params) and shrinkage (alive mask handles departure
+mid-round; the next cut simply has fewer rows).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.runtime.sharding import ParallelCtx, param_shardings
+
+
+def restack_for_pods(global_params: Any, n_pods: int) -> Any:
+    """Broadcast a global param pytree to the (n_pods, ...) stacked view."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p[None], (n_pods,) + p.shape), global_params)
+
+
+def unstack_global(stacked_params: Any) -> Any:
+    """Post-aggregation rows are identical; row 0 is the global model."""
+    return jax.tree_util.tree_map(lambda p: p[0], stacked_params)
+
+
+def elastic_restore(ckpt: Checkpointer, like_params: Any,
+                    new_ctx: Optional[ParallelCtx],
+                    step: Optional[int] = None):
+    """Restore the latest cut and re-shard it onto a (possibly different)
+    mesh.  ``like_params`` is the *global* (unstacked) abstract pytree for
+    the model; returns (params_on_new_mesh, extra)."""
+    shardings = None
+    if new_ctx is not None:
+        shardings = param_shardings(
+            jax.eval_shape(lambda p: p, like_params), new_ctx)
+    return ckpt.restore(like_params, step=step, shardings=shardings)

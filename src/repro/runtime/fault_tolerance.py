@@ -1,0 +1,106 @@
+"""Fault tolerance at 1000-node scale.
+
+The paper's count-normalized aggregation is itself the failure-tolerance
+mechanism: a client (pod) that misses the round deadline simply has
+mask 0 and the divisor adjusts — no retransmission, no blocking.  This
+module provides the host-side machinery around it:
+
+- ``DeadlineMonitor``: straggler mitigation — the round closes when m of
+  K uploads arrived or the deadline expires; late pods are masked out
+  (the paper's "clients not selected keep their local parameters").
+- ``HeartbeatTracker``: failure detection feeding the alive mask.
+- ``RoundRobustState``: checkpoint/restart bookkeeping — every round
+  boundary is a consistent cut (parameters are replicated post-
+  aggregation), so restart = restore latest round checkpoint; pods that
+  died mid-round rejoin from the same cut.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DeadlineMonitor:
+    """Close the round at quorum or deadline, whichever first."""
+    n_pods: int
+    quorum_fraction: float = 0.8
+    deadline_s: float = 600.0
+
+    def __post_init__(self):
+        self._arrived: Dict[int, float] = {}
+        self._t0 = time.monotonic()
+
+    def reset(self):
+        self._arrived.clear()
+        self._t0 = time.monotonic()
+
+    def mark_arrived(self, pod: int):
+        self._arrived.setdefault(pod, time.monotonic() - self._t0)
+
+    @property
+    def quorum(self) -> int:
+        return max(1, int(self.quorum_fraction * self.n_pods))
+
+    def should_close(self) -> bool:
+        if len(self._arrived) >= self.n_pods:
+            return True
+        if len(self._arrived) >= self.quorum:
+            return True
+        return (time.monotonic() - self._t0) >= self.deadline_s
+
+    def alive_mask(self) -> np.ndarray:
+        mask = np.zeros((self.n_pods,), np.float32)
+        for pod in self._arrived:
+            mask[pod] = 1.0
+        return mask
+
+
+@dataclasses.dataclass
+class HeartbeatTracker:
+    n_pods: int
+    timeout_s: float = 60.0
+
+    def __post_init__(self):
+        now = time.monotonic()
+        self._last: List[float] = [now] * self.n_pods
+
+    def beat(self, pod: int):
+        self._last[pod] = time.monotonic()
+
+    def dead_pods(self) -> List[int]:
+        now = time.monotonic()
+        return [i for i, t in enumerate(self._last)
+                if now - t > self.timeout_s]
+
+    def alive_mask(self) -> np.ndarray:
+        dead = set(self.dead_pods())
+        return np.array([0.0 if i in dead else 1.0
+                         for i in range(self.n_pods)], np.float32)
+
+
+@dataclasses.dataclass
+class RoundRobustState:
+    """Round bookkeeping for checkpoint/restart."""
+    round_idx: int = 0
+    failed_rounds: int = 0
+    max_round_retries: int = 3
+
+    def on_round_complete(self):
+        self.round_idx += 1
+        self.failed_rounds = 0
+
+    def on_round_failure(self) -> bool:
+        """Returns True if the round should be retried from the last cut."""
+        self.failed_rounds += 1
+        return self.failed_rounds <= self.max_round_retries
+
+    def to_extra(self) -> dict:
+        return {"round_idx": self.round_idx}
+
+    @classmethod
+    def from_extra(cls, extra: dict) -> "RoundRobustState":
+        return cls(round_idx=int(extra.get("round_idx", 0)))

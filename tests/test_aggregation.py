@@ -1,0 +1,108 @@
+"""System invariants of the count-normalized aggregation (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as agg
+
+
+def _data(seed, k=6, n=5, w=16):
+    rng = np.random.default_rng(seed)
+    pk = jnp.asarray(rng.normal(size=(k, n, w)).astype(np.float32))
+    m = jnp.asarray((rng.random((k, n)) > 0.3).astype(np.float32))
+    return pk, m
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_full_mask_is_weighted_mean(seed):
+    pk, _ = _data(seed)
+    k = pk.shape[0]
+    rng = np.random.default_rng(seed + 1)
+    wts = jnp.asarray(rng.random(k).astype(np.float32) + 0.1)
+    m = jnp.ones(pk.shape[:2], jnp.float32)
+    avg, counts = agg.masked_aggregate(pk, m, wts)
+    expect = jnp.einsum("knw,k->nw", pk, wts) / jnp.sum(wts)
+    np.testing.assert_allclose(avg, expect, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(counts, float(jnp.sum(wts)), rtol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_permutation_invariance(seed):
+    pk, m = _data(seed)
+    perm = np.random.default_rng(seed).permutation(pk.shape[0])
+    a1, c1 = agg.masked_aggregate(pk, m)
+    a2, c2 = agg.masked_aggregate(pk[perm], m[perm])
+    np.testing.assert_allclose(a1, a2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c1, c2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_zero_count_packets_are_zero_and_flagged(seed):
+    pk, m = _data(seed)
+    m = m.at[:, 0].set(0.0)                      # nobody delivered packet 0
+    avg, counts = agg.masked_aggregate(pk, m)
+    assert float(counts[0]) == 0.0
+    np.testing.assert_array_equal(np.asarray(avg)[0], 0.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_approx_zero_conflict_equals_exact(seed):
+    pk, m = _data(seed)
+    a1, c1 = agg.masked_aggregate(pk, m)
+    a2, c2 = agg.approx_aggregate(pk, m, None, 0.0)
+    np.testing.assert_allclose(a1, a2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c1, c2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), rate=st.floats(0.05, 0.5))
+def test_approx_conflicts_bias_toward_zero_magnitude(seed, rate):
+    """Lost updates shrink |sum| while the divisor stays -> E|approx| <= |exact|."""
+    pk, m = _data(seed, k=8, n=20, w=32)
+    a_exact, _ = agg.masked_aggregate(pk, m)
+    rngk = jax.random.PRNGKey(seed)
+    a_approx, _ = agg.approx_aggregate(pk, m, rngk, rate)
+    # statistical check on means of magnitudes
+    assert float(jnp.mean(jnp.abs(a_approx))) <= \
+        float(jnp.mean(jnp.abs(a_exact))) + 1e-3
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_int8_close_to_exact(seed):
+    pk, m = _data(seed)
+    a1, _ = agg.masked_aggregate(pk, m)
+    q, s = agg.quantize_packets(pk)
+    a2, _ = agg.dequantize_aggregate(q, s, m)
+    err = np.abs(np.asarray(a1) - np.asarray(a2))
+    scale_bound = np.asarray(s).max() * 0.5 + 1e-6
+    assert err.max() <= scale_bound
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_client_fallback(seed):
+    rng = np.random.default_rng(seed)
+    local = jnp.asarray(rng.normal(size=(5, 8)).astype(np.float32))
+    glob = jnp.asarray(rng.normal(size=(5, 8)).astype(np.float32))
+    mask = jnp.asarray((rng.random(5) > 0.5).astype(np.float32))
+    out = agg.client_update_with_fallback(local, glob, mask)
+    for i in range(5):
+        expect = glob[i] if float(mask[i]) > 0 else local[i]
+        np.testing.assert_array_equal(np.asarray(out)[i], np.asarray(expect))
+
+
+def test_aggregate_flat_modes_agree_without_noise():
+    rng = np.random.default_rng(0)
+    flats = jnp.asarray(rng.normal(size=(4, 1000)).astype(np.float32))
+    mask = jnp.ones((4, -(-1000 // 367)), jnp.float32)
+    a1, _ = agg.aggregate_flat(flats, mask, 367, mode="exact")
+    a2, _ = agg.aggregate_flat(flats, mask, 367, mode="approx")
+    a3, _ = agg.aggregate_flat(flats, mask, 367, mode="int8")
+    np.testing.assert_allclose(a1, a2, rtol=1e-6)
+    assert np.abs(np.asarray(a1) - np.asarray(a3)).max() < 0.02

@@ -1,0 +1,72 @@
+"""Unit tests for the dry-run HLO collective parser (no jax device use)."""
+import textwrap
+
+from repro.launch.dryrun import (_line_collective, _shape_bytes,
+                                 parse_collectives)
+
+HLO = textwrap.dedent("""
+    HloModule jit_step
+
+    %scan_body.1 (p0: f32[4,8]) -> f32[4,8] {
+      %ar0 = bf16[16,128]{1,0} all-reduce(%x), replica_groups={}
+      %inner = f32[1] while(%t), condition=%c2, body=%inner_body.2
+      ROOT %r = f32[4,8] add(%p0, %p0)
+    }
+
+    %inner_body.2 (q0: f32[2,2]) -> f32[2,2] {
+      %ag0 = f32[1048576]{0} all-gather(%y), dimensions={0}
+      ROOT %rr = f32[2,2] add(%q0, %q0)
+    }
+
+    ENTRY %main.3 (a: f32[8]) -> f32[8] {
+      %big = f32[2097152]{0} all-reduce(%z), replica_groups={}
+      %small = f32[16]{0} all-reduce(%w), replica_groups={}
+      %loop = f32[4,8] while(%init), condition=%c1, body=%scan_body.1
+      ROOT %out = f32[8] add(%a, %a)
+    }
+""")
+
+
+def test_line_collective():
+    kind, nbytes, is_f32 = _line_collective(
+        "  %ar = f32[16,128]{1,0} all-reduce(%x), replica_groups={}")
+    assert kind == "all-reduce" and nbytes == 16 * 128 * 4 and is_f32
+    kind, nbytes, is_f32 = _line_collective(
+        "  %ag = bf16[64]{0} all-gather(%x), dimensions={0}")
+    assert kind == "all-gather" and nbytes == 128 and not is_f32
+    assert _line_collective("  %d = f32[8] all-reduce-done(%s)") is None
+    assert _line_collective("  %a = f32[8] add(%x, %y)") is None
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32", "16,128") == 8192
+    assert _shape_bytes("bf16", "4") == 8
+    assert _shape_bytes("s8", "100") == 100
+    assert _shape_bytes("f32", "") == 4          # scalar
+
+
+def test_nested_loop_multipliers():
+    out = parse_collectives(HLO, depth_trips=[4, 8])
+    # entry: big f32 2MiB-elem AR (x2 wire) + small AR, multiplier 1
+    # depth1 (scan_body): bf16 AR x4
+    # depth2 (inner_body): f32 1M-elem AG x32
+    big = 2097152 * 4 * 2
+    small = 16 * 4 * 2
+    d1 = 16 * 128 * 2 * 2 * 4            # bf16 bytes x ARx2 x trips4
+    d2 = 1048576 * 4 * 32
+    assert out["all-reduce"]["bytes"] == big + small + d1
+    assert out["all-gather"]["bytes"] == d2
+    assert out["total_bytes"] == big + small + d1 + d2
+    # f32 >= 1MiB: the big entry AR and the deep AG halve in the corrected total
+    assert out["f32_large_bytes"] == big + d2
+    assert out["total_bytes_tpu"] == out["total_bytes"] - (big + d2) // 2
+    # counts respect multipliers
+    assert out["all-reduce"]["count"] == 2 + 4
+    assert out["all-gather"]["count"] == 32
+
+
+def test_single_depth_default():
+    out = parse_collectives(HLO, loop_trip_count=4)
+    # without depth_trips, multipliers stop at the known depth (deeper
+    # loops count once more — conservative, not multiplied again)
+    assert out["all-gather"]["count"] == 4

@@ -1,0 +1,103 @@
+"""End-to-end FedAvg (Algorithm 1) behaviour — the paper's system,
+scaled to CPU test budget (tiny CNN, few rounds)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import CNNConfig
+from repro.core.fedavg import FedAvgConfig, ModelFns, run_fedavg
+from repro.data.federated import partition_dirichlet, partition_iid
+from repro.data.synthetic import synthetic_image_classification
+from repro.models.cnn import cnn_accuracy, cnn_forward, cnn_loss, init_cnn
+
+CNN = CNNConfig(image_size=8, conv_channels=(8, 16, 16, 16), fc_hidden=32)
+
+
+def _model_fns():
+    return ModelFns(
+        init=lambda rng: init_cnn(rng, CNN),
+        loss=lambda p, b, rng: cnn_loss(p, b, CNN, dropout_rng=rng),
+        test_metrics=lambda p, d: {
+            "test_loss": cnn_loss(p, d, CNN, train=False),
+            "test_acc": cnn_accuracy(p, d, CNN),
+        },
+    )
+
+
+def _data(n_clients=4, n=256, seed=0):
+    rng = np.random.default_rng(seed)
+    train = synthetic_image_classification(rng, n, image_size=8)
+    test = synthetic_image_classification(rng, 128, image_size=8)
+    return partition_iid(train, n_clients, seed=seed), test
+
+
+@pytest.fixture(scope="module")
+def histories():
+    client_data, test = _data()
+    out = {}
+    for mode, extra in [
+        ("exact", {}),
+        ("approx", {"conflict_rate": 0.01}),
+        ("int8", {}),
+        ("loss", {"uplink_loss": 0.05, "downlink_loss": 0.05}),
+    ]:
+        cfg = FedAvgConfig(n_clients=4, rounds=6, local_epochs=1,
+                           batch_size=32, lr=0.05,
+                           agg_mode="approx" if mode == "approx" else (
+                               "int8" if mode == "int8" else "exact"),
+                           **extra)
+        out[mode] = run_fedavg(_model_fns(), client_data, test, cfg)
+    return out
+
+
+def test_exact_converges(histories):
+    h = histories["exact"]["test_loss"]
+    assert h[-1] < h[0], h
+    assert histories["exact"]["test_acc"][-1] > 0.5
+
+
+def test_approx_close_to_exact(histories):
+    """Paper Fig. 8: approximated server ~= exact convergence."""
+    exact = histories["exact"]["test_loss"][-1]
+    approx = histories["approx"]["test_loss"][-1]
+    assert approx < histories["approx"]["test_loss"][0]
+    assert abs(approx - exact) < 0.5 * max(exact, 0.1) + 0.25
+
+
+def test_int8_close_to_exact(histories):
+    exact = histories["exact"]["test_loss"][-1]
+    q = histories["int8"]["test_loss"][-1]
+    assert abs(q - exact) < 0.5 * max(exact, 0.1) + 0.25
+
+
+def test_packet_loss_tolerated(histories):
+    """Count-normalized aggregation + client fallback: 5% loss still learns."""
+    h = histories["loss"]["test_loss"]
+    assert h[-1] < h[0], h
+
+
+def test_client_fraction_and_weighting():
+    client_data, test = _data(n_clients=4, n=256, seed=1)
+    cfg = FedAvgConfig(n_clients=4, rounds=3, client_fraction=0.5,
+                       batch_size=32, lr=0.05, weighted=True)
+    h = run_fedavg(_model_fns(), client_data, test, cfg)
+    assert len(h["test_loss"]) == 3
+    assert np.isfinite(h["test_loss"]).all()
+
+
+def test_apfl_mixing_runs():
+    client_data, test = _data(n_clients=2, n=128, seed=2)
+    cfg = FedAvgConfig(n_clients=2, rounds=2, batch_size=32,
+                       mix_alpha=0.25)
+    h = run_fedavg(_model_fns(), client_data, test, cfg)
+    assert np.isfinite(h["test_loss"]).all()
+
+
+def test_dirichlet_partition_shapes():
+    rng = np.random.default_rng(0)
+    data = synthetic_image_classification(rng, 200, image_size=8)
+    parts = partition_dirichlet(data, 4, alpha=0.3)
+    assert parts["images"].shape[0] == 4
+    assert parts["images"].shape[1] == 50

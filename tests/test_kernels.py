@@ -1,0 +1,88 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis properties,
+all against the ref.py pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SHAPES = [(1, 8, 128), (4, 8, 128), (10, 24, 512), (32, 16, 256),
+          (3, 7, 128), (10, 1, 512)]          # incl. C not multiple of block
+
+
+@pytest.mark.parametrize("kcw", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_accum_matches_ref(kcw, dtype):
+    K, C, W = kcw
+    rng = np.random.default_rng(hash(kcw) % 2**31)
+    pk = jnp.asarray(rng.normal(size=(K, C, W)), dtype)
+    m = jnp.asarray((rng.random((K, C)) > 0.2).astype(np.float32))
+    a1, c1 = ops.fedavg_accum(pk, m)
+    a2, c2 = ref.fedavg_accum_ref(pk, m)
+    np.testing.assert_allclose(a1, a2, rtol=2e-2 if dtype == jnp.bfloat16
+                               else 1e-5, atol=1e-5)
+    np.testing.assert_allclose(c1, c2[:, 0])
+
+
+@pytest.mark.parametrize("kcw", SHAPES)
+def test_quantized_accum_matches_ref(kcw):
+    K, C, W = kcw
+    rng = np.random.default_rng(hash(kcw) % 2**31)
+    q = jnp.asarray(rng.integers(-127, 128, (K, C, W)).astype(np.int8))
+    s = jnp.asarray(rng.random((K, C)).astype(np.float32) * 0.02)
+    m = jnp.asarray((rng.random((K, C)) > 0.2).astype(np.float32))
+    a1, c1 = ops.quantized_accum(q, s, m)
+    a2, c2 = ref.quantized_accum_ref(q, s, m)
+    np.testing.assert_allclose(a1, a2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c1, c2[:, 0])
+
+
+@pytest.mark.parametrize("n,slots,w", [(8, 8, 128), (16, 24, 256),
+                                       (1, 4, 128), (32, 32, 512)])
+def test_packet_scatter_matches_ref(n, slots, w):
+    rng = np.random.default_rng(n * slots)
+    pkts = jnp.asarray(rng.normal(size=(n, w)).astype(np.float32))
+    idx = jnp.asarray(rng.permutation(slots)[:n].astype(np.int32))
+    out = ops.packet_scatter(pkts, idx, slots)
+    expect = ref.packet_scatter_ref(pkts, idx, slots)
+    np.testing.assert_array_equal(
+        np.asarray(out)[np.asarray(idx)], np.asarray(pkts))
+    np.testing.assert_array_equal(np.asarray(out)[np.asarray(idx)],
+                                  np.asarray(expect)[np.asarray(idx)])
+
+
+# --- hypothesis property sweeps ---------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(1, 12), c=st.integers(1, 12),
+       w=st.sampled_from([128, 256]), seed=st.integers(0, 2**16))
+def test_fedavg_accum_property(k, c, w, seed):
+    rng = np.random.default_rng(seed)
+    pk = jnp.asarray(rng.normal(size=(k, c, w)).astype(np.float32))
+    m = jnp.asarray((rng.random((k, c)) > 0.3).astype(np.float32))
+    a1, c1 = ops.fedavg_accum(pk, m)
+    a2, c2 = ref.fedavg_accum_ref(pk, m)
+    np.testing.assert_allclose(a1, a2, rtol=1e-4, atol=1e-5)
+    # counts bounded by K; averages bounded by contributing extremes
+    assert np.all(np.asarray(c1) <= k)
+    lo = np.where(np.asarray(m)[:, :, None] > 0, np.asarray(pk), np.inf).min(0)
+    hi = np.where(np.asarray(m)[:, :, None] > 0, np.asarray(pk), -np.inf).max(0)
+    got = np.asarray(a1)
+    contributing = np.asarray(c1) > 0
+    assert np.all(got[contributing] <= hi[contributing] + 1e-5)
+    assert np.all(got[contributing] >= lo[contributing] - 1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_quantized_error_bound(seed):
+    """int8 per-chunk absmax quantization: |deq - x| <= scale/2 per elem."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(4, 6, 128)).astype(np.float32)
+    from repro.core.aggregation import quantize_packets
+    q, s = quantize_packets(jnp.asarray(x))
+    deq = np.asarray(q, np.float32) * np.asarray(s)[..., None]
+    bound = np.asarray(s)[..., None] * 0.5 + 1e-7
+    assert np.all(np.abs(deq - x) <= bound)

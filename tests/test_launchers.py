@@ -1,0 +1,49 @@
+"""End-to-end launcher smoke tests (subprocess; reduced configs)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    # importing repro.launch.dryrun anywhere in the pytest process sets
+    # XLA_FLAGS=...device_count=512; launcher subprocesses must see 1 device
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, "-m"] + args, env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_train_launcher_plain_with_checkpoint(tmp_path):
+    r = _run(["repro.launch.train", "--arch", "qwen2-vl-2b", "--reduced",
+              "--steps", "4", "--batch", "4", "--seq", "16",
+              "--ckpt-dir", str(tmp_path), "--ckpt-every", "2"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "step 3" in r.stdout
+    # resume from the checkpoint
+    r2 = _run(["repro.launch.train", "--arch", "qwen2-vl-2b", "--reduced",
+               "--steps", "6", "--batch", "4", "--seq", "16",
+               "--ckpt-dir", str(tmp_path), "--resume"])
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "resumed from step 4" in r2.stdout
+
+
+def test_train_launcher_fl_round():
+    r = _run(["repro.launch.train", "--arch", "chatglm3-6b", "--reduced",
+              "--steps", "2", "--batch", "4", "--seq", "16",
+              "--mode", "fl", "--fl-local-steps", "2",
+              "--agg-mode", "approx", "--straggler-rate", "0.5"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "fl done" in r.stdout
+
+
+def test_serve_launcher_decode():
+    r = _run(["repro.launch.serve", "--arch", "rwkv6-7b", "--reduced",
+              "--batch", "2", "--prompt-len", "8", "--gen", "4"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "serve ok" in r.stdout

@@ -1,0 +1,130 @@
+"""Per-arch smoke: reduced same-family config, one forward + train grad +
+prefill/decode step on CPU, asserting shapes and finiteness (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.data.synthetic import lm_batch_for
+from repro.launch.steps import make_loss_fn, make_train_step
+from repro.models.transformer import decode_step, forward, init_cache, init_params
+from repro.optim import sgd
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    return lm_batch_for(cfg, B, S, seed=seed)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_and_finite(name):
+    cfg = reduced(ARCHS[name])
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    logits, aux, _ = jax.jit(
+        lambda p, b: forward(p, b, cfg, None))(params, batch)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux["moe_load_balance"]))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_train_step_reduces_loss(name):
+    cfg = reduced(ARCHS[name])
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    opt = sgd(0.1)
+    step = jax.jit(make_train_step(cfg, None, opt))
+    opt_state = opt.init(params)
+    batch = _batch(cfg, seed=3)
+    losses = []
+    for _ in range(4):
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+        assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0], losses   # same-batch loss must drop
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_prefill_then_decode_consistency(name):
+    """Greedy decode after prefill ~ matches teacher-forced forward logits."""
+    cfg = reduced(ARCHS[name])
+    B, S = 2, 12
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    batch = _batch(cfg, B=B, S=S, seed=5)
+    batch.pop("labels")
+    full_logits, _, _ = jax.jit(
+        lambda p, b: forward(p, b, cfg, None))(params, batch)
+
+    prefix = {k: (v[:, :S - 1] if k != "positions" else v[:, :, :S - 1])
+              for k, v in batch.items()}
+    _, _, cache = jax.jit(
+        lambda p, b: forward(p, b, cfg, None, mode="prefill"))(params, prefix)
+    # grow caches to S and graft
+    full_cache = init_cache(cfg, B, S)
+
+    def graft(fc, ce):
+        if fc.shape == ce.shape:
+            return ce.astype(fc.dtype)
+        sl = tuple(slice(0, s) for s in ce.shape)
+        return fc.at[sl].set(ce.astype(fc.dtype))
+
+    cache = jax.tree_util.tree_map(graft, full_cache, cache)
+    dbatch = {"pos": jnp.asarray(S - 1, jnp.int32)}
+    if cfg.input_mode == "embeddings":
+        dbatch["embeddings"] = batch["embeddings"][:, S - 1:S]
+    else:
+        dbatch["token"] = batch["tokens"][:, S - 1]
+    if cfg.needs_mrope_positions:
+        dbatch["positions"] = batch["positions"][:, :, S - 1:S]
+    dec_logits, _ = jax.jit(
+        lambda p, c, b: decode_step(p, c, b, cfg, None))(params, cache, dbatch)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits), np.asarray(full_logits[:, -1]),
+        rtol=0.15, atol=0.15)   # bf16 params, different compute paths
+    # argmax agreement is the semantic check
+    assert np.array_equal(np.argmax(np.asarray(dec_logits), -1),
+                          np.argmax(np.asarray(full_logits[:, -1]), -1))
+
+
+def test_padded_heads_equivalence():
+    """head_pad_to=16 must not change the real heads' math."""
+    import dataclasses
+    base = reduced(ARCHS["qwen2-vl-2b"])          # 4 heads, kv 2
+    padded = dataclasses.replace(base, head_pad_to=16)
+    p_base = init_params(jax.random.PRNGKey(7), base)
+    p_pad = init_params(jax.random.PRNGKey(7), padded)
+
+    def embed_pad(pb, pp):
+        # graft base attention params into the padded zero slots; leaves
+        # carry a leading period-stack axis, so locate the (single)
+        # differing axis instead of hard-coding positions
+        def graft(a_base, a_pad):
+            if a_base.shape == a_pad.shape:
+                return a_base
+            diff = [d for d in range(a_base.ndim)
+                    if a_base.shape[d] != a_pad.shape[d]]
+            assert len(diff) == 1, (a_base.shape, a_pad.shape)
+            sl = [slice(None)] * a_base.ndim
+            sl[diff[0]] = slice(0, a_base.shape[diff[0]])
+            return jnp.zeros_like(a_pad).at[tuple(sl)].set(a_base)
+
+        def fix_block(blk_b, blk_p):
+            return jax.tree_util.tree_map(graft, blk_b, blk_p)
+
+        pp["embed"] = pb["embed"]
+        pp["final_norm"] = pb["final_norm"]
+        if "lm_head" in pb:
+            pp["lm_head"] = pb["lm_head"]
+        for key in pb["periods"]:
+            pp["periods"][key] = fix_block(pb["periods"][key],
+                                           pp["periods"][key])
+        return pp
+
+    p_pad = embed_pad(p_base, p_pad)
+    batch = _batch(base, seed=9)
+    l1, _, _ = forward(p_base, batch, base, None)
+    l2, _, _ = forward(p_pad, batch, padded, None)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=2e-2, atol=2e-2)

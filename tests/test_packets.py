@@ -1,0 +1,58 @@
+"""Wire-format roundtrips and loss masks (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packets as P
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 5000), payload=st.sampled_from([367, 128, 512]))
+def test_packetize_roundtrip(n, payload):
+    rng = np.random.default_rng(n)
+    flat = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    pk = P.packetize(flat, payload)
+    assert pk.shape[1] == payload
+    assert pk.shape[0] == -(-n // payload)
+    back = P.depacketize(pk, n)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(flat))
+
+
+def test_payload_matches_paper():
+    """MTU 1500 - 20 IP - 8 UDP - 4 index = 1468 B -> 367 f32 (paper §4.1)."""
+    assert P.PAYLOAD_BYTES == 1468
+    assert P.PAYLOAD_F32 == 367
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_flatten_unflatten_pytree(seed):
+    rng = np.random.default_rng(seed)
+    tree = {
+        "w": jnp.asarray(rng.normal(size=(3, 4)).astype(np.float32)),
+        "nested": [jnp.asarray(rng.normal(size=(5,)), jnp.bfloat16),
+                   {"b": jnp.asarray(rng.normal(size=(2, 2, 2)).astype(np.float32))}],
+    }
+    flat, handle = P.flatten_pytree(tree)
+    assert flat.ndim == 1
+    back = P.unflatten_pytree(flat, handle)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=0.01),
+        tree, back)
+
+
+def test_loss_mask_rates():
+    rng = jax.random.PRNGKey(0)
+    m = P.loss_mask(rng, 50, 200, 0.1)
+    rate = 1.0 - float(m.mean())
+    assert 0.05 < rate < 0.15
+    assert float(P.loss_mask(rng, 5, 5, 0.0).mean()) == 1.0
+
+
+def test_wire_bytes():
+    # paper's model: ~2M params -> 5450 packets of 1538 B on the wire
+    n = P.PacketizedShape(2_000_000, 367).n_packets
+    assert n == 5450
+    assert P.packet_bytes_on_wire(2_000_000) == n * P.WIRE_PACKET_BYTES

@@ -1,0 +1,64 @@
+"""Protocol liveness + delivery properties under arbitrary transient loss."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.protocol import Kind, Packet, run_round
+
+
+def test_lossless_round_delivers_everything():
+    up, down = run_round(3, 10, lambda p, step: False)
+    for c in range(3):
+        assert up[c] == set(range(10))
+        assert down[c] == set(range(10))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), loss=st.floats(0.0, 0.4),
+       n_clients=st.integers(1, 5), n_packets=st.integers(1, 30))
+def test_random_loss_never_deadlocks(seed, loss, n_clients, n_packets):
+    """Bernoulli loss on every packet: the round always completes; data
+    packets are delivered at most once; control retransmission saves the
+    round (the paper's END/END_ACK design)."""
+    rng = np.random.default_rng(seed)
+
+    def drop(p, step):
+        return rng.random() < loss
+
+    up, down = run_round(n_clients, n_packets, drop)
+    for c in range(n_clients):
+        assert up[c] <= set(range(n_packets))
+        assert down[c] <= set(range(n_packets))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_control_only_loss_still_completes(seed):
+    """Drop bursts of control packets — retransmission must recover."""
+    rng = np.random.default_rng(seed)
+
+    def drop(p, step):
+        if p.kind in (Kind.START, Kind.START_ACK, Kind.END, Kind.END_ACK):
+            return step < 5 and rng.random() < 0.8
+        return False
+
+    up, down = run_round(2, 8, drop)
+    for c in range(2):
+        assert up[c] == set(range(8))
+
+
+def test_data_loss_reflected_in_uplink_sets():
+    """Deterministically drop client 0's packet 3 on the uplink."""
+    def drop(p, step):
+        return (p.kind == Kind.DATA and not p.from_server
+                and p.client == 0 and p.index == 3)
+
+    up, down = run_round(2, 6, drop)
+    assert up[0] == set(range(6)) - {3}
+    assert up[1] == set(range(6))
+    assert down[0] == set(range(6))
+
+
+def test_permanent_total_loss_raises():
+    with pytest.raises(RuntimeError):
+        run_round(1, 2, lambda p, step: True, max_steps=200)
