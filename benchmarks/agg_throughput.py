@@ -1,15 +1,29 @@
 """Measured aggregation throughput on this machine (not simulated).
 
-Measures the element-wise server hot loop the paper optimizes, at the
-paper's workload (10 clients x 2M params), across implementations:
+Measures the element-wise server hot loop the paper optimizes, swept
+over the *client* axis — the dimension the paper says dominates ("the
+network processing workload further increases as the number of clients
+increases") — across implementations:
   exact (sum+count+divide) / approx (single fused sum) / int8 dequant,
-  jnp fused vs Pallas kernel (interpret mode on CPU).
+  jnp fused vs the client-blocked Pallas kernel (interpret mode on CPU).
 The exact/approx delta is the deterministic-dataflow analogue of the
 paper's lock-elimination speedup; on-TPU the Pallas path is the
 production kernel.
+
+The sweep runs K in {10, 64, 256, 1024}; the 2D client-blocked grid
+keeps VMEM per step at (BK, BC, W) regardless of K (DESIGN.md §2), so
+K=1024 completes where the old all-clients-resident kernel could not.
+Each run overwrites BENCH_agg.json; the file is committed, so the perf
+trajectory across PRs lives in its git history.
+
+Usage:
+    python benchmarks/agg_throughput.py [--quick] [--out BENCH_agg.json]
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
@@ -17,11 +31,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation as agg
+from repro.core.packets import DEVICE_CHUNK_F32 as W   # lane-aligned chunk
 from repro.kernels import ops
+CLIENT_SWEEP = (10, 64, 256, 1024)
+ELEM_BUDGET = 32_000_000      # keep K*C*W bounded so host RAM stays flat
+PAPER_C = -(-2_000_000 // W)  # the paper's 2M-param workload
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready()              # compile+warm
+    jax.tree_util.tree_leaves(fn(*args))[0].block_until_ready()  # warm
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -29,38 +47,75 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters
 
 
-def rows(n_params: int = 2_000_000, n_clients: int = 10):
-    W = 512
-    C = -(-n_params // W)
-    rng = np.random.default_rng(0)
-    pk = jnp.asarray(rng.normal(size=(n_clients, C, W)).astype(np.float32))
-    m = jnp.asarray((rng.random((n_clients, C)) > 0.05).astype(np.float32))
+def _chunks_for(k: int, quick: bool) -> int:
+    if quick:
+        return 16
+    return min(PAPER_C, max(8, ELEM_BUDGET // (k * W)))
 
-    exact = jax.jit(agg.masked_aggregate)
-    approx = jax.jit(lambda p, mm: (
-        jnp.einsum("knw,kn->nw", p, mm) / n_clients, mm))
-    q, s = agg.quantize_packets(pk)
-    int8 = jax.jit(agg.dequantize_aggregate)
 
-    t_exact = _time(exact, pk, m)
-    t_approx = _time(approx, pk, m)
-    t_int8 = _time(int8, q, s, m)
-    t_pallas = _time(lambda a, b: ops.fedavg_accum(a, b), pk, m)
+def rows(ks=CLIENT_SWEEP, quick: bool = False):
+    iters = 2 if quick else 5
+    out = []
+    for K in ks:
+        C = _chunks_for(K, quick)
+        n_params = C * W
+        rng = np.random.default_rng(K)
+        pk = jnp.asarray(rng.normal(size=(K, C, W)).astype(np.float32))
+        m = jnp.asarray((rng.random((K, C)) > 0.05).astype(np.float32))
+        q, s = agg.quantize_packets(pk)
+        # bigger client blocks amortize interpret/grid overhead at large K
+        bk = 8 if K <= 64 else 64
 
-    el = n_params * n_clients
-    out = [
-        ("agg_exact_jnp", t_exact * 1e6,
-         f"{el/t_exact/1e9:.2f}Gelem/s"),
-        ("agg_approx_jnp", t_approx * 1e6,
-         f"{el/t_approx/1e9:.2f}Gelem/s;speedup_vs_exact={t_exact/t_approx:.2f}x"),
-        ("agg_int8_jnp", t_int8 * 1e6,
-         f"{el/t_int8/1e9:.2f}Gelem/s;wire_bytes=0.25x"),
-        ("agg_pallas_interpret", t_pallas * 1e6,
-         f"{el/t_pallas/1e9:.3f}Gelem/s;interpret=True (CPU oracle mode)"),
-    ]
+        exact = jax.jit(agg.masked_aggregate)
+        approx = jax.jit(lambda p, mm: (
+            jnp.einsum("knw,kn->nw", p, mm) / p.shape[0], mm))
+        int8 = jax.jit(agg.dequantize_aggregate)
+        impls = [
+            ("exact", "jnp", lambda: _time(exact, pk, m, iters=iters)),
+            ("approx", "jnp", lambda: _time(approx, pk, m, iters=iters)),
+            ("int8", "jnp", lambda: _time(int8, q, s, m, iters=iters)),
+            ("exact", "pallas", lambda: _time(
+                lambda a, b: ops.fedavg_accum(a, b, block_clients=bk),
+                pk, m, iters=iters)),
+            ("int8", "pallas", lambda: _time(
+                lambda a, b, c: ops.quantized_accum(a, b, c,
+                                                    block_clients=bk),
+                q, s, m, iters=iters)),
+        ]
+        for mode, impl, run in impls:
+            t = run()
+            el = K * n_params
+            out.append({
+                "k": K, "mode": mode, "impl": impl,
+                "n_params": n_params, "block_clients": bk,
+                "time_us": t * 1e6,
+                "gelem_per_s": el / t / 1e9,
+                "interpret": jax.default_backend() != "tpu",
+            })
+            print(f"K={K:5d} {mode:6s}/{impl:6s} "
+                  f"{t*1e6:12.1f}us  {el/t/1e9:8.3f} Gelem/s")
     return out
 
 
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny chunk counts + fewer iters (CI smoke)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_agg.json"))
+    args = ap.parse_args()
+    result = {
+        "bench": "agg_throughput",
+        "backend": jax.default_backend(),
+        "quick": args.quick,
+        "client_sweep": list(CLIENT_SWEEP),
+        "rows": rows(quick=args.quick),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out} ({len(result['rows'])} rows)")
+
+
 if __name__ == "__main__":
-    for name, us, derived in rows():
-        print(f"{name},{us:.1f},{derived}")
+    main()

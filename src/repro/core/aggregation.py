@@ -115,25 +115,100 @@ def dequantize_aggregate(q: jnp.ndarray, scale: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# Whole-round helper on flat parameter vectors
+# Whole-round helpers on flat parameter vectors
 # ---------------------------------------------------------------------------
 
 def aggregate_flat(client_flats: jnp.ndarray, up_mask: jnp.ndarray,
                    payload: int, mode: str = "exact",
                    conflict_rng=None, conflict_rate: float = 0.0,
-                   weights=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                   weights=None, backend: str = "jnp",
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """client_flats (K, P) -> (global packets (N, W), counts (N,)).
 
     up_mask (K, N) is the uplink arrival mask over packets.
+    ``backend="pallas"`` routes exact/int8 through the client-blocked
+    Pallas kernels (kernels/ops.py); approx always runs as jnp because
+    the conflict-thinning RNG is a per-element dataflow transform.
     """
     from repro.core.packets import packetize
     pk = jax.vmap(lambda f: packetize(f, payload))(client_flats)  # (K,N,W)
+    if weights is None:
+        weights = jnp.ones((client_flats.shape[0],), jnp.float32)
+
+    def _lane_pad(x):
+        # Device contract (DESIGN.md §1): kernel payload width must be a
+        # multiple of the 128-lane VPU width; the wire payload (367) is
+        # not.  Zero columns are inert in sum/count and sliced back off.
+        pad = (-x.shape[-1]) % 128
+        return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+
     if mode == "exact":
+        if backend == "pallas":
+            from repro.kernels import ops
+            avg, counts = ops.fedavg_accum(_lane_pad(pk),
+                                           up_mask * weights[:, None])
+            return avg[:, :payload], counts
         return masked_aggregate(pk, up_mask, weights)
     if mode == "approx":
         return approx_aggregate(pk, up_mask, conflict_rng, conflict_rate,
                                 weights)
     if mode == "int8":
         q, s = quantize_packets(pk)
+        if backend == "pallas":
+            from repro.kernels import ops
+            avg, counts = ops.quantized_accum(_lane_pad(q), s,
+                                              up_mask * weights[:, None])
+            return avg[:, :payload], counts
         return dequantize_aggregate(q, s, up_mask, weights)
     raise ValueError(mode)
+
+
+def expand_packet_mask(mask: jnp.ndarray, payload: int,
+                       n_params: int) -> jnp.ndarray:
+    """(..., N) per-packet mask -> (..., P) per-element mask (tail dropped).
+
+    Static ``payload``/``n_params`` keep this a pure reshape/broadcast —
+    XLA fuses it into the consumer, nothing (K, N, W)-shaped materializes.
+    """
+    rep = jnp.repeat(mask, payload, axis=-1)
+    return rep[..., :n_params]
+
+
+def fused_round_step(client_flats: jnp.ndarray, up_mask: jnp.ndarray,
+                     down_mask: jnp.ndarray, prev_global: jnp.ndarray,
+                     payload: int, mode: str = "exact",
+                     conflict_rng=None, conflict_rate: float = 0.0,
+                     weights=None, mix_alpha: float = 0.0,
+                     backend: str = "jnp",
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One full server round on flat (K, P) client state, fused.
+
+    Uplink masking, aggregation, per-packet count-fallback to the
+    previous global, downlink client fallback, and the optional
+    APFL-style blend run as ONE dataflow over flat arrays: the only
+    (K, N, W) tensor is the packetized view of the client flats that the
+    aggregation itself consumes (a reshape of ``client_flats``); the
+    global parameters are never tiled or re-packetized per client.
+
+    client_flats (K, P); up_mask/down_mask (K, N); prev_global (P,).
+    Returns (new_client_flats (K, P), new_global (P,), counts (N,)).
+    """
+    from repro.core.packets import depacketize
+    K, P = client_flats.shape
+    gpk, counts = aggregate_flat(client_flats, up_mask, payload, mode=mode,
+                                 conflict_rng=conflict_rng,
+                                 conflict_rate=conflict_rate,
+                                 weights=weights, backend=backend)
+    agg_flat = depacketize(gpk, P)                           # (P,)
+    # Per-packet count fallback (§3.2.2): packets nobody delivered keep
+    # the previous round's global value.
+    have = expand_packet_mask(counts > 0, payload, P)        # (P,) bool
+    new_global = jnp.where(have, agg_flat, prev_global)
+    # Downlink fallback (§3.1): elements of packets lost on the downlink
+    # stay at the client's local value.  (K, N) -> (K, P) mask; the
+    # global broadcasts, it is never materialized per client.
+    down_elem = expand_packet_mask(down_mask, payload, P)    # (K, P)
+    new_flats = jnp.where(down_elem > 0, new_global[None, :], client_flats)
+    if mix_alpha > 0:                                        # APFL-style blend
+        new_flats = mix_alpha * client_flats + (1 - mix_alpha) * new_flats
+    return new_flats, new_global, counts

@@ -6,7 +6,10 @@ server aggregation runs through ``core.aggregation`` with the chosen
 variant: exact (locked), approx (lock-free with conflict thinning), or
 int8 (beyond-paper).  Packet loss is injected independently on the uplink
 and the downlink; the downlink fallback keeps the client's local value
-for packets that never arrived (paper §3.1).
+for packets that never arrived (paper §3.1).  The whole server step —
+masking, aggregation, count-fallback, downlink fallback — runs through
+``aggregation.fused_round_step`` on flat (K, P) client state, so no
+(K, N, W) copy of the global is ever materialized (DESIGN.md §3).
 
 Per-FedAvg / APFL-style client updates (paper §2.1.2) are supported via
 ``mix_alpha``: clients blend local and global parameters instead of
@@ -21,9 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation as agg
-from repro.core.packets import (PAYLOAD_F32, PacketizedShape, depacketize,
-                                flatten_pytree, loss_mask, packetize,
-                                unflatten_pytree)
+from repro.core.packets import (PAYLOAD_F32, PacketizedShape, flatten_pytree,
+                                loss_mask, unflatten_pytree)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,23 +123,11 @@ def run_fedavg(model: ModelFns, client_data, test_data,
                                  prev_global):
         up = loss_mask(up_rng, K, pshape.n_packets, cfg.uplink_loss)
         up = up * sel[:, None]                            # only selected join
-        gpk, counts = agg.aggregate_flat(
-            flats, up, cfg.payload, mode=cfg.agg_mode,
-            conflict_rng=conflict_rng, conflict_rate=cfg.conflict_rate,
-            weights=weights * sel)
-        prev_pk = packetize(prev_global, cfg.payload)
-        gpk = jnp.where(counts[:, None] > 0, gpk, prev_pk)
-        new_global = depacketize(gpk, n_params)
-
         down = loss_mask(down_rng, K, pshape.n_packets, cfg.downlink_loss)
-        local_pk = jax.vmap(lambda f: packetize(f, cfg.payload))(flats)
-        recv = jax.vmap(agg.client_update_with_fallback)(local_pk,
-                                                         jnp.tile(gpk[None], (K, 1, 1)),
-                                                         down)
-        new_flats = jax.vmap(lambda p: depacketize(p, n_params))(recv)
-        if cfg.mix_alpha > 0:                             # APFL-style blend
-            new_flats = (cfg.mix_alpha * flats
-                         + (1 - cfg.mix_alpha) * new_flats)
+        new_flats, new_global, _ = agg.fused_round_step(
+            flats, up, down, prev_global, cfg.payload, mode=cfg.agg_mode,
+            conflict_rng=conflict_rng, conflict_rate=cfg.conflict_rate,
+            weights=weights * sel, mix_alpha=cfg.mix_alpha)
         return new_flats, new_global
 
     history: Dict[str, List[float]] = {"round": [], "test_loss": [],

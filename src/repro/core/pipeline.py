@@ -4,22 +4,26 @@ On the DPU the pipeline is three thread classes connected by DPDK rings;
 on TPU the same overlap appears at two levels:
 
 1. **Device level** (the Pallas kernel, kernels/fedavg_accum.py): the
-   ``pallas_call`` grid walks packet-chunks; Mosaic double-buffers the
-   HBM→VMEM DMAs, so chunk i+1 streams in (RX) while chunk i accumulates
-   (worker) and chunk i-1 streams out (TX).
+   ``pallas_call`` grid walks (chunk-block, client-block) pairs; Mosaic
+   double-buffers the HBM→VMEM DMAs, so client-block k+1 streams in (RX)
+   while block k accumulates (worker) into the resident output block
+   (DESIGN.md §2).
 
-2. **Host level** (this module): client uploads arrive chunk-by-chunk;
-   ``StreamingAggregator`` dispatches the masked accumulation of chunk i
-   as soon as it lands while chunk i+1 is still in flight — JAX's async
-   dispatch gives the overlap; the element-wise divide happens once at
-   END (the paper's single representative worker).
+2. **Host level** (this module): client uploads arrive one by one or in
+   *batches*; ``StreamingAggregator`` dispatches the masked accumulation
+   of each arrival as soon as it lands while the next is still in flight
+   — JAX's async dispatch gives the overlap; the element-wise divide
+   happens once at END (the paper's single representative worker).
+   Batched arrivals fold through the same client-blocked Pallas kernel
+   with ``finalize=False`` (raw sums + counts), so the host streaming
+   loop and the one-shot batch path share one device code path.
 
 The aggregator keeps (sum, count) running state, so it also implements
 the paper's "reception and addition in parallel until END" semantics.
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional, Tuple
+from typing import Iterator, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +39,15 @@ def _accum_chunk(total, counts, payload, mask):
 
 
 @jax.jit
+def _accum_batch_jnp(total, counts, payloads, wmask):
+    """payloads (B,N,W); wmask (B,N) weighted arrival mask."""
+    total = total + jnp.einsum("knw,kn->nw", payloads.astype(jnp.float32),
+                               wmask)
+    counts = counts + jnp.sum(wmask, axis=0)
+    return total, counts
+
+
+@jax.jit
 def _finalize(total, counts):
     avg = total / jnp.maximum(counts, 1e-12)[:, None]
     return jnp.where(counts[:, None] > 0, avg, 0.0)
@@ -44,19 +57,48 @@ class StreamingAggregator:
     """Count-normalized streaming FedAvg server state.
 
     add() per client upload overlaps with the next upload's transfer
-    (async dispatch); finalize() is the END-triggered divide.
+    (async dispatch); finalize() is the END-triggered divide.  add()
+    also accepts a client *batch* (B, N, W) with mask (B, N) — batches
+    are reduced by the client-blocked Pallas kernel (``use_kernel=True``,
+    the default) so host-level streaming exercises the same device path
+    as the one-shot aggregation.
     """
 
-    def __init__(self, n_packets: int, payload_width: int):
+    def __init__(self, n_packets: int, payload_width: int,
+                 *, use_kernel: bool = True):
         self.total = jnp.zeros((n_packets, payload_width), jnp.float32)
         self.counts = jnp.zeros((n_packets,), jnp.float32)
+        self.use_kernel = use_kernel
         self._finalized: Optional[jnp.ndarray] = None
 
     def add(self, packets: jnp.ndarray, mask: jnp.ndarray,
-            weight: float = 1.0) -> None:
+            weight: Union[float, jnp.ndarray] = 1.0) -> None:
+        """Fold one upload (N, W) or a batch (B, N, W) into the state.
+
+        ``weight`` is the FedAvg n_k weight: a scalar for a single
+        upload, a scalar or a (B,) vector for a batch.
+        """
         assert self._finalized is None, "aggregator already finalized"
+        if packets.ndim == 3:
+            self.add_batch(packets, mask, weight)
+            return
         self.total, self.counts = _accum_chunk(
             self.total, self.counts, packets, mask * weight)
+
+    def add_batch(self, packets: jnp.ndarray, mask: jnp.ndarray,
+                  weights: Union[float, jnp.ndarray] = 1.0) -> None:
+        """Fold a client batch (B, N, W) + mask (B, N) into the state."""
+        assert self._finalized is None, "aggregator already finalized"
+        wmask = mask * jnp.broadcast_to(
+            jnp.asarray(weights, jnp.float32), mask.shape[:1])[:, None]
+        if self.use_kernel:
+            from repro.kernels import ops
+            sums, cnts = ops.fedavg_accum(packets, wmask, finalize=False)
+            self.total = self.total + sums
+            self.counts = self.counts + cnts
+        else:
+            self.total, self.counts = _accum_batch_jnp(
+                self.total, self.counts, packets, wmask)
 
     def finalize(self) -> jnp.ndarray:
         if self._finalized is None:
@@ -71,7 +113,10 @@ class StreamingAggregator:
 
 def streaming_rounds(uploads: Iterator[Tuple[jnp.ndarray, jnp.ndarray]],
                      n_packets: int, payload_width: int) -> jnp.ndarray:
-    """Drain an iterator of (packets, mask) uploads through the pipeline."""
+    """Drain an iterator of (packets, mask) uploads through the pipeline.
+
+    Each item may be a single upload (N, W) or a client batch (B, N, W).
+    """
     server = StreamingAggregator(n_packets, payload_width)
     for packets, mask in uploads:
         server.add(packets, mask)

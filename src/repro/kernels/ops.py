@@ -2,8 +2,11 @@
 
 On non-TPU backends the kernels run in ``interpret=True`` mode (the
 kernel body executes as traced jnp on CPU), which is how this container
-validates them; on TPU they compile through Mosaic.  Wrappers handle
-padding to block multiples and strip it off again.
+validates them; on TPU they compile through Mosaic.  Wrappers pad both
+the client axis and the chunk axis up to block multiples and strip the
+chunk padding off again.  All padding is zero-fill (``jnp.pad`` with
+``constant_values=0``), so padded clients/chunks carry a zero mask and
+contribute neither to the sums nor to the counts — counts stay exact.
 """
 from __future__ import annotations
 
@@ -21,37 +24,57 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _pad_chunks(arrs_kc, c: int, block: int):
-    """Pad dim 1 (chunks) of each array up to a multiple of ``block``."""
-    pad = (-c) % block
+def _pad_axis(arrs, size: int, block: int, axis: int):
+    """Zero-pad ``axis`` of each array up to a multiple of ``block``.
+
+    Zero-fill means the (K, C) masks are 0 in every padded row/chunk, so
+    padded entries are inert in both the accumulate and the count.
+    """
+    pad = (-size) % block
     if pad == 0:
-        return arrs_kc, c
+        return arrs
     out = []
-    for a in arrs_kc:
+    for a in arrs:
         widths = [(0, 0)] * a.ndim
-        widths[1] = (0, pad)
-        out.append(jnp.pad(a, widths))
-    return out, c + pad
+        widths[axis] = (0, pad)
+        out.append(jnp.pad(a, widths, constant_values=0))
+    return out
 
 
-@functools.partial(jax.jit, static_argnames=("block_chunks",))
-def fedavg_accum(packets, wmask, block_chunks: int = 8):
-    """(K, C, W) payloads + (K, C) weighted mask -> (avg (C, W), counts (C,))."""
+@functools.partial(jax.jit,
+                   static_argnames=("block_clients", "block_chunks",
+                                    "finalize"))
+def fedavg_accum(packets, wmask, block_clients: int = 8,
+                 block_chunks: int = 8, finalize: bool = True):
+    """(K, C, W) payloads + (K, C) weighted mask -> (avg (C, W), counts (C,)).
+
+    With ``finalize=False`` the first output is the raw masked sum
+    (streaming partial aggregation — divide happens at END).
+    """
     K, C, W = packets.shape
-    (packets, wmask), cp = _pad_chunks([packets, wmask], C, block_chunks)
+    packets, wmask = _pad_axis([packets, wmask], K, block_clients, 0)
+    packets, wmask = _pad_axis([packets, wmask], C, block_chunks, 1)
     avg, cnt = fedavg_accum_pallas(packets, wmask,
+                                   block_clients=block_clients,
                                    block_chunks=block_chunks,
+                                   finalize=finalize,
                                    interpret=_interpret())
     return avg[:C], cnt[:C, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("block_chunks",))
-def quantized_accum(q, scales, wmask, block_chunks: int = 8):
+@functools.partial(jax.jit,
+                   static_argnames=("block_clients", "block_chunks",
+                                    "finalize"))
+def quantized_accum(q, scales, wmask, block_clients: int = 8,
+                    block_chunks: int = 8, finalize: bool = True):
     """int8 (K, C, W) + scales/mask (K, C) -> (avg (C, W), counts (C,))."""
     K, C, W = q.shape
-    (q, scales, wmask), cp = _pad_chunks([q, scales, wmask], C, block_chunks)
+    q, scales, wmask = _pad_axis([q, scales, wmask], K, block_clients, 0)
+    q, scales, wmask = _pad_axis([q, scales, wmask], C, block_chunks, 1)
     avg, cnt = quantized_accum_pallas(q, scales, wmask,
+                                      block_clients=block_clients,
                                       block_chunks=block_chunks,
+                                      finalize=finalize,
                                       interpret=_interpret())
     return avg[:C], cnt[:C, 0]
 

@@ -7,46 +7,68 @@ payloads never materialize in HBM — HBM traffic drops ~4x vs the f32
 kernel, which matters because the aggregation is memory-bound (roofline:
 ~0.25 flop/byte).
 
-Same grid/pipeline structure as fedavg_accum.py.
+Same 2D client-blocked grid / accumulator-revisit structure as
+fedavg_accum.py (DESIGN.md §2): the output block is the f32 accumulator
+carried across the innermost client-block sweep, so VMEM per step is
+``(BK, BC, W)`` int8 + the f32 output block, independent of K.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _quantized_accum_kernel(q_ref, s_ref, m_ref, out_ref, cnt_ref):
-    """q (K, BC, W) int8; s (K, BC) f32 scales; m (K, BC) f32 mask."""
+def _quantized_accum_kernel(q_ref, s_ref, m_ref, out_ref, cnt_ref,
+                            *, finalize: bool):
+    """q (BK, BC, W) int8; s (BK, BC) f32 scales; m (BK, BC) f32 mask."""
+    k_idx = pl.program_id(1)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
     q = q_ref[...].astype(jnp.float32)
     s = s_ref[...].astype(jnp.float32)
     m = m_ref[...].astype(jnp.float32)
-    contrib = q * (s * m)[:, :, None]                  # dequant * mask
-    total = jnp.sum(contrib, axis=0)                   # (BC, W)
-    counts = jnp.sum(m, axis=0)
-    avg = total / jnp.maximum(counts, 1e-12)[:, None]
-    out_ref[...] = jnp.where(counts[:, None] > 0, avg, 0.0)
-    cnt_ref[...] = counts[:, None]
+    out_ref[...] += jnp.sum(q * (s * m)[:, :, None], axis=0)   # dequant*mask
+    cnt_ref[...] += jnp.sum(m, axis=0)[:, None]
+
+    if finalize:
+        @pl.when(k_idx == pl.num_programs(1) - 1)
+        def _divide():
+            counts = cnt_ref[...]
+            avg = out_ref[...] / jnp.maximum(counts, 1e-12)
+            out_ref[...] = jnp.where(counts > 0, avg, 0.0)
 
 
 def quantized_accum_pallas(q: jnp.ndarray, scales: jnp.ndarray,
-                           wmask: jnp.ndarray, *, block_chunks: int = 8,
+                           wmask: jnp.ndarray, *, block_clients: int = 8,
+                           block_chunks: int = 8, finalize: bool = True,
                            interpret: bool = False):
     """q (K, C, W) int8; scales, wmask (K, C) f32 -> (avg (C,W), counts (C,1))."""
     K, C, W = q.shape
+    assert K % block_clients == 0, (K, block_clients)
     assert C % block_chunks == 0, (C, block_chunks)
-    grid = (C // block_chunks,)
+    grid = (C // block_chunks, K // block_clients)
+    kernel = functools.partial(_quantized_accum_kernel, finalize=finalize)
     return pl.pallas_call(
-        _quantized_accum_kernel,
+        kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((K, block_chunks, W), lambda i: (0, i, 0)),
-            pl.BlockSpec((K, block_chunks), lambda i: (0, i)),
-            pl.BlockSpec((K, block_chunks), lambda i: (0, i)),
+            pl.BlockSpec((block_clients, block_chunks, W),
+                         lambda c, k: (k, c, 0)),
+            pl.BlockSpec((block_clients, block_chunks),
+                         lambda c, k: (k, c)),
+            pl.BlockSpec((block_clients, block_chunks),
+                         lambda c, k: (k, c)),
         ],
         out_specs=[
-            pl.BlockSpec((block_chunks, W), lambda i: (i, 0)),
-            pl.BlockSpec((block_chunks, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_chunks, W), lambda c, k: (c, 0)),
+            pl.BlockSpec((block_chunks, 1), lambda c, k: (c, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((C, W), jnp.float32),

@@ -1,0 +1,83 @@
+"""Optional-import shim for ``hypothesis``.
+
+When hypothesis is installed, re-exports the real ``given`` / ``settings``
+/ ``strategies``.  When it is absent (the minimal CI container), falls
+back to a deterministic example sweep: ``@given`` draws a fixed number of
+pseudo-random examples from the declared strategies (seeded by the test's
+qualified name, so failures reproduce) and runs the test body once per
+draw.  Property coverage is thinner than real hypothesis — no shrinking,
+no adaptive search — but the suite collects and runs green either way.
+
+Usage in test modules:
+    from _hypothesis_shim import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _FALLBACK_MAX_EXAMPLES = 10     # cap: fallback sweeps stay fast
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_from(self, rnd: random.Random):
+            return self._draw(rnd)
+
+    class _StrategiesShim:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+    st = _StrategiesShim()
+
+    def settings(max_examples: int = 20, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                declared = getattr(wrapper, "_shim_max_examples",
+                                   _FALLBACK_MAX_EXAMPLES)
+                n = min(declared, _FALLBACK_MAX_EXAMPLES)
+                rnd = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+                for _ in range(n):
+                    drawn = {name: s.example_from(rnd)
+                             for name, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # Hide the drawn parameters from pytest's fixture resolution
+            # (functools.wraps exposes the original signature otherwise).
+            sig = inspect.signature(fn)
+            remaining = [p for name, p in sig.parameters.items()
+                         if name not in strategies]
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

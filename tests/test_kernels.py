@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -51,6 +51,87 @@ def test_packet_scatter_matches_ref(n, slots, w):
         np.asarray(out)[np.asarray(idx)], np.asarray(pkts))
     np.testing.assert_array_equal(np.asarray(out)[np.asarray(idx)],
                                   np.asarray(expect)[np.asarray(idx)])
+
+
+# --- client-blocked grid: scale the K axis ----------------------------------
+
+# K sweep incl. non-multiples of block_clients (3, 10, 257) and a K that
+# spans many client-blocks (257 -> 33 blocks at BK=8); C likewise hits
+# non-multiples of block_chunks.
+K_SWEEP = [3, 10, 64, 257]
+
+
+@pytest.mark.parametrize("k", K_SWEEP)
+@pytest.mark.parametrize("c", [5, 8])
+def test_fedavg_accum_client_blocked_bit_identical(k, c):
+    """Integer-valued payloads make f32 sums order-independent, so the
+    client-blocked accumulator must be *bit-identical* to the one-shot
+    masked_aggregate reference — same sums, same counts, same divide."""
+    from repro.core.aggregation import masked_aggregate
+    w = 128
+    rng = np.random.default_rng(k * 1000 + c)
+    pk = jnp.asarray(rng.integers(-8, 9, (k, c, w)).astype(np.float32))
+    m = jnp.asarray((rng.random((k, c)) > 0.2).astype(np.float32))
+    a1, c1 = ops.fedavg_accum(pk, m)
+    a2, c2 = masked_aggregate(pk, m)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+@pytest.mark.parametrize("k", K_SWEEP)
+def test_fedavg_accum_large_k_matches_ref(k):
+    rng = np.random.default_rng(k)
+    pk = jnp.asarray(rng.normal(size=(k, 6, 128)).astype(np.float32))
+    m = jnp.asarray((rng.random((k, 6)) > 0.2).astype(np.float32))
+    a1, c1 = ops.fedavg_accum(pk, m)
+    a2, c2 = ref.fedavg_accum_ref(pk, m)
+    np.testing.assert_allclose(a1, a2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2[:, 0]))
+
+
+@pytest.mark.parametrize("k", K_SWEEP)
+def test_quantized_accum_client_blocked(k):
+    rng = np.random.default_rng(k + 7)
+    q = jnp.asarray(rng.integers(-127, 128, (k, 5, 128)).astype(np.int8))
+    s = jnp.asarray(rng.random((k, 5)).astype(np.float32) * 0.02)
+    m = jnp.asarray((rng.random((k, 5)) > 0.2).astype(np.float32))
+    a1, c1 = ops.quantized_accum(q, s, m)
+    a2, c2 = ref.quantized_accum_ref(q, s, m)
+    np.testing.assert_allclose(a1, a2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2[:, 0]))
+
+
+@pytest.mark.parametrize("block_clients", [8, 64])
+def test_fedavg_accum_block_size_invariance(block_clients):
+    """Result must not depend on the client-block tiling."""
+    rng = np.random.default_rng(99)
+    pk = jnp.asarray(rng.integers(-8, 9, (100, 9, 128)).astype(np.float32))
+    m = jnp.asarray((rng.random((100, 9)) > 0.3).astype(np.float32))
+    a1, c1 = ops.fedavg_accum(pk, m, block_clients=block_clients)
+    a2, c2 = ops.fedavg_accum(pk, m, block_clients=4)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_fedavg_accum_unfinalized_returns_raw_sums():
+    rng = np.random.default_rng(5)
+    pk = jnp.asarray(rng.integers(-8, 9, (13, 6, 128)).astype(np.float32))
+    m = jnp.asarray((rng.random((13, 6)) > 0.2).astype(np.float32))
+    sums, cnts = ops.fedavg_accum(pk, m, finalize=False)
+    expect = jnp.einsum("kcw,kc->cw", pk, m)
+    np.testing.assert_array_equal(np.asarray(sums), np.asarray(expect))
+    np.testing.assert_array_equal(np.asarray(cnts),
+                                  np.asarray(jnp.sum(m, axis=0)))
+
+
+def test_padded_chunks_carry_zero_mask():
+    """C=7 pads to 8: the padded chunk must not leak into counts."""
+    rng = np.random.default_rng(3)
+    pk = jnp.asarray(rng.normal(size=(4, 7, 128)).astype(np.float32))
+    m = jnp.ones((4, 7), jnp.float32)
+    _, cnts = ops.fedavg_accum(pk, m)
+    assert cnts.shape == (7,)
+    np.testing.assert_array_equal(np.asarray(cnts), 4.0)
 
 
 # --- hypothesis property sweeps ---------------------------------------------

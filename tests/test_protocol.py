@@ -1,7 +1,7 @@
 """Protocol liveness + delivery properties under arbitrary transient loss."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.protocol import Kind, Packet, run_round
 
