@@ -1,0 +1,97 @@
+"""Measured packet-path engine phases (shared by fig6/fig7 rows).
+
+The analytic bars in fig6/fig7 come from the calibrated pipeline model
+(core/simnet.py); these rows *execute* the same round shape through
+``core.server.ServerEngine`` — RX demux + dedup, ring drains through the
+scatter-accumulate kernel, END divide, TX downlink — and time each
+phase.  On CPU the kernels run in interpret mode, so absolute times are
+a correctness-calibrated analogue of the DPU, not hardware numbers; the
+exact-vs-approx *ratio* and the phase split are the meaningful outputs
+(EXPERIMENTS.md §Paper-validation).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packets import packetize
+from repro.core.server import EngineConfig, ServerEngine, make_uplink_stream
+
+
+@functools.lru_cache(maxsize=None)   # fig6 and fig7 share one measurement
+def measure_engine_round(mode: str = "exact", n_clients: int = 10,
+                         n_params: int = 16384, payload: int = 64,
+                         ring_capacity: int = 64, seed: int = 0,
+                         loss_rate: float = 0.01, dup_rate: float = 0.02,
+                         ) -> Dict[str, float]:
+    """One engine round; returns per-phase wall times in seconds.
+
+    An identical warmup round runs first so jit tracing/compilation is
+    excluded — the timed round measures the pipeline, not the tracer
+    (cold vs warm differ by ~25-90x per phase).
+    """
+    rng = np.random.default_rng(seed)
+    flats = jnp.asarray(rng.normal(size=(n_clients, n_params))
+                        .astype(np.float32))
+    prev = jnp.zeros((n_params,), jnp.float32)
+    pk = jax.vmap(lambda f: packetize(f, payload))(flats)
+    events, _ = make_uplink_stream(rng, pk, loss_rate=loss_rate,
+                                   dup_rate=dup_rate)
+    down = jnp.asarray((rng.random((n_clients, pk.shape[1])) > loss_rate)
+                       .astype(np.float32))
+    cfg = EngineConfig(n_clients=n_clients, n_params=n_params,
+                       payload=payload, ring_capacity=ring_capacity,
+                       mode=mode)
+
+    stats = {}
+
+    def one_round():
+        engine = ServerEngine(cfg)
+        t0 = time.perf_counter()
+        for packet, pay in events:                   # RX + worker drains
+            engine.rx(packet, pay)
+        engine.flush()
+        engine.agg.total.block_until_ready()
+        t1 = time.perf_counter()
+        new_global, _ = engine.finalize_round(prev)  # END divide
+        new_global.block_until_ready()
+        t2 = time.perf_counter()
+        new_flats = engine.distribute(new_global, flats, down)  # TX down
+        new_flats.block_until_ready()
+        t3 = time.perf_counter()
+        stats["packets"] = float(engine.stats.data_enqueued)
+        stats["batches"] = float(engine.stats.batches_drained)
+        return t0, t1, t2, t3
+
+    one_round()                                      # warmup: jit compile
+    t0, t1, t2, t3 = one_round()
+
+    return {"recv_time": t1 - t0, "compute_time": t2 - t1,
+            "send_time": t3 - t2, "response_time": t3 - t0,
+            "server_exec": t2 - t0, **stats}
+
+
+def measured_rows(prefix: str):
+    """CSV rows for both server modes; called by fig6/fig7 ``rows()``."""
+    out = []
+    for mode in ("exact", "approx"):
+        m = measure_engine_round(mode=mode)
+        if prefix == "fig6":
+            out.append((f"fig6_measured_engine_{mode}",
+                        m["response_time"] * 1e6,
+                        f"recv={m['recv_time']*1e3:.1f}ms "
+                        f"comp={m['compute_time']*1e3:.1f}ms "
+                        f"send={m['send_time']*1e3:.1f}ms "
+                        f"pkts={m['packets']:.0f}"))
+        else:
+            out.append((f"fig7_measured_engine_{mode}",
+                        m["server_exec"] * 1e6,
+                        f"recv_us={m['recv_time']*1e6:.0f};"
+                        f"comp_us={m['compute_time']*1e6:.0f};"
+                        f"batches={m['batches']:.0f}"))
+    return out

@@ -1,7 +1,10 @@
 """Fig. 6 — server response time (client view) for the six variants.
 
-Calibrated discrete-event simulation (core/simnet.py) of the paper's
-setup: 10 clients, ~2M f32 params, 25 GbE.  Derived column reports the
+Two row families: ``fig6_response_*`` are the calibrated discrete-event
+simulation (core/simnet.py) of the paper's setup — 10 clients, ~2M f32
+params, 25 GbE; ``fig6_measured_engine_*`` *execute* a reduced round
+through the packet-path server engine (core/server.py) and time the
+RX/compute/TX phases on this machine.  Derived column reports the
 paper's headline comparisons.
 """
 from __future__ import annotations
@@ -25,6 +28,11 @@ def rows():
         paper = PAPER.get(k)
         tag = f"sim={got:.2f}x" + (f" paper={paper:.2f}x" if paper else "")
         out.append((f"fig6_ratio_{k}", 0.0, tag))
+    try:                                  # package context (run.py, -m)
+        from benchmarks.engine_measured import measured_rows
+    except ImportError:                   # standalone: script dir on sys.path
+        from engine_measured import measured_rows
+    out.extend(measured_rows("fig6"))
     return out
 
 

@@ -1,4 +1,9 @@
-"""Fig. 7 — server execution time breakdown (receive vs compute bars)."""
+"""Fig. 7 — server execution time breakdown (receive vs compute bars).
+
+``fig7_exec_*`` rows are the calibrated model (core/simnet.py);
+``fig7_measured_engine_*`` rows time the executable packet-path engine
+(core/server.py) on a reduced round — measured, not analytic.
+"""
 from __future__ import annotations
 
 from repro.core.simnet import VARIANTS, simulate_all
@@ -12,6 +17,11 @@ def rows():
         out.append((f"fig7_exec_{v.name}_{v.label}",
                     r.server_exec * 1e6,
                     f"recv_us={r.recv_time*1e6:.0f};comp_us={r.compute_time*1e6:.0f}"))
+    try:                                  # package context (run.py, -m)
+        from benchmarks.engine_measured import measured_rows
+    except ImportError:                   # standalone: script dir on sys.path
+        from engine_measured import measured_rows
+    out.extend(measured_rows("fig7"))
     return out
 
 

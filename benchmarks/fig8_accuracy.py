@@ -1,0 +1,169 @@
+"""Fig. 8 (executable counterpart) — accuracy cost of the lock-free server.
+
+fig8_convergence.py models the race *analytically* (Bernoulli conflict
+thinning inside ``approx_aggregate``); these rows instead push every
+round's aggregation through the executable packet-path engine
+(core/server.py): real interleaved packet streams — lossy, out-of-order,
+duplicated — drained through the scatter-accumulate kernel in exact
+(locked) vs approximate (lock-free, last-writer-wins) mode.  The ring
+capacity is the race window: capacity 1 degenerates to the locked
+server, wider rings lose more racing updates.
+
+Two row families:
+
+- ``fig8acc_agg_*``   : single-round aggregation error of the approximate
+  server vs the exact one on identical streams (relative L2 of the new
+  global), per ring capacity.
+- ``fig8acc_train_*`` : end-to-end FedAvg on the reduced paper CNN with
+  the engine as the server; the derived column reports final test
+  accuracy/loss and the exact-vs-approx delta — the paper's "negligible
+  accuracy loss" claim (§5.3), now measured on an executable path.
+
+Race-window calibration: a drained batch races every same-slot pair it
+contains, so the per-arrival collision odds scale like
+``(capacity-1)·(K-1)/(K·N)``.  The paper's DPU races are instantaneous
+RMW interleavings at N=5450 slots; to land in the same ~1% conflict
+regime at the reduced N≈80 the paper-faithful training row uses
+``ring_capacity=2`` (~1.1% collisions); a second row at capacity 4
+(~3.4%) shows how quickly the loss grows once the race window widens
+beyond the paper's regime, and the agg sweep takes the knob to
+far-beyond-paper stress levels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_cnn import CNNConfig
+from repro.core.fedavg import FedAvgConfig, ModelFns, _local_update
+from repro.core.packets import PacketizedShape, flatten_pytree, loss_mask, \
+    packetize, unflatten_pytree
+from repro.core.server import EngineConfig, make_uplink_stream, \
+    run_engine_round
+from repro.data.federated import partition_iid
+from repro.data.synthetic import synthetic_image_classification
+from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+
+PAYLOAD = 64                 # device-chunk payload for the reduced runs
+LOSS_RATE = 0.0468           # the paper's measured DPDK downlink loss
+DUP_RATE = 0.02
+
+
+def aggregation_error_rows(seed: int = 0):
+    """Single-round |approx - exact| per race-window (ring capacity)."""
+    rng = np.random.default_rng(seed)
+    K, P = 10, 8192
+    flats = jnp.asarray(rng.normal(size=(K, P)).astype(np.float32))
+    prev = jnp.zeros((P,), jnp.float32)
+    pk = jax.vmap(lambda f: packetize(f, PAYLOAD))(flats)
+    events, _ = make_uplink_stream(rng, pk, loss_rate=LOSS_RATE,
+                                   dup_rate=DUP_RATE)
+    exact = run_engine_round(
+        EngineConfig(n_clients=K, n_params=P, payload=PAYLOAD),
+        flats, prev, events)
+    out = []
+    for assign in ("rr", "slot"):
+        for cap in (1, 16, 64, 256):
+            approx = run_engine_round(
+                EngineConfig(n_clients=K, n_params=P, payload=PAYLOAD,
+                             ring_capacity=cap, mode="approx",
+                             ring_assign=assign),
+                flats, prev, events)
+            err = float(
+                jnp.linalg.norm(approx.new_global - exact.new_global)
+                / jnp.maximum(jnp.linalg.norm(exact.new_global), 1e-12))
+            out.append((f"fig8acc_agg_{assign}_ring{cap}", 0.0,
+                        f"rel_l2_vs_exact={err:.4e};"
+                        f"batches={approx.stats.batches_drained}"))
+    return out
+
+
+def _train_with_engine(mode: str, ring_capacity: int, rounds: int,
+                       seed: int = 0):
+    """Reduced-CNN FedAvg with the packet-path engine as the server.
+
+    Mirrors run_fedavg's loop, but each round's aggregation consumes a
+    freshly generated lossy/duplicated/out-of-order packet stream via
+    run_engine_round instead of calling fused_round_step.
+    """
+    cnn = CNNConfig(image_size=8, conv_channels=(8, 16, 16, 16),
+                    fc_hidden=32)
+    data_rng = np.random.default_rng(seed)
+    train = synthetic_image_classification(data_rng, 640, image_size=8)
+    test = synthetic_image_classification(data_rng, 256, image_size=8)
+    clients = partition_iid(train, 10, seed=seed)
+    fns = ModelFns(
+        init=lambda r: init_cnn(r, cnn),
+        loss=lambda p, b, r: cnn_loss(p, b, cnn, dropout_rng=r),
+        test_metrics=lambda p, d: {
+            "test_loss": cnn_loss(p, d, cnn, train=False),
+            "test_acc": cnn_accuracy(p, d, cnn)},
+    )
+    cfg = FedAvgConfig(n_clients=10, rounds=rounds, local_epochs=1,
+                       batch_size=32, lr=0.05, seed=seed)
+
+    rng = jax.random.PRNGKey(seed)
+    rng, init_rng = jax.random.split(rng)
+    flat0, handle = flatten_pytree(fns.init(init_rng))
+    P = flat0.shape[0]
+    pshape = PacketizedShape(P, PAYLOAD)
+    K = cfg.n_clients
+    client_flats = jnp.tile(flat0[None], (K, 1))
+    server_flat = flat0
+    local_update = _local_update(fns, cfg)
+
+    @jax.jit
+    def train_all(flats, rngs):
+        def one(flat, data, r):
+            params = unflatten_pytree(flat, handle)
+            out, _ = flatten_pytree(local_update(params, data, r))
+            return out
+        return jax.vmap(one)(flats, clients, rngs)
+
+    stream_rng = np.random.default_rng(seed + 1)
+    ecfg = EngineConfig(n_clients=K, n_params=P, payload=PAYLOAD,
+                        ring_capacity=ring_capacity, mode=mode)
+    history = {"test_loss": [], "test_acc": []}
+    for t in range(rounds):
+        rng, r_tr, r_dn = jax.random.split(rng, 3)
+        client_flats = train_all(client_flats,
+                                 jax.random.split(r_tr, K))
+        pk = jax.vmap(lambda f: packetize(f, PAYLOAD))(client_flats)
+        events, _ = make_uplink_stream(stream_rng, pk, loss_rate=LOSS_RATE,
+                                       dup_rate=DUP_RATE)
+        down = loss_mask(r_dn, K, pshape.n_packets, LOSS_RATE)
+        res = run_engine_round(ecfg, client_flats, server_flat, events,
+                               down_mask=down)
+        server_flat, client_flats = res.new_global, res.new_client_flats
+        metrics = fns.test_metrics(unflatten_pytree(server_flat, handle),
+                                   test)
+        for k, v in metrics.items():
+            history[k].append(float(v))
+    return history
+
+
+def rows(rounds: int = 6):
+    out = aggregation_error_rows()
+    hist = {}
+    for name, mode, cap in [("exact", "exact", 2),
+                            ("approx", "approx", 2),
+                            ("approx_wide", "approx", 4)]:
+        hist[name] = _train_with_engine(mode, cap, rounds)
+        out.append((f"fig8acc_train_{name}", 0.0,
+                    f"final_test_loss={hist[name]['test_loss'][-1]:.4f};"
+                    f"final_acc={hist[name]['test_acc'][-1]:.3f};"
+                    f"ring_capacity={cap}"))
+    for name, tag in [("approx", "paper_regime"), ("approx_wide", "stress")]:
+        d_acc = (hist["exact"]["test_acc"][-1] - hist[name]["test_acc"][-1])
+        d_loss = abs(hist["exact"]["test_loss"][-1]
+                     - hist[name]["test_loss"][-1])
+        out.append((f"fig8acc_delta_{tag}", 0.0,
+                    f"acc_drop={d_acc:+.4f};|loss_delta|={d_loss:.4f} "
+                    f"(paper §5.3: negligible loss)"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")

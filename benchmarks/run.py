@@ -3,7 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV:
   fig6_*  server response time, 6 variants (paper Fig. 6)
   fig7_*  server execution breakdown (paper Fig. 7)
-  fig8_*  convergence of the 6 variants (paper Fig. 8)
+  fig8_*  convergence of the 6 variants (paper Fig. 8, analytic race model)
+  fig8acc_*  exact-vs-approx accuracy through the executable packet engine
   agg_*   measured aggregation throughput on this machine (§5.2 analogue)
   roofline_*  per (arch x shape x mesh) from the dry-run artifacts
 """
@@ -19,11 +20,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 def main() -> None:
     from benchmarks import (agg_throughput, fig6_response_time,
-                            fig7_breakdown, fig8_convergence, roofline)
+                            fig7_breakdown, fig8_accuracy, fig8_convergence,
+                            roofline)
     sections = [
         ("fig6", fig6_response_time.rows),
         ("fig7", fig7_breakdown.rows),
         ("fig8", fig8_convergence.rows),
+        ("fig8acc", fig8_accuracy.rows),
         ("agg", agg_throughput.rows),
         ("roofline", roofline.rows),
     ]

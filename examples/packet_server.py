@@ -1,0 +1,72 @@
+"""The packet-path server engine in 30 seconds on CPU.
+
+Builds one round of the paper's uplink as a real packet stream — lossy,
+out-of-order, duplicated, framed by START/END control packets — and
+drives it through the ring-buffered RX → worker → TX engine
+(core/server.py) twice: once as the locked (exact) server and once as
+the lock-free (approximate) server whose racing adds are dropped
+last-writer-wins.  Prints the pipeline stats and verifies the exact
+round is bitwise identical to the one-shot ``fused_round_step``.
+
+Run:  PYTHONPATH=src python examples/packet_server.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import fused_round_step
+from repro.core.packets import packetize
+from repro.core.server import (EngineConfig, make_uplink_stream,
+                               run_engine_round)
+
+
+def main():
+    K, P, W = 10, 4096, 64
+    rng = np.random.default_rng(0)
+    # integer-valued params make f32 sums order-independent, so the
+    # engine/fused comparison below is exact to the bit
+    client_flats = jnp.asarray(rng.integers(-8, 9, (K, P))
+                               .astype(np.float32))
+    prev_global = jnp.zeros((P,), jnp.float32)
+    pk = jax.vmap(lambda f: packetize(f, W))(client_flats)
+
+    events, up_mask = make_uplink_stream(rng, pk, loss_rate=0.0468,
+                                         dup_rate=0.05)
+    down_mask = jnp.asarray((rng.random((K, pk.shape[1])) > 0.0468)
+                            .astype(np.float32))
+    print(f"round: {K} clients x {pk.shape[1]} packets of {W} floats, "
+          f"{len(events) - 2 * K} DATA packets on the wire "
+          f"(4.68% loss, 5% duplication, shuffled)")
+
+    for mode, cap in [("exact", 64), ("approx", 64)]:
+        cfg = EngineConfig(n_clients=K, n_params=P, payload=W,
+                           ring_capacity=cap, mode=mode)
+        res = run_engine_round(cfg, client_flats, prev_global, events,
+                               down_mask=down_mask)
+        s = res.stats
+        print(f"\n== {mode} server ==")
+        print(f"  rx: {s.data_enqueued} unique packets ringed, "
+              f"{s.duplicates_dropped} duplicates dropped at RX, "
+              f"{s.control_replies} control replies")
+        print(f"  workers: {s.batches_drained} ring batches "
+              f"scatter-accumulated")
+        print(f"  slots delivered: "
+              f"{int(jnp.sum(res.counts > 0))}/{res.counts.shape[0]}")
+        if mode == "exact":
+            _, ng, cnt = fused_round_step(client_flats, up_mask, down_mask,
+                                          prev_global, W, mode="exact")
+            same = np.array_equal(np.asarray(res.new_global),
+                                  np.asarray(ng))
+            print(f"  bitwise identical to fused_round_step: {same}")
+            assert same and np.array_equal(np.asarray(res.counts),
+                                           np.asarray(cnt))
+            exact_global = res.new_global
+        else:
+            err = float(jnp.linalg.norm(res.new_global - exact_global)
+                        / jnp.linalg.norm(exact_global))
+            print(f"  lock-free lost-update error vs exact: "
+                  f"rel_l2={err:.3e} (ring capacity = race window)")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,8 +6,11 @@
 3. Exact (locked) vs approximated (lock-free) servers are compared —
    the paper's Fig. 8 in miniature.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--rounds N]
+(--rounds 1 is the CI smoke configuration.)
 """
+import argparse
+
 import numpy as np
 
 from repro.configs.paper_cnn import CNNConfig
@@ -18,6 +21,9 @@ from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
 
 
 def main():
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--rounds", type=int, default=8)
+    args = parser.parse_args()
     cnn = CNNConfig(image_size=16, conv_channels=(16, 32, 32, 32),
                     fc_hidden=64)
     rng = np.random.default_rng(0)
@@ -39,8 +45,8 @@ def main():
          dict(agg_mode="approx", conflict_rate=0.005,
               downlink_loss=0.0468)),
     ]:
-        cfg = FedAvgConfig(n_clients=10, rounds=8, batch_size=64, lr=0.05,
-                           **kw)
+        cfg = FedAvgConfig(n_clients=10, rounds=args.rounds, batch_size=64,
+                           lr=0.05, **kw)
         hist = run_fedavg(fns, clients, test, cfg)
         print(f"\n== {label} ==")
         for r, (tl, ta) in enumerate(zip(hist["test_loss"],

@@ -9,7 +9,7 @@ and the downlink; the downlink fallback keeps the client's local value
 for packets that never arrived (paper §3.1).  The whole server step —
 masking, aggregation, count-fallback, downlink fallback — runs through
 ``aggregation.fused_round_step`` on flat (K, P) client state, so no
-(K, N, W) copy of the global is ever materialized (DESIGN.md §3).
+(K, N, W) copy of the global is ever materialized (DESIGN.md §4).
 
 Per-FedAvg / APFL-style client updates (paper §2.1.2) are supported via
 ``mix_alpha``: clients blend local and global parameters instead of

@@ -100,6 +100,40 @@ class StreamingAggregator:
             self.total, self.counts = _accum_batch_jnp(
                 self.total, self.counts, packets, wmask)
 
+    def scatter_add(self, packets: jnp.ndarray, idx: jnp.ndarray,
+                    weights: Union[float, jnp.ndarray] = 1.0,
+                    mode: str = "exact") -> None:
+        """Fold a drained ring batch of *out-of-order* packets into the
+        state via the scatter-accumulate kernel (kernels/packet_scatter.py).
+
+        packets (B, W) at slot rows idx (B,) — the packet-path server
+        engine (core/server.py) calls this once per drained ring.
+        ``mode="approx"`` is the deterministic lock-free race: within the
+        batch the last writer to a slot wins, counts see every arrival
+        (DESIGN.md §3).
+        """
+        assert self._finalized is None, "aggregator already finalized"
+        w = jnp.broadcast_to(jnp.asarray(weights, jnp.float32),
+                             packets.shape[:1])
+        # pad the ragged batch axis *outside* the jitted kernel wrapper:
+        # every drained-ring length would otherwise be a fresh trace.
+        # idx=-1 matches no slot and weight 0 is inert in sums and counts.
+        from repro.kernels.packet_scatter import BLOCK_PKTS
+        pad = (-packets.shape[0]) % BLOCK_PKTS
+        if pad:
+            packets = jnp.pad(packets, ((0, pad), (0, 0)))
+            idx = jnp.pad(idx.astype(jnp.int32), (0, pad),
+                          constant_values=-1)
+            w = jnp.pad(w, (0, pad))
+        if self.use_kernel:
+            from repro.kernels import ops
+            self.total, self.counts = ops.packet_scatter_accum(
+                packets, idx, self.total, self.counts, weights=w, mode=mode)
+        else:
+            from repro.kernels import ref
+            self.total, self.counts = ref.packet_scatter_accum_ref(
+                packets, idx, self.total, self.counts, weights=w, mode=mode)
+
     def finalize(self) -> jnp.ndarray:
         if self._finalized is None:
             self._finalized = _finalize(self.total, self.counts)

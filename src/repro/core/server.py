@@ -1,0 +1,262 @@
+"""Ring-buffered packet-path server round engine (paper §3.2, §4).
+
+The paper's DPDK server is a three-stage pipeline: one RX core polls the
+NIC and demultiplexes packets onto per-worker rings, N worker cores
+drain their rings and add payloads into a shared accumulator, and a TX
+core streams the averaged global parameters back out.  ``ServerEngine``
+is the executable counterpart of that pipeline for this repo: it
+consumes an interleaved multi-client stream of ``core.protocol.Packet``
+events — lossy, out-of-order, duplicated — and drives the device-side
+scatter-accumulate (kernels/packet_scatter.py) through a
+``StreamingAggregator`` once per drained ring batch.
+
+Semantics (DESIGN.md §3):
+
+- **RX** answers control packets through the per-round ``ServerFSM`` and
+  deduplicates DATA packets against the FSM's uplink sets (UDP may
+  duplicate; the wire index makes re-delivery idempotent), so the
+  engine's per-slot arrival counts equal the protocol-level counts for
+  *any* loss/duplication pattern.
+- **Workers** drain a ring when it reaches capacity; each drained batch
+  is one scatter-accumulate call.  ``mode="exact"`` adds every arrival
+  (the locked server); ``mode="approx"`` is the paper's lock-free race
+  made deterministic — within a batch the last writer to a slot wins and
+  the ring capacity is the race window.
+- **END** triggers the count-normalized divide (the existing
+  ``StreamingAggregator.finalize``), with per-packet fallback to the
+  previous global for slots nobody delivered (§3.2.2) — bitwise the same
+  dataflow as ``aggregation.fused_round_step``.
+- **TX** applies the downlink mask with the client-side fallback (§3.1):
+  elements of packets lost on the way down stay at the client's local
+  value.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import expand_packet_mask
+from repro.core.packets import PacketizedShape, depacketize
+from repro.core.pipeline import StreamingAggregator
+from repro.core.protocol import Kind, Packet, ServerFSM, ServerPhase
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Shape + pipeline topology of one server round (paper Table 1)."""
+    n_clients: int
+    n_params: int
+    payload: int                       # floats per packet (wire: 367)
+    n_workers: int = 5                 # paper: 1 RX + 5 workers + 1 TX
+    ring_capacity: int = 64            # worker ring depth == race window
+    mode: str = "exact"                # exact | approx
+    ring_assign: str = "rr"            # rr | slot (see ServerEngine.rx)
+    use_kernel: bool = True            # False: sequential host oracle
+
+    @property
+    def n_slots(self) -> int:
+        return PacketizedShape(self.n_params, self.payload).n_packets
+
+
+@dataclasses.dataclass
+class EngineStats:
+    data_enqueued: int = 0             # unique DATA packets ringed
+    duplicates_dropped: int = 0        # RX-level dedup hits
+    batches_drained: int = 0           # scatter-accumulate calls
+    control_replies: int = 0           # START_ACK / END_ACK emitted
+
+
+@dataclasses.dataclass
+class RoundResult:
+    new_global: jnp.ndarray            # (P,) count-normalized global
+    counts: jnp.ndarray                # (N,) per-slot weighted arrivals
+    up_mask: jnp.ndarray               # (K, N) deduplicated arrival mask
+    new_client_flats: Optional[jnp.ndarray]   # (K, P) after downlink
+    stats: EngineStats
+
+
+class ServerEngine:
+    """One round of the RX → N-worker → TX pipeline.
+
+    Feed packets with :meth:`rx` (payload rows ride alongside DATA
+    packets — the 4-byte wire index is ``Packet.index``), then
+    :meth:`finalize_round` runs the END divide and :meth:`distribute`
+    the TX/downlink step.
+    """
+
+    def __init__(self, cfg: EngineConfig,
+                 weights: Optional[jnp.ndarray] = None):
+        self.cfg = cfg
+        self.fsm = ServerFSM(cfg.n_clients, cfg.n_slots)
+        self.agg = StreamingAggregator(cfg.n_slots, cfg.payload,
+                                       use_kernel=cfg.use_kernel)
+        self.weights = (np.ones(cfg.n_clients, np.float32) if weights is None
+                        else np.asarray(weights, np.float32))
+        # per-worker rings of (slot, weight, payload-row).  ``rr`` demux
+        # (default) spreads arrivals round-robin like the paper's RX
+        # core, so same-slot packets rarely share a drain batch and the
+        # approx-mode race stays incidental; ``slot`` demux pins every
+        # slot to one worker, making same-slot collisions maximal — a
+        # race stress mode, not the paper topology.
+        self._rings: List[List[Tuple[int, float, np.ndarray]]] = \
+            [[] for _ in range(cfg.n_workers)]
+        self._rr_next = 0
+        self.stats = EngineStats()
+
+    # -- RX core --------------------------------------------------------------
+    def rx(self, packet: Packet, payload=None) -> List[Packet]:
+        """Process one arriving packet; returns control replies.
+
+        DATA packets must carry their payload row (W,).  Duplicates —
+        same (client, index) seen before — are dropped here, mirroring
+        the set semantics of ``ServerFSM.uplink``.
+        """
+        if packet.kind != Kind.DATA:
+            replies = self.fsm.on_packet(packet)
+            self.stats.control_replies += len(replies)
+            return replies
+        c, slot = packet.client, packet.index
+        if self.fsm.phase[c] != ServerPhase.RECV_PARAMS or \
+                slot in self.fsm.uplink[c]:
+            self.stats.duplicates_dropped += slot in self.fsm.uplink[c]
+            return []
+        assert payload is not None, "DATA packet without payload"
+        self.fsm.on_packet(packet)               # records the arrival
+        if self.cfg.ring_assign == "slot":
+            worker = slot % self.cfg.n_workers
+        else:
+            worker = self._rr_next
+            self._rr_next = (self._rr_next + 1) % self.cfg.n_workers
+        ring = self._rings[worker]
+        ring.append((slot, float(self.weights[c]),
+                     np.asarray(payload, np.float32)))
+        self.stats.data_enqueued += 1
+        if len(ring) >= self.cfg.ring_capacity:
+            self._drain(worker)
+        return []
+
+    # -- worker cores ---------------------------------------------------------
+    def _drain(self, worker: int) -> None:
+        ring = self._rings[worker]
+        if not ring:
+            return
+        self._rings[worker] = []
+        idx = jnp.asarray(np.array([s for s, _, _ in ring], np.int32))
+        w = jnp.asarray(np.array([wt for _, wt, _ in ring], np.float32))
+        payloads = jnp.asarray(np.stack([p for _, _, p in ring]))
+        self.agg.scatter_add(payloads, idx, weights=w, mode=self.cfg.mode)
+        self.stats.batches_drained += 1
+
+    def flush(self) -> None:
+        """Drain every ring (the workers' post-END cleanup pass)."""
+        for wkr in range(self.cfg.n_workers):
+            self._drain(wkr)
+
+    # -- END: count-normalized divide ----------------------------------------
+    def finalize_round(self, prev_global: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(prev_global (P,)) -> (new_global (P,), counts (N,)).
+
+        Slots with count 0 (nobody delivered the packet) keep the
+        previous round's global value — the same count-fallback
+        ``fused_round_step`` applies.
+        """
+        self.flush()
+        avg = self.agg.finalize()                        # (N, W)
+        agg_flat = depacketize(avg, self.cfg.n_params)   # (P,)
+        have = expand_packet_mask(self.agg.counts > 0, self.cfg.payload,
+                                  self.cfg.n_params)
+        new_global = jnp.where(have, agg_flat, prev_global)
+        return new_global, self.agg.counts
+
+    # -- TX core: downlink with client fallback ------------------------------
+    def distribute(self, new_global: jnp.ndarray, client_flats: jnp.ndarray,
+                   down_mask: jnp.ndarray,
+                   mix_alpha: float = 0.0) -> jnp.ndarray:
+        """new_global (P,); client_flats (K, P); down_mask (K, N) ->
+        (K, P) client state after the downlink (lost elements stay
+        local; optional APFL-style blend)."""
+        down_elem = expand_packet_mask(down_mask, self.cfg.payload,
+                                       self.cfg.n_params)
+        new_flats = jnp.where(down_elem > 0, new_global[None, :],
+                              client_flats)
+        if mix_alpha > 0:
+            new_flats = mix_alpha * client_flats + (1 - mix_alpha) * new_flats
+        return new_flats
+
+    def up_mask(self) -> jnp.ndarray:
+        """(K, N) deduplicated protocol-level arrival mask."""
+        m = np.zeros((self.cfg.n_clients, self.cfg.n_slots), np.float32)
+        for c, got in enumerate(self.fsm.uplink):
+            for s in got:
+                m[c, s] = 1.0
+        return jnp.asarray(m)
+
+
+# ---------------------------------------------------------------------------
+# Stream generation: lossy / out-of-order / duplicated uplink traffic
+# ---------------------------------------------------------------------------
+
+def make_uplink_stream(rng: np.random.Generator, client_pk: jnp.ndarray,
+                       *, loss_rate: float = 0.0, dup_rate: float = 0.0,
+                       shuffle: bool = True
+                       ) -> Tuple[list, jnp.ndarray]:
+    """Build one round's interleaved uplink from packetized client state.
+
+    client_pk (K, N, W).  Each DATA packet is dropped with probability
+    ``loss_rate``; each survivor is duplicated with probability
+    ``dup_rate``; delivery order is shuffled across clients and packets
+    (UDP reordering).  START frames precede all data, END frames follow
+    (the FSM only accepts DATA between them).
+
+    Returns (events, up_mask): events is a list of ``(Packet, payload)``
+    pairs consumable by :meth:`ServerEngine.rx`; up_mask (K, N) marks
+    packets that arrived at least once — by construction also the
+    engine's post-dedup arrival mask.
+    """
+    K, N, _ = client_pk.shape
+    pk_host = np.asarray(client_pk)
+    events = [(Packet(Kind.START, c), None) for c in range(K)]
+    data = []
+    up = np.zeros((K, N), np.float32)
+    for c in range(K):
+        for n in range(N):
+            if rng.random() < loss_rate:
+                continue
+            up[c, n] = 1.0
+            copies = 1 + (rng.random() < dup_rate)
+            for _ in range(copies):
+                data.append((Packet(Kind.DATA, c, n), pk_host[c, n]))
+    if shuffle:
+        rng.shuffle(data)
+    events += data
+    events += [(Packet(Kind.END, c), None) for c in range(K)]
+    return events, jnp.asarray(up)
+
+
+def run_engine_round(cfg: EngineConfig, client_flats: jnp.ndarray,
+                     prev_global: jnp.ndarray, events: Iterable,
+                     down_mask: Optional[jnp.ndarray] = None,
+                     weights: Optional[jnp.ndarray] = None,
+                     mix_alpha: float = 0.0) -> RoundResult:
+    """Drive one full round: RX the event stream, divide at END, TX.
+
+    client_flats (K, P) is only used for the downlink fallback; the
+    uplink payloads travel inside ``events`` (see make_uplink_stream).
+    With integer-valued payloads the exact-mode result is bitwise
+    identical to ``aggregation.fused_round_step`` on ``up_mask()`` /
+    ``down_mask`` (tests/test_server_engine.py).
+    """
+    engine = ServerEngine(cfg, weights=weights)
+    for packet, payload in events:
+        engine.rx(packet, payload)
+    new_global, counts = engine.finalize_round(prev_global)
+    new_flats = None
+    if down_mask is not None:
+        new_flats = engine.distribute(new_global, client_flats, down_mask,
+                                      mix_alpha=mix_alpha)
+    return RoundResult(new_global, counts, engine.up_mask(), new_flats,
+                       engine.stats)

@@ -16,7 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.fedavg_accum import fedavg_accum_pallas
-from repro.kernels.packet_scatter import packet_scatter_pallas
+from repro.kernels.packet_scatter import (BLOCK_PKTS,
+                                          packet_scatter_accum_pallas,
+                                          packet_scatter_pallas)
 from repro.kernels.quantized_accum import quantized_accum_pallas
 
 
@@ -80,7 +82,46 @@ def quantized_accum(q, scales, wmask, block_clients: int = 8,
 
 
 @functools.partial(jax.jit, static_argnames=("n_slots",))
-def packet_scatter(packets, idx, n_slots: int):
-    """Place packets (N, W) at rows idx (N,) of a fresh (n_slots, W) buffer."""
-    return packet_scatter_pallas(packets, idx, n_slots,
+def packet_scatter(packets, idx, n_slots: int, init=None):
+    """Place packets (N, W) at rows idx (N,) of a (n_slots, W) buffer.
+
+    ``init`` (default zeros) is aliased onto the output: uncovered rows
+    keep its contents; duplicated idx resolve last-writer-wins.
+    """
+    return packet_scatter_pallas(packets, idx, n_slots, init=init,
                                  interpret=_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "block_slots", "block_pkts"))
+def packet_scatter_accum(packets, idx, acc, counts, weights=None,
+                         mode: str = "exact", block_slots: int = 8,
+                         block_pkts: int = BLOCK_PKTS):
+    """Scatter-accumulate a drained ring batch into live (acc, counts).
+
+    packets (N, W) at slot rows idx (N,) int32; acc (S, W) f32; counts
+    (S,) f32; weights (N,) optional per-arrival FedAvg weights.  Returns
+    (acc', counts').  ``mode="exact"`` adds every arrival; ``"approx"``
+    is the deterministic lock-free race: within this batch the last
+    writer to a slot wins against the call-entry snapshot, while counts
+    still see every arrival (DESIGN.md §3).  Ring padding is expressed
+    as idx=-1 / weight=0 and is inert in both sums and counts.
+    """
+    if mode not in ("exact", "approx"):
+        raise ValueError(mode)
+    N, W = packets.shape
+    S = counts.shape[0]
+    if weights is None:
+        weights = jnp.ones((N,), jnp.float32)
+    # pad the batch axis with idx=-1 (matches no slot) / weight 0
+    pad_n = (-N) % block_pkts
+    if pad_n:
+        packets = jnp.pad(packets, ((0, pad_n), (0, 0)))
+        idx = jnp.pad(idx.astype(jnp.int32), (0, pad_n), constant_values=-1)
+        weights = jnp.pad(weights, (0, pad_n))
+    acc2, cnt2 = _pad_axis([acc, counts[:, None]], S, block_slots, 0)
+    acc_out, cnt_out = packet_scatter_accum_pallas(
+        packets, idx, weights, acc2, cnt2, exact=(mode == "exact"),
+        block_slots=block_slots, block_pkts=block_pkts,
+        interpret=_interpret())
+    return acc_out[:S], cnt_out[:S, 0]

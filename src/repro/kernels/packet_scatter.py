@@ -1,44 +1,188 @@
-"""Pallas TPU kernel: out-of-order packet placement via scalar prefetch.
+"""Pallas TPU kernels for the packet path: placement and scatter-accumulate.
 
 UDP packets arrive out of order; the paper prefixes each payload with a
 4-byte index so the server can place it at the right offset of the flat
-parameter buffer (§4.1).  On TPU the destination indices are
-scalar-prefetched (SMEM) so the *output* BlockSpec of each grid step is
-data-dependent: packet block i DMAs straight to row ``idx[i]`` of the
-output — placement happens in the DMA engine, no gather/scatter HLO.
+parameter buffer (§4.1).  Two kernels cover the two server designs:
+
+``packet_scatter_pallas``
+    Pure *placement*: scalar-prefetched destination indices make the
+    output BlockSpec of each grid step data-dependent, so packet block i
+    DMAs straight to row ``idx[i]`` of the output — placement happens in
+    the DMA engine, no gather/scatter HLO.  The destination buffer is
+    passed in and aliased onto the output, so rows no packet covers keep
+    their previous contents (the paper's server reuses the parameter
+    buffer across rounds) and duplicated indices resolve last-writer-wins
+    in grid order.
+
+``packet_scatter_accum_pallas``
+    The worker loop (§3.2.2): a drained ring batch of packets is *added*
+    into a live ``(n_slots, W)`` accumulator with per-slot arrival
+    counts.  The grid is (slot-block, packet-block) with the packet sweep
+    innermost; the accumulator block is revisited across the sweep and
+    carries the running sum in VMEM (DESIGN.md §3).  Packets are routed
+    by a one-hot (slot × packet) matrix multiply, so the scatter runs on
+    the MXU instead of serializing per-packet stores.  Two modes:
+
+    - ``exact``  : every arrival adds (duplicates add twice) — the
+      paper's server *with* exclusive access control.
+    - ``approx`` : the lock-free race, made deterministic: every writer
+      reads the accumulator snapshot taken at call entry, and when
+      several packets in the batch hit the same slot only the last
+      write survives (last-writer-wins); counts still see every
+      arrival, reproducing the lost-update bias of §3.2/§4.
+
+Both kernels run under ``interpret=True`` on CPU (how CI validates
+them); on TPU they compile through Mosaic.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# default packet-block size; callers that pre-pad ragged batches (e.g.
+# StreamingAggregator.scatter_add) must pad to a multiple of this so the
+# jitted wrapper sees few distinct shapes
+BLOCK_PKTS = 128
 
-def _packet_scatter_kernel(idx_ref, pkt_ref, out_ref):
+
+def _packet_scatter_kernel(idx_ref, pkt_ref, init_ref, out_ref):
+    del idx_ref, init_ref     # idx is consumed by the BlockSpec index maps
     out_ref[...] = pkt_ref[...]
 
 
 def packet_scatter_pallas(packets: jnp.ndarray, idx: jnp.ndarray,
-                          n_slots: int, *, interpret: bool = False):
-    """packets (N, W); idx (N,) int32 destination rows (unique, < n_slots).
+                          n_slots: int, *,
+                          init: jnp.ndarray | None = None,
+                          interpret: bool = False):
+    """packets (N, W); idx (N,) int32 destination rows (< n_slots).
 
-    Returns (n_slots, W) with row idx[n] = packets[n]; untouched rows are
-    whatever the paper's server memsets them to — zeros here (delivered
-    via input_output_aliasing on a zeroed operand would be the production
-    path; for clarity we allocate fresh output and rely on unique full
-    coverage in tests, padding otherwise).
+    Returns (n_slots, W) with row ``idx[n] = packets[n]``.  ``init`` is
+    the destination buffer (zeros when omitted): it is aliased onto the
+    output, so rows not covered by ``idx`` keep their ``init`` contents
+    and no fresh zero-fill pass runs.  Duplicated indices are
+    last-writer-wins in packet order (the later grid step's DMA lands
+    last).
     """
     N, W = packets.shape
+    if init is None:
+        init = jnp.zeros((n_slots, W), packets.dtype)
+    # init rides along only to donate its buffer (input_output_aliases);
+    # its block is never read, so a constant index map lets Pallas fetch
+    # it once instead of one discarded (1, W) DMA per packet
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(N,),
-        in_specs=[pl.BlockSpec((1, W), lambda i, idx_ref: (i, 0))],
+        in_specs=[pl.BlockSpec((1, W), lambda i, idx_ref: (i, 0)),
+                  pl.BlockSpec((1, W), lambda i, idx_ref: (0, 0))],
         out_specs=pl.BlockSpec((1, W), lambda i, idx_ref: (idx_ref[i], 0)),
     )
     return pl.pallas_call(
         _packet_scatter_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_slots, W), packets.dtype),
+        # operand indices count the scalar-prefetch arg: 0=idx, 1=packets
+        input_output_aliases={2: 0},
         interpret=interpret,
-    )(idx.astype(jnp.int32), packets)
+    )(idx.astype(jnp.int32), packets, init.astype(packets.dtype))
+
+
+def _scatter_accum_kernel(idx_ref, w_ref, pkt_ref, acc_in_ref, cnt_in_ref,
+                          acc_ref, cnt_ref, *, exact: bool):
+    """idx/w (1, BN); pkt (BN, W); acc blocks (BS, W); cnt blocks (BS, 1).
+
+    The acc/cnt output blocks are revisited across the (innermost)
+    packet-block dimension: copied from the live accumulator at the first
+    packet block, then updated in VMEM for the rest of the sweep.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _load_accumulator():
+        acc_ref[...] = acc_in_ref[...]
+        cnt_ref[...] = cnt_in_ref[...]
+
+    BS = acc_ref.shape[0]
+    base = pl.program_id(0) * BS
+    rows = jax.lax.broadcasted_iota(jnp.int32, (BS, 1), 0) + base
+    hits = idx_ref[...] == rows                       # (BS, BN) bool
+    w = w_ref[...]                                    # (1, BN) f32
+    whot = hits.astype(jnp.float32) * w               # weighted one-hot
+    # the divisor sees every arrival, in both modes (§3.2.2 count rule)
+    cnt_ref[...] += jnp.sum(whot, axis=1, keepdims=True)
+
+    pkt = pkt_ref[...].astype(jnp.float32)
+    if exact:
+        acc_ref[...] += jnp.dot(whot, pkt,
+                                preferred_element_type=jnp.float32)
+    else:
+        # Lock-free race, deterministic form: each writer reads the
+        # call-entry snapshot (acc_in), so of all batch packets hitting a
+        # slot only the last write survives — earlier adds are lost, the
+        # paper's lost-update bias.
+        valid = hits & (w > 0)
+        colpos = jax.lax.broadcasted_iota(jnp.int32, valid.shape, 1) + 1
+        lastcol = jnp.max(jnp.where(valid, colpos, 0), axis=1,
+                          keepdims=True)              # (BS, 1); 0 = no hit
+        lasthot = (colpos == lastcol) & valid
+        contrib = jnp.dot(lasthot.astype(jnp.float32) * w, pkt,
+                          preferred_element_type=jnp.float32)
+        acc_ref[...] = jnp.where(lastcol > 0, acc_in_ref[...] + contrib,
+                                 acc_ref[...])
+
+
+def packet_scatter_accum_pallas(packets: jnp.ndarray, idx: jnp.ndarray,
+                                weights: jnp.ndarray, acc: jnp.ndarray,
+                                counts: jnp.ndarray, *,
+                                exact: bool = True,
+                                block_slots: int = 8,
+                                block_pkts: int = BLOCK_PKTS,
+                                interpret: bool = False):
+    """Scatter-accumulate one drained batch into a live accumulator.
+
+    packets (N, W); idx (N,) int32 slot rows — entries with ``idx < 0``
+    (ring padding) never match a slot; weights (N,) f32 per-arrival
+    FedAvg weights (0 disables a packet entirely); acc (S, W) f32 and
+    counts (S, 1) f32 are the live accumulator state.
+
+    Returns (acc', counts').  N must be a multiple of ``block_pkts`` and
+    S of ``block_slots`` (ops.py pads: packets with idx=-1, w=0; slots
+    with zero rows).  Contract (DESIGN.md §3): slots no packet hits keep
+    their accumulator value; duplicates add in ``exact`` mode and
+    resolve last-writer-wins against the call-entry snapshot in
+    ``approx`` mode, while counts always see every weighted arrival.
+    """
+    N, W = packets.shape
+    S = acc.shape[0]
+    assert N % block_pkts == 0, (N, block_pkts)
+    assert S % block_slots == 0, (S, block_slots)
+    n_pkt_blocks = N // block_pkts
+    idx2d = idx.astype(jnp.int32).reshape(n_pkt_blocks, block_pkts)
+    w2d = weights.astype(jnp.float32).reshape(n_pkt_blocks, block_pkts)
+    grid = (S // block_slots, n_pkt_blocks)
+    kernel = functools.partial(_scatter_accum_kernel, exact=exact)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_pkts), lambda s, j: (j, 0)),
+            pl.BlockSpec((1, block_pkts), lambda s, j: (j, 0)),
+            pl.BlockSpec((block_pkts, W), lambda s, j: (j, 0)),
+            pl.BlockSpec((block_slots, W), lambda s, j: (s, 0)),
+            pl.BlockSpec((block_slots, 1), lambda s, j: (s, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_slots, W), lambda s, j: (s, 0)),
+            pl.BlockSpec((block_slots, 1), lambda s, j: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, W), jnp.float32),
+            jax.ShapeDtypeStruct((S, 1), jnp.float32),
+        ],
+        input_output_aliases={3: 0, 4: 1},
+        interpret=interpret,
+    )(idx2d, w2d, packets, acc.astype(jnp.float32),
+      counts.astype(jnp.float32))

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def fedavg_accum_ref(packets: jnp.ndarray, wmask: jnp.ndarray):
@@ -21,6 +22,40 @@ def quantized_accum_ref(q: jnp.ndarray, scales: jnp.ndarray,
     return fedavg_accum_ref(deq, wmask)
 
 
-def packet_scatter_ref(packets: jnp.ndarray, idx: jnp.ndarray, n_slots: int):
-    out = jnp.zeros((n_slots, packets.shape[1]), packets.dtype)
-    return out.at[idx].set(packets)
+def packet_scatter_ref(packets: jnp.ndarray, idx: jnp.ndarray, n_slots: int,
+                       init: jnp.ndarray = None):
+    """Sequential-order placement: duplicates last-writer-wins; uncovered
+    rows keep ``init`` (zeros when omitted)."""
+    out = np.array(init) if init is not None else \
+        np.zeros((n_slots, packets.shape[1]), packets.dtype)
+    for i, s in enumerate(np.asarray(idx)):
+        out[s] = np.asarray(packets)[i]
+    return jnp.asarray(out)
+
+
+def packet_scatter_accum_ref(packets, idx, acc, counts, weights=None,
+                             mode: str = "exact"):
+    """Sequential oracle for the scatter-accumulate contract.
+
+    exact: every weighted arrival adds; approx: every writer reads the
+    call-entry snapshot and the last write to a slot wins, while counts
+    see every weighted arrival.
+    """
+    if mode not in ("exact", "approx"):      # same contract as ops.py
+        raise ValueError(mode)
+    pk = np.asarray(packets, np.float32)
+    ix = np.asarray(idx)
+    out = np.array(acc, np.float32)
+    cnt = np.array(counts, np.float32)
+    w = (np.ones(len(ix), np.float32) if weights is None
+         else np.asarray(weights, np.float32))
+    snap = out.copy()
+    for i, s in enumerate(ix):
+        if s < 0:
+            continue
+        cnt[s] += w[i]
+        if mode == "exact":
+            out[s] += w[i] * pk[i]
+        elif w[i] > 0:
+            out[s] = snap[s] + w[i] * pk[i]
+    return jnp.asarray(out), jnp.asarray(cnt)

@@ -134,6 +134,127 @@ def test_padded_chunks_carry_zero_mask():
     np.testing.assert_array_equal(np.asarray(cnts), 4.0)
 
 
+# --- packet placement: aliased init, non-covering, duplicates ---------------
+
+def test_packet_scatter_uncovered_rows_keep_init():
+    """The aliased path: rows no packet covers keep the init buffer."""
+    rng = np.random.default_rng(1)
+    pkts = jnp.asarray(rng.normal(size=(3, 128)).astype(np.float32))
+    init = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+    idx = jnp.asarray([6, 0, 3], jnp.int32)
+    out = np.asarray(ops.packet_scatter(pkts, idx, 8, init))
+    np.testing.assert_array_equal(out[[6, 0, 3]], np.asarray(pkts))
+    untouched = [1, 2, 4, 5, 7]
+    np.testing.assert_array_equal(out[untouched], np.asarray(init)[untouched])
+
+
+def test_packet_scatter_without_init_zero_fills():
+    rng = np.random.default_rng(2)
+    pkts = jnp.asarray(rng.normal(size=(2, 128)).astype(np.float32))
+    out = np.asarray(ops.packet_scatter(pkts, jnp.asarray([1, 3]), 5))
+    np.testing.assert_array_equal(out[[0, 2, 4]], 0.0)
+
+
+def test_packet_scatter_duplicate_idx_last_writer_wins():
+    rng = np.random.default_rng(3)
+    pkts = jnp.asarray(rng.normal(size=(4, 128)).astype(np.float32))
+    idx = jnp.asarray([2, 5, 2, 2], jnp.int32)
+    out = ops.packet_scatter(pkts, idx, 8)
+    expect = ref.packet_scatter_ref(pkts, idx, 8)
+    np.testing.assert_array_equal(np.asarray(out)[2], np.asarray(pkts)[3])
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+# --- scatter-accumulate: the packet-path worker loop ------------------------
+
+def _scatter_case(seed, n=37, w=64, s=23, int_valued=True):
+    rng = np.random.default_rng(seed)
+    draw = (rng.integers(-8, 9, (n, w)) if int_valued
+            else rng.normal(size=(n, w)))
+    pk = jnp.asarray(draw.astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, s, n).astype(np.int32))
+    acc = jnp.asarray(rng.integers(-4, 5, (s, w)).astype(np.float32))
+    cnt = jnp.asarray(rng.integers(0, 3, s).astype(np.float32))
+    wts = jnp.asarray(rng.choice([0.0, 1.0, 2.0], n).astype(np.float32))
+    return pk, idx, acc, cnt, wts
+
+
+@pytest.mark.parametrize("mode", ["exact", "approx"])
+def test_scatter_accum_matches_sequential_oracle(mode):
+    """Duplicates, weights, zero-weight packets, live accumulator —
+    bitwise vs the sequential host oracle on integer payloads."""
+    pk, idx, acc, cnt, wts = _scatter_case(10)
+    a1, c1 = ops.packet_scatter_accum(pk, idx, acc, cnt, weights=wts,
+                                      mode=mode)
+    a2, c2 = ref.packet_scatter_accum_ref(pk, idx, acc, cnt, weights=wts,
+                                          mode=mode)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_scatter_accum_float_payloads_close():
+    pk, idx, acc, cnt, wts = _scatter_case(11, int_valued=False)
+    a1, c1 = ops.packet_scatter_accum(pk, idx, acc, cnt, weights=wts)
+    a2, c2 = ref.packet_scatter_accum_ref(pk, idx, acc, cnt, weights=wts)
+    np.testing.assert_allclose(a1, a2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_scatter_accum_untouched_slots_keep_accumulator():
+    """Non-covering batches leave unhit slots (and their counts) alone."""
+    pk, _, acc, cnt, _ = _scatter_case(12, n=4, s=16)
+    idx = jnp.asarray([3, 3, 9, 0], jnp.int32)
+    a1, c1 = ops.packet_scatter_accum(pk, idx, acc, cnt)
+    unhit = [i for i in range(16) if i not in (0, 3, 9)]
+    np.testing.assert_array_equal(np.asarray(a1)[unhit],
+                                  np.asarray(acc)[unhit])
+    np.testing.assert_array_equal(np.asarray(c1)[unhit],
+                                  np.asarray(cnt)[unhit])
+
+
+def test_scatter_accum_approx_counts_every_arrival():
+    """The lost-update bias: approx drops racing adds from the sum but
+    never from the divisor's counts."""
+    pk, idx, acc, cnt, _ = _scatter_case(13)
+    _, c_exact = ops.packet_scatter_accum(pk, idx, acc, cnt, mode="exact")
+    _, c_approx = ops.packet_scatter_accum(pk, idx, acc, cnt, mode="approx")
+    np.testing.assert_array_equal(np.asarray(c_exact), np.asarray(c_approx))
+
+
+@pytest.mark.parametrize("block_slots,block_pkts", [(4, 32), (16, 256)])
+def test_scatter_accum_block_size_invariance(block_slots, block_pkts):
+    pk, idx, acc, cnt, wts = _scatter_case(14)
+    a1, c1 = ops.packet_scatter_accum(pk, idx, acc, cnt, weights=wts,
+                                      block_slots=block_slots,
+                                      block_pkts=block_pkts)
+    a2, c2 = ops.packet_scatter_accum(pk, idx, acc, cnt, weights=wts)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_scatter_accum_rejects_unknown_mode():
+    pk, idx, acc, cnt, _ = _scatter_case(15, n=2, s=4)
+    with pytest.raises(ValueError):
+        ops.packet_scatter_accum(pk, idx, acc, cnt, mode="racy")
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 40),
+       s=st.integers(1, 30), mode=st.sampled_from(["exact", "approx"]))
+def test_scatter_accum_property(seed, n, s, mode):
+    pk, _, _, _, wts = _scatter_case(seed, n=n, w=32, s=s)
+    rng = np.random.default_rng(seed + 1)
+    idx = jnp.asarray(rng.integers(0, s, n).astype(np.int32))
+    acc = jnp.zeros((s, 32), jnp.float32)
+    cnt = jnp.zeros((s,), jnp.float32)
+    a1, c1 = ops.packet_scatter_accum(pk, idx, acc, cnt, weights=wts,
+                                      mode=mode)
+    a2, c2 = ref.packet_scatter_accum_ref(pk, idx, acc, cnt, weights=wts,
+                                          mode=mode)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
 # --- hypothesis property sweeps ---------------------------------------------
 
 @settings(max_examples=30, deadline=None)

@@ -1,0 +1,188 @@
+"""Packet-path server engine: protocol-level and kernel-level contracts.
+
+The two load-bearing properties (ISSUE acceptance + DESIGN.md §3):
+
+1. For ANY loss/duplication pattern, the engine's per-slot counts equal
+   the protocol-level arrival counts (the deduplicated ServerFSM uplink
+   sets) — RX dedup makes UDP re-delivery idempotent.
+2. In exact mode, the engine's round outputs are bitwise identical to
+   ``aggregation.fused_round_step`` on the same masks (integer-valued
+   payloads make f32 sums order-independent, as in test_kernels.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings, st
+
+from repro.core.aggregation import fused_round_step
+from repro.core.packets import packetize
+from repro.core.server import (EngineConfig, ServerEngine,
+                               make_uplink_stream, run_engine_round)
+from repro.core.protocol import Kind, Packet
+
+
+def _int_flats(rng, k, p):
+    return jnp.asarray(rng.integers(-8, 9, (k, p)).astype(np.float32))
+
+
+def _round_inputs(seed, k=10, p=1000, w=64):
+    rng = np.random.default_rng(seed)
+    flats = _int_flats(rng, k, p)
+    prev = jnp.asarray(rng.integers(-8, 9, p).astype(np.float32))
+    pk = jax.vmap(lambda f: packetize(f, w))(flats)
+    return rng, flats, prev, pk
+
+
+def test_exact_mode_bitwise_matches_fused_round_step():
+    """The acceptance criterion: lossy, out-of-order, duplicated
+    10-client stream -> bitwise-identical globals/counts/client flats."""
+    rng, flats, prev, pk = _round_inputs(42)
+    weights = jnp.asarray(rng.integers(1, 4, 10).astype(np.float32))
+    events, up = make_uplink_stream(rng, pk, loss_rate=0.3, dup_rate=0.3)
+    down = jnp.asarray((rng.random((10, pk.shape[1])) > 0.2)
+                       .astype(np.float32))
+    cfg = EngineConfig(n_clients=10, n_params=1000, payload=64,
+                       ring_capacity=16)
+    res = run_engine_round(cfg, flats, prev, events, down_mask=down,
+                           weights=weights)
+    nf, ng, cnt = fused_round_step(flats, up, down, prev, 64, mode="exact",
+                                   weights=weights)
+    np.testing.assert_array_equal(np.asarray(res.up_mask), np.asarray(up))
+    np.testing.assert_array_equal(np.asarray(res.new_global), np.asarray(ng))
+    np.testing.assert_array_equal(np.asarray(res.counts), np.asarray(cnt))
+    np.testing.assert_array_equal(np.asarray(res.new_client_flats),
+                                  np.asarray(nf))
+    assert res.stats.duplicates_dropped > 0          # stream really dup'd
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), loss=st.floats(0.0, 0.6),
+       dup=st.floats(0.0, 0.5), k=st.integers(1, 5),
+       cap=st.sampled_from([1, 7, 32]))
+def test_counts_equal_protocol_arrivals_any_pattern(seed, loss, dup, k, cap):
+    """Property 1: per-slot counts == protocol-level (dedup) arrivals."""
+    rng = np.random.default_rng(seed)
+    p, w = 40 * 6, 40
+    flats = _int_flats(rng, k, p)
+    pk = jax.vmap(lambda f: packetize(f, w))(flats)
+    events, up = make_uplink_stream(rng, pk, loss_rate=loss, dup_rate=dup)
+    cfg = EngineConfig(n_clients=k, n_params=p, payload=w, ring_capacity=cap)
+    engine = ServerEngine(cfg)
+    for packet, payload in events:
+        engine.rx(packet, payload)
+    engine.flush()
+    # protocol-level arrivals: sum of the FSM's deduplicated uplink sets
+    proto = np.zeros(cfg.n_slots, np.float32)
+    for got in engine.fsm.uplink:
+        for s in got:
+            proto[s] += 1.0
+    np.testing.assert_array_equal(np.asarray(engine.agg.counts), proto)
+    np.testing.assert_array_equal(np.asarray(engine.up_mask()),
+                                  np.asarray(up))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16), loss=st.floats(0.0, 0.5),
+       dup=st.floats(0.0, 0.4), cap=st.sampled_from([1, 16, 128]))
+def test_exact_mode_matches_fused_any_pattern(seed, loss, dup, cap):
+    """Property 2: exact mode == fused_round_step on the same mask,
+    regardless of arrival order, duplication, or ring capacity."""
+    rng, flats, prev, pk = _round_inputs(seed, k=4, p=320, w=32)
+    events, up = make_uplink_stream(rng, pk, loss_rate=loss, dup_rate=dup)
+    cfg = EngineConfig(n_clients=4, n_params=320, payload=32,
+                       ring_capacity=cap)
+    res = run_engine_round(cfg, flats, prev, events)
+    _, ng, cnt = fused_round_step(flats, up, jnp.ones_like(up), prev, 32,
+                                  mode="exact")
+    np.testing.assert_array_equal(np.asarray(res.new_global), np.asarray(ng))
+    np.testing.assert_array_equal(np.asarray(res.counts), np.asarray(cnt))
+
+
+def test_approx_with_unit_ring_equals_exact():
+    """ring_capacity=1 shrinks the race window to one packet: the
+    lock-free server degenerates to the locked one."""
+    rng, flats, prev, pk = _round_inputs(7, k=6, p=480, w=48)
+    events, up = make_uplink_stream(rng, pk, loss_rate=0.2)
+    one = EngineConfig(n_clients=6, n_params=480, payload=48,
+                       ring_capacity=1, mode="approx")
+    res = run_engine_round(one, flats, prev, events)
+    _, ng, _ = fused_round_step(flats, up, jnp.ones_like(up), prev, 48,
+                                mode="exact")
+    np.testing.assert_array_equal(np.asarray(res.new_global), np.asarray(ng))
+
+
+def test_approx_large_window_loses_updates_but_counts_hold():
+    """With a wide race window same-slot packets in one batch collide:
+    the sum loses terms while the divisor still counts every arrival —
+    the paper's lost-update bias (§3.2), biased toward smaller |avg|."""
+    rng, flats, prev, pk = _round_inputs(3, k=8, p=640, w=64)
+    events, up = make_uplink_stream(rng, pk)
+    exact = run_engine_round(
+        EngineConfig(n_clients=8, n_params=640, payload=64), flats, prev,
+        events)
+    approx = run_engine_round(
+        EngineConfig(n_clients=8, n_params=640, payload=64,
+                     ring_capacity=256, mode="approx"), flats, prev, events)
+    assert not np.array_equal(np.asarray(approx.new_global),
+                              np.asarray(exact.new_global))
+    np.testing.assert_array_equal(np.asarray(approx.counts),
+                                  np.asarray(exact.counts))
+
+
+def test_undelivered_slots_fall_back_to_prev_global():
+    """Drop slot 2 for every client: its elements keep prev_global."""
+    rng, flats, prev, pk = _round_inputs(11, k=3, p=200, w=40)
+    events, up = make_uplink_stream(rng, pk, loss_rate=0.0)
+    events = [(p_, pl_) for p_, pl_ in events
+              if not (p_.kind == Kind.DATA and p_.index == 2)]
+    cfg = EngineConfig(n_clients=3, n_params=200, payload=40)
+    res = run_engine_round(cfg, flats, prev, events)
+    assert float(res.counts[2]) == 0.0
+    np.testing.assert_array_equal(np.asarray(res.new_global)[80:120],
+                                  np.asarray(prev)[80:120])
+
+
+def test_data_before_start_and_after_end_is_ignored():
+    """The FSM gate: DATA outside the START..END window never reaches
+    the rings (the paper's RX thread owns the round framing)."""
+    rng = np.random.default_rng(5)
+    pk = jax.vmap(lambda f: packetize(f, 16))(_int_flats(rng, 1, 64))
+    cfg = EngineConfig(n_clients=1, n_params=64, payload=16)
+    engine = ServerEngine(cfg)
+    engine.rx(Packet(Kind.DATA, 0, 0), np.asarray(pk[0, 0]))   # pre-START
+    engine.rx(Packet(Kind.START, 0))
+    engine.rx(Packet(Kind.DATA, 0, 1), np.asarray(pk[0, 1]))
+    engine.rx(Packet(Kind.END, 0))
+    engine.rx(Packet(Kind.DATA, 0, 2), np.asarray(pk[0, 2]))   # post-END
+    engine.flush()
+    counts = np.asarray(engine.agg.counts)
+    assert counts[0] == 0.0 and counts[2] == 0.0 and counts[1] == 1.0
+
+
+def test_control_packets_are_answered():
+    cfg = EngineConfig(n_clients=2, n_params=64, payload=16)
+    engine = ServerEngine(cfg)
+    replies = engine.rx(Packet(Kind.START, 0))
+    assert [r.kind for r in replies] == [Kind.START_ACK]
+    assert engine.stats.control_replies == 1
+
+
+@pytest.mark.parametrize("mode", ["exact", "approx"])
+def test_kernel_and_host_paths_agree(mode):
+    """use_kernel=False routes drains through the sequential host oracle;
+    integer payloads make the two paths bitwise equal in both modes."""
+    rng, flats, prev, pk = _round_inputs(23, k=5, p=300, w=30)
+    events, _ = make_uplink_stream(rng, pk, loss_rate=0.25, dup_rate=0.25)
+    kernel = run_engine_round(
+        EngineConfig(n_clients=5, n_params=300, payload=30, mode=mode,
+                     ring_capacity=16, use_kernel=True),
+        flats, prev, events)
+    host = run_engine_round(
+        EngineConfig(n_clients=5, n_params=300, payload=30, mode=mode,
+                     ring_capacity=16, use_kernel=False),
+        flats, prev, events)
+    np.testing.assert_array_equal(np.asarray(kernel.new_global),
+                                  np.asarray(host.new_global))
+    np.testing.assert_array_equal(np.asarray(kernel.counts),
+                                  np.asarray(host.counts))

@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Intra-repo documentation link checker (CI docs job).
+
+Two classes of reference are validated, so docs can't silently drift
+from the code that cites them (the bug this tool was born from: for two
+PRs `core/simnet.py` cited an `EXPERIMENTS.md §Paper-validation` that
+did not exist):
+
+1. **Markdown links** in every tracked ``*.md`` file: relative targets
+   (``[text](path)``) must resolve to an existing file or directory
+   (anchors are stripped; http/https/mailto links are ignored).
+2. **Doc-section citations** in source and docs: any occurrence of
+   ``SOMEDOC.md`` must name a file at the repo root, and the cited
+   section in ``SOMEDOC.md §Section`` form must match a heading of that
+   document (headings use the ``## §1 Title`` / ``## §Name`` style).
+
+Exit status 0 when everything resolves; 1 with a report otherwise.
+
+Usage:  python tools/check_doc_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import functools
+import pathlib
+import re
+import sys
+
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "scratch"}
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+DOC_CITE = re.compile(r"\b([A-Z][A-Z0-9_]*\.md)(?:\s+§([A-Za-z0-9][\w-]*))?")
+HEADING = re.compile(r"^#{1,6}\s", re.M)
+
+
+def _files(root: pathlib.Path, suffix: str):
+    for p in sorted(root.rglob(f"*{suffix}")):
+        if not SKIP_DIRS.intersection(p.relative_to(root).parts):
+            yield p
+
+
+@functools.lru_cache(maxsize=None)   # each doc is cited many times
+def _headings(md_path: pathlib.Path) -> str:
+    return "\n".join(line for line in md_path.read_text().splitlines()
+                     if HEADING.match(line))
+
+
+def check(root: pathlib.Path) -> list:
+    errors = []
+
+    for md in _files(root, ".md"):
+        rel = md.relative_to(root)
+        for m in MD_LINK.finditer(md.read_text()):
+            target = m.group(1).split("#")[0]
+            if not target or "://" in target or target.startswith("mailto:"):
+                continue
+            if not (md.parent / target).exists():
+                errors.append(f"{rel}: broken link -> {m.group(1)}")
+
+    self_path = pathlib.Path(__file__).resolve()
+    for src in list(_files(root, ".py")) + list(_files(root, ".md")):
+        rel = src.relative_to(root)
+        if src.resolve() == self_path:       # the docstring's examples
+            continue
+        for m in DOC_CITE.finditer(src.read_text()):
+            doc, section = m.groups()
+            doc_path = root / doc
+            if not doc_path.exists():
+                errors.append(f"{rel}: cites missing doc {doc}")
+                continue
+            if section is None:
+                continue
+            # (?![\w-]) so a prefix cite (`§Arch` vs `§Arch-applicability`)
+            # is still flagged as dangling
+            if not re.search(rf"§{re.escape(section)}(?![\w-])",
+                             _headings(doc_path)):
+                errors.append(f"{rel}: cites {doc} §{section} "
+                              f"but no such heading exists")
+    return errors
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    errors = check(root)
+    for e in errors:
+        print(f"DANGLING: {e}", file=sys.stderr)
+    print(f"check_doc_links: {len(errors)} dangling reference(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
