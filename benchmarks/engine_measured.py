@@ -8,6 +8,15 @@ phase.  On CPU the kernels run in interpret mode, so absolute times are
 a correctness-calibrated analogue of the DPU, not hardware numbers; the
 exact-vs-approx *ratio* and the phase split are the meaningful outputs
 (EXPERIMENTS.md §Paper-validation).
+
+``compiled=True`` rows run the same round through the compiled engine
+(core/engine_compiled.py): the RX phase becomes the vectorized host
+demux and compute becomes ONE fused device dispatch (drain scan + END
+divide + TX downlink), so the eager-vs-compiled delta is the measured
+cost of per-drain Python dispatch (EXPERIMENTS.md §Engine-throughput).
+
+Measurements are memoized (``lru_cache``): fig6, fig7 and the
+engine-throughput sweep share one warm measurement per configuration.
 """
 from __future__ import annotations
 
@@ -23,17 +32,19 @@ from repro.core.packets import packetize
 from repro.core.server import EngineConfig, ServerEngine, make_uplink_stream
 
 
-@functools.lru_cache(maxsize=None)   # fig6 and fig7 share one measurement
+@functools.lru_cache(maxsize=None)   # fig6/fig7/engine sweep share these
 def measure_engine_round(mode: str = "exact", n_clients: int = 10,
                          n_params: int = 16384, payload: int = 64,
                          ring_capacity: int = 64, seed: int = 0,
                          loss_rate: float = 0.01, dup_rate: float = 0.02,
+                         compiled: bool = False, iters: int = 3,
                          ) -> Dict[str, float]:
     """One engine round; returns per-phase wall times in seconds.
 
     An identical warmup round runs first so jit tracing/compilation is
-    excluded — the timed round measures the pipeline, not the tracer
-    (cold vs warm differ by ~25-90x per phase).
+    excluded — the timed rounds measure the pipeline, not the tracer
+    (cold vs warm differ by ~25-90x per phase).  The fastest of
+    ``iters`` repetitions is reported (scheduler-noise floor).
     """
     rng = np.random.default_rng(seed)
     flats = jnp.asarray(rng.normal(size=(n_clients, n_params))
@@ -46,30 +57,51 @@ def measure_engine_round(mode: str = "exact", n_clients: int = 10,
                        .astype(np.float32))
     cfg = EngineConfig(n_clients=n_clients, n_params=n_params,
                        payload=payload, ring_capacity=ring_capacity,
-                       mode=mode)
+                       mode=mode, compile=compiled)
 
     stats = {}
 
-    def one_round():
-        engine = ServerEngine(cfg)
-        t0 = time.perf_counter()
-        for packet, pay in events:                   # RX + worker drains
-            engine.rx(packet, pay)
-        engine.flush()
-        engine.agg.total.block_until_ready()
-        t1 = time.perf_counter()
-        new_global, _ = engine.finalize_round(prev)  # END divide
-        new_global.block_until_ready()
-        t2 = time.perf_counter()
-        new_flats = engine.distribute(new_global, flats, down)  # TX down
-        new_flats.block_until_ready()
-        t3 = time.perf_counter()
-        stats["packets"] = float(engine.stats.data_enqueued)
-        stats["batches"] = float(engine.stats.batches_drained)
-        return t0, t1, t2, t3
+    if compiled:
+        from repro.core import engine_compiled as ec
+
+        def one_round():
+            t0 = time.perf_counter()
+            sched, st, _ = ec.demux_events(cfg, events)  # RX: host demux
+            t1 = time.perf_counter()
+            total = jnp.zeros((cfg.n_slots, payload), jnp.float32)
+            counts = jnp.zeros((cfg.n_slots,), jnp.float32)
+            # ONE dispatch: drain scan + END divide + TX downlink fused
+            _, _, new_global, new_flats = ec.dispatch_round(
+                cfg, sched, total, counts, prev, client_flats=flats,
+                down_mask=down)
+            new_flats.block_until_ready()
+            t2 = time.perf_counter()
+            stats["packets"] = float(st.data_enqueued)
+            stats["batches"] = float(st.batches_drained)
+            # END+TX are fused into compute; TX has no separate dispatch
+            return t0, t1, t2, t2
+    else:
+        def one_round():
+            engine = ServerEngine(cfg)
+            t0 = time.perf_counter()
+            for packet, pay in events:               # RX + worker drains
+                engine.rx(packet, pay)
+            engine.flush()
+            engine.agg.total.block_until_ready()
+            t1 = time.perf_counter()
+            new_global, _ = engine.finalize_round(prev)  # END divide
+            new_global.block_until_ready()
+            t2 = time.perf_counter()
+            new_flats = engine.distribute(new_global, flats, down)  # TX
+            new_flats.block_until_ready()
+            t3 = time.perf_counter()
+            stats["packets"] = float(engine.stats.data_enqueued)
+            stats["batches"] = float(engine.stats.batches_drained)
+            return t0, t1, t2, t3
 
     one_round()                                      # warmup: jit compile
-    t0, t1, t2, t3 = one_round()
+    t0, t1, t2, t3 = min((one_round() for _ in range(iters)),
+                         key=lambda t: t[3] - t[0])
 
     return {"recv_time": t1 - t0, "compute_time": t2 - t1,
             "send_time": t3 - t2, "response_time": t3 - t0,
@@ -77,21 +109,29 @@ def measure_engine_round(mode: str = "exact", n_clients: int = 10,
 
 
 def measured_rows(prefix: str):
-    """CSV rows for both server modes; called by fig6/fig7 ``rows()``."""
+    """CSV rows for both server modes × eager/compiled engines; called
+    by fig6/fig7 ``rows()``."""
     out = []
     for mode in ("exact", "approx"):
-        m = measure_engine_round(mode=mode)
-        if prefix == "fig6":
-            out.append((f"fig6_measured_engine_{mode}",
-                        m["response_time"] * 1e6,
-                        f"recv={m['recv_time']*1e3:.1f}ms "
-                        f"comp={m['compute_time']*1e3:.1f}ms "
-                        f"send={m['send_time']*1e3:.1f}ms "
-                        f"pkts={m['packets']:.0f}"))
-        else:
-            out.append((f"fig7_measured_engine_{mode}",
-                        m["server_exec"] * 1e6,
-                        f"recv_us={m['recv_time']*1e6:.0f};"
-                        f"comp_us={m['compute_time']*1e6:.0f};"
-                        f"batches={m['batches']:.0f}"))
+        for engine in ("engine", "engine_compiled"):
+            # kwargs spelled out in the same names/order as the
+            # engine-throughput sweep: functools.lru_cache keys on the
+            # literal call signature, so this is what makes fig6/fig7
+            # and the sweep share one measurement per configuration
+            m = measure_engine_round(mode=mode, n_clients=10,
+                                     n_params=16384,
+                                     compiled=(engine == "engine_compiled"))
+            if prefix == "fig6":
+                out.append((f"fig6_measured_{engine}_{mode}",
+                            m["response_time"] * 1e6,
+                            f"recv={m['recv_time']*1e3:.1f}ms "
+                            f"comp={m['compute_time']*1e3:.1f}ms "
+                            f"send={m['send_time']*1e3:.1f}ms "
+                            f"pkts={m['packets']:.0f}"))
+            else:
+                out.append((f"fig7_measured_{engine}_{mode}",
+                            m["server_exec"] * 1e6,
+                            f"recv_us={m['recv_time']*1e6:.0f};"
+                            f"comp_us={m['compute_time']*1e6:.0f};"
+                            f"batches={m['batches']:.0f}"))
     return out

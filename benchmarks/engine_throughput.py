@@ -1,0 +1,144 @@
+"""Eager vs compiled packet-path engine throughput (ISSUE 3 acceptance).
+
+Sweeps K ∈ {10, 64, 256} × {exact, approx} × {eager-engine,
+compiled-engine} through one full server round — identical streams,
+identical ring topology — and reports packets/sec and round latency.
+The eager engine pays one Python-dispatched device call per drained
+ring; the compiled engine demuxes the stream into a dense drain
+schedule on the host and runs the whole round as ONE jitted
+``lax.scan`` with the END divide and TX downlink fused in
+(core/engine_compiled.py, DESIGN.md §3).  ``compiled_overlap`` rows
+amortize ``run_compiled_rounds`` over several rounds, so round r+1's
+host demux hides under round r's device scan.
+
+Measurements reuse the memoized ``engine_measured.measure_engine_round``
+caches, so running under ``benchmarks/run.py`` (after fig6/fig7) adds
+only the K > 10 configurations.
+
+Each run overwrites ``BENCH_engine.json`` (committed — its git history
+is the perf trajectory across PRs; schema in EXPERIMENTS.md
+§Engine-throughput).
+
+Usage:
+    python benchmarks/engine_throughput.py [--quick] [--out BENCH_engine.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CLIENT_SWEEP = (10, 64, 256)
+# defaults match engine_measured.measure_engine_round so fig6/fig7 and
+# this sweep share one warm, memoized measurement per configuration
+N_PARAMS, PAYLOAD, RING_CAPACITY = 16384, 64, 64
+LOSS_RATE, DUP_RATE = 0.01, 0.02
+OVERLAP_ROUNDS = 4
+
+
+def _measure_overlap(mode: str, n_clients: int, n_params: int,
+                     rounds: int = OVERLAP_ROUNDS):
+    """Amortized per-round time of the double-buffered driver."""
+    from repro.core import engine_compiled as ec
+    from repro.core.packets import packetize
+    from repro.core.server import EngineConfig, make_uplink_stream
+
+    rng = np.random.default_rng(0)
+    flats = jnp.asarray(rng.normal(size=(n_clients, n_params))
+                        .astype(np.float32))
+    prev = jnp.zeros((n_params,), jnp.float32)
+    pk = jax.vmap(lambda f: packetize(f, PAYLOAD))(flats)
+    events, _ = make_uplink_stream(rng, pk, loss_rate=LOSS_RATE,
+                                   dup_rate=DUP_RATE)
+    down = jnp.asarray((rng.random((n_clients, pk.shape[1])) > LOSS_RATE)
+                       .astype(np.float32))
+    cfg = EngineConfig(n_clients=n_clients, n_params=n_params,
+                       payload=PAYLOAD, ring_capacity=RING_CAPACITY,
+                       mode=mode, compile=True)
+    stream = [(events, flats, down)] * rounds
+    ec.run_compiled_rounds(cfg, stream, prev)          # warmup
+    t0 = time.perf_counter()
+    results = ec.run_compiled_rounds(cfg, stream, prev)
+    dt = (time.perf_counter() - t0) / rounds
+    return {"response_time": dt,
+            "packets": float(results[0].stats.data_enqueued)}
+
+
+def rows(ks=CLIENT_SWEEP, quick: bool = False):
+    try:                                  # package context (run.py, -m)
+        from benchmarks.engine_measured import measure_engine_round
+    except ImportError:                   # standalone: script dir on sys.path
+        from engine_measured import measure_engine_round
+    n_params = 4096 if quick else N_PARAMS
+    out = []
+    for k in ks:
+        for mode in ("exact", "approx"):
+            # kwarg names/order must match measured_rows exactly —
+            # lru_cache keys on the literal signature (K=10 full-size
+            # rows then reuse fig6/fig7's warm measurement)
+            eager = measure_engine_round(
+                mode=mode, n_clients=k, n_params=n_params, compiled=False)
+            comp = measure_engine_round(
+                mode=mode, n_clients=k, n_params=n_params, compiled=True)
+            variants = [("eager", eager), ("compiled", comp)]
+            if not quick:
+                variants.append(
+                    ("compiled_overlap", _measure_overlap(mode, k, n_params)))
+            for engine, m in variants:
+                t = m["response_time"]
+                row = {
+                    "k": k, "mode": mode, "engine": engine,
+                    "n_params": n_params, "payload": PAYLOAD,
+                    "ring_capacity": RING_CAPACITY,
+                    "packets": m["packets"],
+                    "round_s": t,
+                    "pkts_per_s": m["packets"] / t,
+                    "interpret": jax.default_backend() != "tpu",
+                }
+                if engine != "eager":
+                    row["speedup_vs_eager"] = (eager["response_time"] / t)
+                out.append(row)
+                tag = (f" ({row['speedup_vs_eager']:6.1f}x vs eager)"
+                       if engine != "eager" else "")
+                print(f"K={k:4d} {mode:6s}/{engine:16s} "
+                      f"{t*1e3:10.2f} ms/round "
+                      f"{row['pkts_per_s']/1e3:10.1f} kpkt/s{tag}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small rounds, K<=64, no overlap rows (CI smoke)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_engine.json"))
+    args = ap.parse_args()
+    ks = (10, 64) if args.quick else CLIENT_SWEEP
+    result = {
+        "bench": "engine_throughput",
+        "backend": jax.default_backend(),
+        "quick": args.quick,
+        "client_sweep": list(ks),
+        "payload": PAYLOAD,
+        "ring_capacity": RING_CAPACITY,
+        "loss_rate": LOSS_RATE,
+        "dup_rate": DUP_RATE,
+        "rows": rows(ks=ks, quick=args.quick),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out} ({len(result['rows'])} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV:
   fig8_*  convergence of the 6 variants (paper Fig. 8, analytic race model)
   fig8acc_*  exact-vs-approx accuracy through the executable packet engine
   agg_*   measured aggregation throughput on this machine (§5.2 analogue)
+  engine_*  eager vs compiled packet-path engine throughput (BENCH_engine)
   roofline_*  per (arch x shape x mesh) from the dry-run artifacts
 """
 from __future__ import annotations
@@ -19,15 +20,34 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def main() -> None:
-    from benchmarks import (agg_throughput, fig6_response_time,
-                            fig7_breakdown, fig8_accuracy, fig8_convergence,
-                            roofline)
+    from benchmarks import (agg_throughput, engine_throughput,
+                            fig6_response_time, fig7_breakdown,
+                            fig8_accuracy, fig8_convergence, roofline)
+
+    def agg_rows():
+        # agg_throughput.rows yields JSON dicts (BENCH_agg schema);
+        # adapt to the (name, us, derived) CSV contract
+        return [(f"agg_K{r['k']}_{r['mode']}_{r['impl']}", r["time_us"],
+                 f"gelem_per_s={r['gelem_per_s']:.3f}")
+                for r in agg_throughput.rows()]
+
+    def engine_rows():
+        # runs after fig6/fig7, so the memoized measure_engine_round
+        # caches are already warm for the K=10 configurations
+        return [(f"engine_K{r['k']}_{r['mode']}_{r['engine']}",
+                 r["round_s"] * 1e6,
+                 f"pkts_per_s={r['pkts_per_s']:.0f}"
+                 + (f";speedup={r['speedup_vs_eager']:.1f}x"
+                    if "speedup_vs_eager" in r else ""))
+                for r in engine_throughput.rows()]
+
     sections = [
         ("fig6", fig6_response_time.rows),
         ("fig7", fig7_breakdown.rows),
         ("fig8", fig8_convergence.rows),
         ("fig8acc", fig8_accuracy.rows),
-        ("agg", agg_throughput.rows),
+        ("agg", agg_rows),
+        ("engine", engine_rows),
         ("roofline", roofline.rows),
     ]
     failures = 0

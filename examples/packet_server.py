@@ -8,8 +8,15 @@ the lock-free (approximate) server whose racing adds are dropped
 last-writer-wins.  Prints the pipeline stats and verifies the exact
 round is bitwise identical to the one-shot ``fused_round_step``.
 
-Run:  PYTHONPATH=src python examples/packet_server.py
+``--compile`` routes the identical rounds through the compiled engine
+(core/engine_compiled.py): a vectorized demux pass plus ONE jitted
+``lax.scan`` per round with donated accumulators — same bits, no
+per-drain dispatch (DESIGN.md §3).
+
+Run:  PYTHONPATH=src python examples/packet_server.py [--compile]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -21,6 +28,11 @@ from repro.core.server import (EngineConfig, make_uplink_stream,
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--compile", action="store_true",
+                    help="run each round as one compiled lax.scan "
+                         "(EngineConfig(compile=True))")
+    args = ap.parse_args()
     K, P, W = 10, 4096, 64
     rng = np.random.default_rng(0)
     # integer-valued params make f32 sums order-independent, so the
@@ -40,11 +52,13 @@ def main():
 
     for mode, cap in [("exact", 64), ("approx", 64)]:
         cfg = EngineConfig(n_clients=K, n_params=P, payload=W,
-                           ring_capacity=cap, mode=mode)
+                           ring_capacity=cap, mode=mode,
+                           compile=args.compile)
         res = run_engine_round(cfg, client_flats, prev_global, events,
                                down_mask=down_mask)
         s = res.stats
-        print(f"\n== {mode} server ==")
+        engine = "compiled (one lax.scan)" if args.compile else "eager"
+        print(f"\n== {mode} server [{engine}] ==")
         print(f"  rx: {s.data_enqueued} unique packets ringed, "
               f"{s.duplicates_dropped} duplicates dropped at RX, "
               f"{s.control_replies} control replies")

@@ -1,0 +1,366 @@
+"""Compiled device-resident round engine (DESIGN.md §3).
+
+The eager ``ServerEngine`` (core/server.py) reproduces the paper's
+RX → N-worker → TX pipeline faithfully but pays one Python-dispatched
+device call per drained ring — so at benchmark scale it measures
+dispatch, not the scatter kernel.  This module keeps the *semantics* of
+that pipeline and compiles the *execution*:
+
+1. **Demux pass** (host, vectorized numpy): the event stream — or the
+   arrivals an engine recorded — is turned into a dense *drain
+   schedule*: ``(n_batches, B)`` slot/weight arrays and a
+   ``(n_batches, B, W)`` payload tensor, one row per drained ring
+   batch, padded with inert ``idx = -1`` / ``weight = 0`` entries.  The
+   schedule reproduces the eager engine's batching exactly: round-robin
+   or slot demux onto ``n_workers`` rings, a drain whenever a ring
+   reaches capacity (in arrival order), and the END flush of partial
+   rings in worker order.  Because approx mode's last-writer-wins race
+   is scoped to a drain batch, identical batching makes the compiled
+   engine bitwise identical to the eager one in *both* modes.
+
+2. **One ``lax.scan`` per round** (device): the whole schedule runs
+   through ``packet_scatter_accum_scan`` inside a single jitted call;
+   the ``(total, counts)`` accumulators are donated
+   (``donate_argnums``) and carried through the scan in place — no
+   per-drain reallocation.  The END count-normalized divide, the
+   per-slot fallback to the previous global, and (optionally) the TX
+   downlink fallback + APFL blend are fused into the same call, so a
+   full server round is exactly one device dispatch.
+
+3. **Round overlap** (``run_compiled_rounds``): a double-buffered
+   driver dispatches round r and, while the device executes it (JAX
+   async dispatch), demuxes round r+1 on the host — the executable
+   analogue of the paper's dedicated RX core running ahead of the
+   workers (§3.2).
+
+Entry points: ``run_compiled_round`` mirrors
+``server.run_engine_round`` (which routes here when
+``EngineConfig.compile`` is set); ``ServerEngine`` with
+``compile=True`` keeps the per-packet ``rx`` API and dispatches the
+recorded round from ``finalize_round`` / ``finalize_and_distribute``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import expand_packet_mask
+from repro.core.packets import depacketize
+from repro.core.protocol import Kind
+from repro.core.server import (EngineConfig, EngineStats, RoundResult)
+from repro.kernels.packet_scatter import (BLOCK_PKTS,
+                                          packet_scatter_accum_scan)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _use_pallas(cfg: EngineConfig) -> bool:
+    """Scan-body selection: the Pallas grid kernel is the production TPU
+    body; everywhere else the bitwise jnp twin runs (an interpreted grid
+    would unroll hundreds of HLO ops per scan step)."""
+    if cfg.scan_body == "pallas":
+        return True
+    if cfg.scan_body == "jnp":
+        return False
+    return cfg.use_kernel and not _interpret()
+
+
+# ---------------------------------------------------------------------------
+# Demux: arrivals -> dense drain schedule
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DrainSchedule:
+    """Dense per-round drain schedule (host arrays, ready to dispatch).
+
+    One row per drain batch; rows beyond ``n_batches`` (row counts are
+    bucketed to a multiple of ``pad_batches``, so lossy round-to-round
+    batch-count jitter reuses one jit trace instead of retracing) and
+    unused columns are inert: ``idx = -1`` matches no slot, weight 0 is
+    inert in sums and counts.
+    """
+    idx: np.ndarray         # (n_rows, B) int32 slot rows
+    weights: np.ndarray     # (n_rows, B) f32 per-arrival FedAvg weights
+    payloads: np.ndarray    # (n_rows, B, W) f32 payload rows
+    n_batches: int          # real drain batches (rest is padding)
+    n_packets: int          # accepted arrivals scheduled
+
+
+def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
+                         payloads: np.ndarray, *, n_workers: int,
+                         ring_capacity: int, ring_assign: str = "rr",
+                         block_pkts: int = BLOCK_PKTS,
+                         pad_batches: int = 8) -> DrainSchedule:
+    """Vectorized replay of the eager engine's ring demux.
+
+    slots (n,) int32 / weights (n,) f32 / payloads (n, W) f32 are the
+    *accepted* (post-FSM, post-dedup) arrivals in arrival order.  The
+    batching reproduces ``ServerEngine`` exactly: arrival i goes to
+    worker ``i % n_workers`` (rr) or ``slot % n_workers`` (slot demux);
+    a ring drains — in arrival order of its capacity-th packet — when
+    full, and partial rings flush at END in worker order.  Batch rows
+    are padded to ``B = ceil(capacity / block_pkts) * block_pkts``, the
+    same inert padding the eager ``scatter_add`` applies per drain.
+    """
+    n = int(slots.shape[0])
+    W = int(payloads.shape[1])
+    B = ring_capacity + (-ring_capacity) % block_pkts
+    if n == 0:
+        return DrainSchedule(np.full((1, B), -1, np.int32),
+                             np.zeros((1, B), np.float32),
+                             np.zeros((1, B, W), np.float32), 0, 0)
+    if ring_assign == "slot":
+        worker = slots.astype(np.int64) % n_workers
+    else:
+        worker = np.arange(n, dtype=np.int64) % n_workers
+    pos = np.zeros(n, np.int64)
+    for wk in range(n_workers):           # n_workers is tiny (paper: 5)
+        m = worker == wk
+        pos[m] = np.arange(int(m.sum()))
+    b_in_w = pos // ring_capacity
+    col = pos % ring_capacity
+    key = worker * (n + 1) + b_in_w       # unique per (worker, batch)
+    uniq, inv, sizes = np.unique(key, return_inverse=True,
+                                 return_counts=True)
+    last = np.zeros(len(uniq), np.int64)
+    np.maximum.at(last, inv, np.arange(n, dtype=np.int64))
+    full = sizes == ring_capacity
+    # full batches drained at the arrival of their capacity-th packet
+    # (chronological); partial rings flush after every arrival, in
+    # worker order — uniq is sorted by (worker, batch) already, and a
+    # worker has at most one partial ring
+    order_key = np.where(full, last, n + uniq)
+    order = np.argsort(order_key, kind="stable")
+    rank = np.empty_like(order)
+    rank[order] = np.arange(len(order))
+    row = rank[inv]
+    nb = len(uniq)
+    n_rows = (nb + (-nb) % pad_batches) if pad_batches > 1 else nb
+    idx = np.full((n_rows, B), -1, np.int32)
+    w = np.zeros((n_rows, B), np.float32)
+    pk = np.zeros((n_rows, B, W), np.float32)
+    idx[row, col] = slots
+    w[row, col] = weights
+    pk[row, col] = payloads
+    return DrainSchedule(idx, w, pk, int(nb), n)
+
+
+def demux_events(cfg: EngineConfig, events: Iterable,
+                 weights: Optional[np.ndarray] = None
+                 ) -> Tuple[DrainSchedule, EngineStats, np.ndarray]:
+    """Bulk RX: one pass over ``(Packet, payload)`` events, vectorized
+    FSM gating + dedup, -> (schedule, stats, up_mask (K, N) numpy).
+
+    Replicates ``ServerEngine.rx`` acceptance for client→server
+    uplink streams: DATA is accepted iff it lands strictly between the
+    client's first START and the first END after it, and only the first
+    copy of each (client, slot) counts.  Control replies are *counted*
+    (stats parity with the FSM) but not materialized — callers that
+    need the reply packets use the per-packet API.
+    """
+    K, n_slots = cfg.n_clients, cfg.n_slots
+    wts = (np.ones(K, np.float32) if weights is None
+           else np.asarray(weights, np.float32))
+    d_c: List[int] = []
+    d_s: List[int] = []
+    d_pay: List = []
+    d_pos: List[int] = []
+    s_c: List[int] = []
+    s_pos: List[int] = []
+    e_c: List[int] = []
+    e_pos: List[int] = []
+    # local bindings keep the one unavoidable per-event pass cheap —
+    # this loop and the payload stack are the whole host RX cost
+    data_k, start_k, end_k = Kind.DATA, Kind.START, Kind.END
+    dc_ap, ds_ap = d_c.append, d_s.append
+    dpay_ap, dpos_ap = d_pay.append, d_pos.append
+    pos = 0
+    for packet, payload in events:
+        kind = packet.kind
+        if kind is data_k:
+            dc_ap(packet.client)
+            ds_ap(packet.index)
+            dpay_ap(payload)
+            dpos_ap(pos)
+        elif kind is start_k:
+            s_c.append(packet.client)
+            s_pos.append(pos)
+        elif kind is end_k:
+            e_c.append(packet.client)
+            e_pos.append(pos)
+        pos += 1
+    inf = pos + 1
+    first_start = np.full(K, inf, np.int64)
+    if s_c:
+        sc, sp = np.asarray(s_c), np.asarray(s_pos, np.int64)
+        np.minimum.at(first_start, sc, sp)
+    first_end = np.full(K, inf, np.int64)
+    if e_c:
+        ec, ep = np.asarray(e_c), np.asarray(e_pos, np.int64)
+        after = ep > first_start[ec]
+        np.minimum.at(first_end, ec[after], ep[after])
+    stats = EngineStats()
+    if s_c:       # STARTs inside [first_start, first_end) are (re-)acked
+        stats.control_replies += int(np.sum(
+            (sp >= first_start[sc]) & (sp < first_end[sc])))
+    if e_c:       # ENDs at/after the accepted END are (re-)acked
+        stats.control_replies += int(np.sum(ep >= first_end[ec]))
+    up = np.zeros((K, n_slots), np.float32)
+    if not d_c:
+        sched = build_drain_schedule(
+            np.zeros(0, np.int32), np.zeros(0, np.float32),
+            np.zeros((0, cfg.payload), np.float32),
+            n_workers=cfg.n_workers, ring_capacity=cfg.ring_capacity,
+            ring_assign=cfg.ring_assign)
+        return sched, stats, up
+    dc = np.asarray(d_c, np.int64)
+    ds = np.asarray(d_s, np.int64)
+    dp = np.asarray(d_pos, np.int64)
+    phase_ok = (dp > first_start[dc]) & (dp < first_end[dc])
+    stats.phase_dropped = int(np.sum(~phase_ok))
+    ok_rows = np.nonzero(phase_ok)[0]
+    keys = dc[ok_rows] * n_slots + ds[ok_rows]
+    _, first_idx = np.unique(keys, return_index=True)
+    acc_rows = ok_rows[np.sort(first_idx)]        # arrival order preserved
+    stats.duplicates_dropped = int(len(ok_rows) - len(first_idx))
+    stats.data_enqueued = int(len(acc_rows))
+    up[dc[acc_rows], ds[acc_rows]] = 1.0
+    # stack only the *accepted* payload rows: dropped DATA may legally
+    # carry no payload (the eager rx phase-drops before its assert)
+    pay = (np.asarray([d_pay[i] for i in acc_rows], np.float32)
+           if len(acc_rows) else np.zeros((0, cfg.payload), np.float32))
+    sched = build_drain_schedule(
+        ds[acc_rows].astype(np.int32), wts[dc[acc_rows]],
+        pay, n_workers=cfg.n_workers,
+        ring_capacity=cfg.ring_capacity, ring_assign=cfg.ring_assign)
+    stats.batches_drained = sched.n_batches
+    return sched, stats, up
+
+
+# ---------------------------------------------------------------------------
+# Device: one jitted lax.scan per round, donated accumulators
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "payload", "n_params",
+                                    "use_pallas", "block_slots",
+                                    "block_pkts", "mix_alpha", "interpret"),
+                   donate_argnums=(0, 1))
+def _round_device(total, counts, sched_idx, sched_w, sched_pk, prev_global,
+                  client_flats, down_mask, *, mode: str, payload: int,
+                  n_params: int, use_pallas: bool, block_slots: int,
+                  block_pkts: int, mix_alpha: float, interpret: bool):
+    """The whole round as one compiled dataflow.
+
+    total (S, W) / counts (S,) are donated and carried through the drain
+    scan in place; the END divide + per-slot fallback (the exact op
+    sequence of ``StreamingAggregator.finalize`` + ``finalize_round``)
+    and — when ``client_flats``/``down_mask`` are present — the TX
+    downlink fallback run fused in the same call.
+    """
+    S = counts.shape[0]
+    acc, cnt = total, counts[:, None]
+    pad = (-S) % block_slots if use_pallas else 0
+    if pad:
+        acc = jnp.pad(acc, ((0, pad), (0, 0)))
+        cnt = jnp.pad(cnt, ((0, pad), (0, 0)))
+    acc, cnt = packet_scatter_accum_scan(
+        sched_idx, sched_w, sched_pk, acc, cnt, exact=(mode == "exact"),
+        use_pallas=use_pallas, block_slots=block_slots,
+        block_pkts=block_pkts, interpret=interpret)
+    total, counts = acc[:S], cnt[:S, 0]
+    avg = total / jnp.maximum(counts, 1e-12)[:, None]
+    avg = jnp.where(counts[:, None] > 0, avg, 0.0)
+    agg_flat = depacketize(avg, n_params)
+    have = expand_packet_mask(counts > 0, payload, n_params)
+    new_global = jnp.where(have, agg_flat, prev_global)
+    new_flats = None
+    if client_flats is not None:
+        down_elem = expand_packet_mask(down_mask, payload, n_params)
+        new_flats = jnp.where(down_elem > 0, new_global[None, :],
+                              client_flats)
+        if mix_alpha > 0:
+            new_flats = mix_alpha * client_flats + (1 - mix_alpha) * new_flats
+    return total, counts, new_global, new_flats
+
+
+def dispatch_round(cfg: EngineConfig, sched: DrainSchedule, total, counts,
+                   prev_global, client_flats=None, down_mask=None,
+                   mix_alpha: float = 0.0):
+    """Dispatch one round (async) -> (total', counts', new_global,
+    new_flats|None).  ``total``/``counts`` are donated — callers pass
+    buffers they own and adopt the returned ones."""
+    if cfg.mode not in ("exact", "approx"):
+        raise ValueError(cfg.mode)
+    return _round_device(
+        jnp.asarray(total, jnp.float32), jnp.asarray(counts, jnp.float32),
+        jnp.asarray(sched.idx), jnp.asarray(sched.weights),
+        jnp.asarray(sched.payloads), jnp.asarray(prev_global),
+        None if client_flats is None else jnp.asarray(client_flats),
+        None if down_mask is None else jnp.asarray(down_mask),
+        mode=cfg.mode, payload=cfg.payload, n_params=cfg.n_params,
+        use_pallas=_use_pallas(cfg), block_slots=8,
+        block_pkts=min(BLOCK_PKTS, sched.idx.shape[1]),
+        mix_alpha=float(mix_alpha), interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# Drivers: single round, and double-buffered multi-round overlap
+# ---------------------------------------------------------------------------
+
+def run_compiled_round(cfg: EngineConfig, client_flats, prev_global,
+                       events: Iterable, down_mask=None, weights=None,
+                       mix_alpha: float = 0.0) -> RoundResult:
+    """Compiled counterpart of ``server.run_engine_round``: bulk demux,
+    then exactly one device dispatch for drains + END + TX."""
+    sched, stats, up = demux_events(cfg, events, weights)
+    total = jnp.zeros((cfg.n_slots, cfg.payload), jnp.float32)
+    counts = jnp.zeros((cfg.n_slots,), jnp.float32)
+    _, counts, new_global, new_flats = dispatch_round(
+        cfg, sched, total, counts, prev_global,
+        client_flats=None if down_mask is None else client_flats,
+        down_mask=down_mask, mix_alpha=mix_alpha)
+    return RoundResult(new_global, counts, jnp.asarray(up), new_flats,
+                       stats)
+
+
+def run_compiled_rounds(cfg: EngineConfig, rounds: Iterable,
+                        prev_global, *, weights=None,
+                        mix_alpha: float = 0.0) -> List[RoundResult]:
+    """Double-buffered multi-round driver (the paper's pipelined cores).
+
+    ``rounds`` yields ``(events, client_flats, down_mask)`` per round
+    (``client_flats``/``down_mask`` may be None).  Round r is dispatched
+    asynchronously and, while the device executes its scan, round r+1's
+    demux runs on the host; each round's ``prev_global`` chains from the
+    previous round's device-resident ``new_global`` without a host
+    round-trip.  Results are materialized one round behind dispatch.
+    """
+    results: List[RoundResult] = []
+    prev = jnp.asarray(prev_global)
+    pending: Optional[RoundResult] = None
+    for events, client_flats, down_mask in rounds:
+        sched, stats, up = demux_events(cfg, events, weights)
+        if pending is not None:       # round r-1 ran while we demuxed
+            pending.new_global.block_until_ready()
+            results.append(pending)
+        total = jnp.zeros((cfg.n_slots, cfg.payload), jnp.float32)
+        counts = jnp.zeros((cfg.n_slots,), jnp.float32)
+        _, counts, new_global, new_flats = dispatch_round(
+            cfg, sched, total, counts, prev,
+            client_flats=None if down_mask is None else client_flats,
+            down_mask=down_mask, mix_alpha=mix_alpha)
+        pending = RoundResult(new_global, counts, jnp.asarray(up),
+                              new_flats, stats)
+        prev = new_global
+    if pending is not None:
+        pending.new_global.block_until_ready()
+        results.append(pending)
+    return results

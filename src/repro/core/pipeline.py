@@ -28,6 +28,12 @@ from typing import Iterator, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+# imported once at module load — the per-drain hot path must not pay a
+# sys.modules lookup (or worse, a first-call import) per call
+from repro.kernels import ops as _ops
+from repro.kernels import ref as _ref
+from repro.kernels.packet_scatter import BLOCK_PKTS as _BLOCK_PKTS
+
 
 @jax.jit
 def _accum_chunk(total, counts, payload, mask):
@@ -92,10 +98,10 @@ class StreamingAggregator:
         wmask = mask * jnp.broadcast_to(
             jnp.asarray(weights, jnp.float32), mask.shape[:1])[:, None]
         if self.use_kernel:
-            from repro.kernels import ops
-            sums, cnts = ops.fedavg_accum(packets, wmask, finalize=False)
-            self.total = self.total + sums
-            self.counts = self.counts + cnts
+            # donated fold: (total, counts) are updated in place instead
+            # of reallocated per drained batch (kernels/ops.py)
+            self.total, self.counts = _ops.fedavg_accum_into(
+                self.total, self.counts, packets, wmask)
         else:
             self.total, self.counts = _accum_batch_jnp(
                 self.total, self.counts, packets, wmask)
@@ -118,20 +124,18 @@ class StreamingAggregator:
         # pad the ragged batch axis *outside* the jitted kernel wrapper:
         # every drained-ring length would otherwise be a fresh trace.
         # idx=-1 matches no slot and weight 0 is inert in sums and counts.
-        from repro.kernels.packet_scatter import BLOCK_PKTS
-        pad = (-packets.shape[0]) % BLOCK_PKTS
+        pad = (-packets.shape[0]) % _BLOCK_PKTS
         if pad:
             packets = jnp.pad(packets, ((0, pad), (0, 0)))
             idx = jnp.pad(idx.astype(jnp.int32), (0, pad),
                           constant_values=-1)
             w = jnp.pad(w, (0, pad))
         if self.use_kernel:
-            from repro.kernels import ops
-            self.total, self.counts = ops.packet_scatter_accum(
-                packets, idx, self.total, self.counts, weights=w, mode=mode)
+            self.total, self.counts = _ops.packet_scatter_accum(
+                packets, idx, self.total, self.counts, weights=w, mode=mode,
+                donate=True)
         else:
-            from repro.kernels import ref
-            self.total, self.counts = ref.packet_scatter_accum_ref(
+            self.total, self.counts = _ref.packet_scatter_accum_ref(
                 packets, idx, self.total, self.counts, weights=w, mode=mode)
 
     def finalize(self) -> jnp.ndarray:

@@ -55,6 +55,8 @@ class EngineConfig:
     mode: str = "exact"                # exact | approx
     ring_assign: str = "rr"            # rr | slot (see ServerEngine.rx)
     use_kernel: bool = True            # False: sequential host oracle
+    compile: bool = False              # True: one lax.scan per round
+    scan_body: str = "auto"            # auto | pallas | jnp (compile=True)
 
     @property
     def n_slots(self) -> int:
@@ -64,7 +66,8 @@ class EngineConfig:
 @dataclasses.dataclass
 class EngineStats:
     data_enqueued: int = 0             # unique DATA packets ringed
-    duplicates_dropped: int = 0        # RX-level dedup hits
+    duplicates_dropped: int = 0        # RX-level dedup hits (same slot again)
+    phase_dropped: int = 0             # DATA outside START..END framing
     batches_drained: int = 0           # scatter-accumulate calls
     control_replies: int = 0           # START_ACK / END_ACK emitted
 
@@ -104,6 +107,12 @@ class ServerEngine:
         self._rings: List[List[Tuple[int, float, np.ndarray]]] = \
             [[] for _ in range(cfg.n_workers)]
         self._rr_next = 0
+        # compile=True fast path: RX records accepted arrivals with no
+        # device work; the whole round runs as one compiled lax.scan at
+        # END (core/engine_compiled.py, DESIGN.md §3).
+        self._pend_slots: List[int] = []
+        self._pend_weights: List[float] = []
+        self._pend_payloads: List[np.ndarray] = []
         self.stats = EngineStats()
 
     # -- RX core --------------------------------------------------------------
@@ -119,12 +128,24 @@ class ServerEngine:
             self.stats.control_replies += len(replies)
             return replies
         c, slot = packet.client, packet.index
-        if self.fsm.phase[c] != ServerPhase.RECV_PARAMS or \
-                slot in self.fsm.uplink[c]:
-            self.stats.duplicates_dropped += slot in self.fsm.uplink[c]
+        if self.fsm.phase[c] != ServerPhase.RECV_PARAMS:
+            # DATA outside the START..END framing — distinct from a
+            # duplicate: the FSM gate dropped it, not the dedup set.
+            self.stats.phase_dropped += 1
+            return []
+        if slot in self.fsm.uplink[c]:
+            self.stats.duplicates_dropped += 1
             return []
         assert payload is not None, "DATA packet without payload"
         self.fsm.on_packet(packet)               # records the arrival
+        if self.cfg.compile:
+            # record only — the drain schedule is built (and the whole
+            # round dispatched) once, at finalize time
+            self._pend_slots.append(slot)
+            self._pend_weights.append(float(self.weights[c]))
+            self._pend_payloads.append(payload)
+            self.stats.data_enqueued += 1
+            return []
         if self.cfg.ring_assign == "slot":
             worker = slot % self.cfg.n_workers
         else:
@@ -162,8 +183,14 @@ class ServerEngine:
 
         Slots with count 0 (nobody delivered the packet) keep the
         previous round's global value — the same count-fallback
-        ``fused_round_step`` applies.
+        ``fused_round_step`` applies.  With ``cfg.compile`` the recorded
+        arrivals are demuxed into a dense drain schedule and the whole
+        round — every drain batch, the divide, the fallback — runs as
+        one compiled ``lax.scan`` call (DESIGN.md §3).
         """
+        if self.cfg.compile:
+            new_global, counts, _ = self._finalize_compiled(prev_global)
+            return new_global, counts
         self.flush()
         avg = self.agg.finalize()                        # (N, W)
         agg_flat = depacketize(avg, self.cfg.n_params)   # (P,)
@@ -171,6 +198,47 @@ class ServerEngine:
                                   self.cfg.n_params)
         new_global = jnp.where(have, agg_flat, prev_global)
         return new_global, self.agg.counts
+
+    def finalize_and_distribute(self, prev_global: jnp.ndarray,
+                                client_flats: jnp.ndarray,
+                                down_mask: jnp.ndarray,
+                                mix_alpha: float = 0.0
+                                ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                           jnp.ndarray]:
+        """END + TX in one step -> (new_global, counts, new_client_flats).
+
+        Under ``cfg.compile`` the downlink fallback is *fused into the
+        same compiled call* as the drain scan and the divide — one
+        device dispatch for the whole round.
+        """
+        if self.cfg.compile:
+            return self._finalize_compiled(prev_global, client_flats,
+                                           down_mask, mix_alpha)
+        new_global, counts = self.finalize_round(prev_global)
+        new_flats = self.distribute(new_global, client_flats, down_mask,
+                                    mix_alpha=mix_alpha)
+        return new_global, counts, new_flats
+
+    def _finalize_compiled(self, prev_global, client_flats=None,
+                           down_mask=None, mix_alpha: float = 0.0):
+        from repro.core import engine_compiled as ec
+        sched = ec.build_drain_schedule(
+            np.asarray(self._pend_slots, np.int32),
+            np.asarray(self._pend_weights, np.float32),
+            (np.asarray(self._pend_payloads, np.float32)
+             if self._pend_payloads
+             else np.zeros((0, self.cfg.payload), np.float32)),
+            n_workers=self.cfg.n_workers,
+            ring_capacity=self.cfg.ring_capacity,
+            ring_assign=self.cfg.ring_assign)
+        self._pend_slots, self._pend_weights, self._pend_payloads = [], [], []
+        total, counts, new_global, new_flats = ec.dispatch_round(
+            self.cfg, sched, self.agg.total, self.agg.counts, prev_global,
+            client_flats=client_flats, down_mask=down_mask,
+            mix_alpha=mix_alpha)
+        self.agg.total, self.agg.counts = total, counts
+        self.stats.batches_drained += sched.n_batches
+        return new_global, counts, new_flats
 
     # -- TX core: downlink with client fallback ------------------------------
     def distribute(self, new_global: jnp.ndarray, client_flats: jnp.ndarray,
@@ -216,25 +284,31 @@ def make_uplink_stream(rng: np.random.Generator, client_pk: jnp.ndarray,
     pairs consumable by :meth:`ServerEngine.rx`; up_mask (K, N) marks
     packets that arrived at least once — by construction also the
     engine's post-dedup arrival mask.
+
+    The loss/duplication draws and the delivery order are vectorized
+    numpy (two Bernoulli matrices + one permutation), so generating a
+    large-K stream is event-list construction, not RNG calls in a
+    per-(client, slot) double loop.
     """
     K, N, _ = client_pk.shape
     pk_host = np.asarray(client_pk)
-    events = [(Packet(Kind.START, c), None) for c in range(K)]
-    data = []
-    up = np.zeros((K, N), np.float32)
-    for c in range(K):
-        for n in range(N):
-            if rng.random() < loss_rate:
-                continue
-            up[c, n] = 1.0
-            copies = 1 + (rng.random() < dup_rate)
-            for _ in range(copies):
-                data.append((Packet(Kind.DATA, c, n), pk_host[c, n]))
+    keep = (rng.random((K, N)) >= loss_rate if loss_rate > 0.0
+            else np.ones((K, N), bool))
+    dup_draw = (rng.random((K, N)) < dup_rate if dup_rate > 0.0
+                else np.zeros((K, N), bool))
+    cs, ns = np.nonzero(keep)
+    # duplicates ride adjacent to their original (UDP re-delivery); a
+    # single permutation then models cross-client reordering
+    reps = 1 + (dup_draw[cs, ns]).astype(np.int64)
+    cl, sl = np.repeat(cs, reps), np.repeat(ns, reps)
     if shuffle:
-        rng.shuffle(data)
-    events += data
+        perm = rng.permutation(cl.size)
+        cl, sl = cl[perm], sl[perm]
+    events = [(Packet(Kind.START, c), None) for c in range(K)]
+    events += [(Packet(Kind.DATA, int(c), int(s)), pk_host[c, s])
+               for c, s in zip(cl.tolist(), sl.tolist())]
     events += [(Packet(Kind.END, c), None) for c in range(K)]
-    return events, jnp.asarray(up)
+    return events, jnp.asarray(keep.astype(np.float32))
 
 
 def run_engine_round(cfg: EngineConfig, client_flats: jnp.ndarray,
@@ -249,7 +323,18 @@ def run_engine_round(cfg: EngineConfig, client_flats: jnp.ndarray,
     With integer-valued payloads the exact-mode result is bitwise
     identical to ``aggregation.fused_round_step`` on ``up_mask()`` /
     ``down_mask`` (tests/test_server_engine.py).
+
+    With ``cfg.compile`` the whole round routes through the compiled
+    engine's bulk path (core/engine_compiled.py): a vectorized demux
+    pass replaces the per-packet RX loop and the round executes as one
+    jitted ``lax.scan`` with the END divide and TX downlink fused in —
+    bitwise identical outputs, one device dispatch.
     """
+    if cfg.compile:
+        from repro.core.engine_compiled import run_compiled_round
+        return run_compiled_round(cfg, client_flats, prev_global, events,
+                                  down_mask=down_mask, weights=weights,
+                                  mix_alpha=mix_alpha)
     engine = ServerEngine(cfg, weights=weights)
     for packet, payload in events:
         engine.rx(packet, payload)

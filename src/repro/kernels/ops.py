@@ -81,6 +81,24 @@ def quantized_accum(q, scales, wmask, block_clients: int = 8,
     return avg[:C], cnt[:C, 0]
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("block_clients", "block_chunks"),
+                   donate_argnums=(0, 1))
+def fedavg_accum_into(total, counts, packets, wmask,
+                      block_clients: int = 8, block_chunks: int = 8):
+    """Streaming fold: (total (C, W), counts (C,)) += raw masked sums.
+
+    The accumulator pair is *donated* (``donate_argnums``), so the
+    caller's buffers are reused in place and the streaming hot path
+    (``StreamingAggregator.add_batch``) stops allocating a fresh (C, W)
+    total per drained batch.  The caller must drop its references after
+    the call — on backends with donation support the inputs are deleted.
+    """
+    sums, cnts = fedavg_accum(packets, wmask, block_clients=block_clients,
+                              block_chunks=block_chunks, finalize=False)
+    return total + sums, counts + cnts
+
+
 @functools.partial(jax.jit, static_argnames=("n_slots",))
 def packet_scatter(packets, idx, n_slots: int, init=None):
     """Place packets (N, W) at rows idx (N,) of a (n_slots, W) buffer.
@@ -92,27 +110,11 @@ def packet_scatter(packets, idx, n_slots: int, init=None):
                                  interpret=_interpret())
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("mode", "block_slots", "block_pkts"))
-def packet_scatter_accum(packets, idx, acc, counts, weights=None,
-                         mode: str = "exact", block_slots: int = 8,
-                         block_pkts: int = BLOCK_PKTS):
-    """Scatter-accumulate a drained ring batch into live (acc, counts).
-
-    packets (N, W) at slot rows idx (N,) int32; acc (S, W) f32; counts
-    (S,) f32; weights (N,) optional per-arrival FedAvg weights.  Returns
-    (acc', counts').  ``mode="exact"`` adds every arrival; ``"approx"``
-    is the deterministic lock-free race: within this batch the last
-    writer to a slot wins against the call-entry snapshot, while counts
-    still see every arrival (DESIGN.md §3).  Ring padding is expressed
-    as idx=-1 / weight=0 and is inert in both sums and counts.
-    """
-    if mode not in ("exact", "approx"):
-        raise ValueError(mode)
+def _packet_scatter_accum_impl(packets, idx, acc, counts, weights,
+                               mode: str, block_slots: int,
+                               block_pkts: int):
     N, W = packets.shape
     S = counts.shape[0]
-    if weights is None:
-        weights = jnp.ones((N,), jnp.float32)
     # pad the batch axis with idx=-1 (matches no slot) / weight 0
     pad_n = (-N) % block_pkts
     if pad_n:
@@ -125,3 +127,43 @@ def packet_scatter_accum(packets, idx, acc, counts, weights=None,
         block_slots=block_slots, block_pkts=block_pkts,
         interpret=_interpret())
     return acc_out[:S], cnt_out[:S, 0]
+
+
+_packet_scatter_accum = jax.jit(
+    _packet_scatter_accum_impl,
+    static_argnames=("mode", "block_slots", "block_pkts"))
+# donating variant: acc/counts buffers are reused in place, so the
+# per-drain hot path (StreamingAggregator.scatter_add, the compiled
+# round engine) stops allocating a fresh (S, W) total per call
+_packet_scatter_accum_donated = jax.jit(
+    _packet_scatter_accum_impl,
+    static_argnames=("mode", "block_slots", "block_pkts"),
+    donate_argnums=(2, 3))
+
+
+def packet_scatter_accum(packets, idx, acc, counts, weights=None,
+                         mode: str = "exact", block_slots: int = 8,
+                         block_pkts: int = BLOCK_PKTS,
+                         donate: bool = False):
+    """Scatter-accumulate a drained ring batch into live (acc, counts).
+
+    packets (N, W) at slot rows idx (N,) int32; acc (S, W) f32; counts
+    (S,) f32; weights (N,) optional per-arrival FedAvg weights.  Returns
+    (acc', counts').  ``mode="exact"`` adds every arrival; ``"approx"``
+    is the deterministic lock-free race: within this batch the last
+    writer to a slot wins against the call-entry snapshot, while counts
+    still see every arrival (DESIGN.md §3).  Ring padding is expressed
+    as idx=-1 / weight=0 and is inert in both sums and counts.
+
+    ``donate=True`` donates the (acc, counts) buffers to the call
+    (``jax.jit(..., donate_argnums)``): the accumulator is updated in
+    place instead of reallocated per drain.  Callers must treat the
+    passed arrays as consumed.
+    """
+    if mode not in ("exact", "approx"):
+        raise ValueError(mode)
+    if weights is None:
+        weights = jnp.ones((packets.shape[0],), jnp.float32)
+    fn = _packet_scatter_accum_donated if donate else _packet_scatter_accum
+    return fn(packets, idx, acc, counts, weights, mode=mode,
+              block_slots=block_slots, block_pkts=block_pkts)

@@ -33,6 +33,14 @@ parameter buffer (§4.1).  Two kernels cover the two server designs:
 
 Both kernels run under ``interpret=True`` on CPU (how CI validates
 them); on TPU they compile through Mosaic.
+
+Two scan-level entry points extend the accumulate kernel to whole
+rounds (DESIGN.md §3): ``packet_scatter_accum_batch_jnp`` is the
+bitwise jnp twin of one kernel call (the scan body on non-TPU
+backends, where the interpreted grid would unroll per batch), and
+``packet_scatter_accum_scan`` drives a dense (n_batches, B) drain
+schedule through either body as one ``lax.scan`` with the accumulator
+carried in place.
 """
 from __future__ import annotations
 
@@ -186,3 +194,87 @@ def packet_scatter_accum_pallas(packets: jnp.ndarray, idx: jnp.ndarray,
         interpret=interpret,
     )(idx2d, w2d, packets, acc.astype(jnp.float32),
       counts.astype(jnp.float32))
+
+
+def packet_scatter_accum_batch_jnp(packets: jnp.ndarray, idx: jnp.ndarray,
+                                   weights: jnp.ndarray, acc: jnp.ndarray,
+                                   counts: jnp.ndarray, *,
+                                   exact: bool = True):
+    """jnp twin of one ``packet_scatter_accum_pallas`` call.
+
+    Same dataflow as ``_scatter_accum_kernel`` — one-hot (slot × packet)
+    routing matrix, unconditional counts, exact add or last-writer-wins
+    against the call-entry snapshot — expressed as plain jnp over the
+    whole (S, N) hit matrix instead of the blocked grid.  This is the
+    scan body used on backends where the Pallas kernel would run in
+    interpret mode (the grid unrolls into hundreds of HLO ops per
+    batch); the contract is identical, and for payloads whose sums are
+    exactly representable in f32 (integer-valued tests) the result is
+    bitwise equal to the kernel for any block tiling
+    (tests/test_engine_compiled.py).
+
+    packets (N, W); idx (N,) int32 (< 0 = inert padding); weights (N,)
+    f32; acc (S, W) f32; counts (S, 1) f32.  Returns (acc', counts').
+    """
+    S = acc.shape[0]
+    N = idx.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (S, N), 0)
+    hits = idx[None, :].astype(jnp.int32) == rows         # (S, N) bool
+    w = weights[None, :].astype(jnp.float32)              # (1, N)
+    whot = hits.astype(jnp.float32) * w
+    counts = counts + jnp.sum(whot, axis=1, keepdims=True)
+    pkt = packets.astype(jnp.float32)
+    if exact:
+        acc = acc + jnp.dot(whot, pkt, preferred_element_type=jnp.float32)
+    else:
+        valid = hits & (w > 0)
+        colpos = jax.lax.broadcasted_iota(jnp.int32, (S, N), 1) + 1
+        lastcol = jnp.max(jnp.where(valid, colpos, 0), axis=1,
+                          keepdims=True)                  # (S, 1); 0 = no hit
+        lasthot = (colpos == lastcol) & valid
+        contrib = jnp.dot(lasthot.astype(jnp.float32) * w, pkt,
+                          preferred_element_type=jnp.float32)
+        # ``acc`` here is the call-entry snapshot, so this reproduces
+        # the kernel's deterministic lock-free race exactly
+        acc = jnp.where(lastcol > 0, acc + contrib, acc)
+    return acc, counts
+
+
+def packet_scatter_accum_scan(sched_idx: jnp.ndarray, sched_w: jnp.ndarray,
+                              sched_pk: jnp.ndarray, acc: jnp.ndarray,
+                              counts: jnp.ndarray, *,
+                              exact: bool = True,
+                              use_pallas: bool = False,
+                              block_slots: int = 8,
+                              block_pkts: int = BLOCK_PKTS,
+                              interpret: bool = False):
+    """Run a whole round's drain schedule as one ``lax.scan``.
+
+    sched_idx/sched_w (n_batches, B) and sched_pk (n_batches, B, W) are
+    the dense drain schedule (core/engine_compiled.py): each row is one
+    drained ring batch, padded with inert ``idx = -1`` / ``weight = 0``
+    entries.  acc (S, W) and counts (S, 1) are the live accumulator
+    carried through the scan — XLA keeps the carry buffers in place, so
+    no per-drain (S, W) reallocation happens.  ``use_pallas`` selects
+    the Pallas grid kernel (the production TPU body; S must then be a
+    multiple of ``block_slots`` and B of ``block_pkts``) vs the jnp
+    twin; both implement the same DESIGN.md §3 contract per batch.
+    """
+    if use_pallas:
+        def step(carry, batch):
+            a, c = carry
+            bidx, bw, bpk = batch
+            a, c = packet_scatter_accum_pallas(
+                bpk, bidx, bw, a, c, exact=exact, block_slots=block_slots,
+                block_pkts=block_pkts, interpret=interpret)
+            return (a, c), None
+    else:
+        def step(carry, batch):
+            a, c = carry
+            bidx, bw, bpk = batch
+            a, c = packet_scatter_accum_batch_jnp(bpk, bidx, bw, a, c,
+                                                  exact=exact)
+            return (a, c), None
+    (acc, counts), _ = jax.lax.scan(step, (acc, counts),
+                                    (sched_idx, sched_w, sched_pk))
+    return acc, counts

@@ -155,9 +155,27 @@ def test_data_before_start_and_after_end_is_ignored():
     engine.rx(Packet(Kind.DATA, 0, 1), np.asarray(pk[0, 1]))
     engine.rx(Packet(Kind.END, 0))
     engine.rx(Packet(Kind.DATA, 0, 2), np.asarray(pk[0, 2]))   # post-END
+    engine.rx(Packet(Kind.DATA, 0, 1), np.asarray(pk[0, 1]))   # post-END dup
     engine.flush()
     counts = np.asarray(engine.agg.counts)
     assert counts[0] == 0.0 and counts[2] == 0.0 and counts[1] == 1.0
+    # the two drop cases are counted separately: the FSM gate caught the
+    # pre-START and both post-END packets (phase goes COMPUTE at END, so
+    # the re-delivery of slot 1 is phase-dropped, not dedup-dropped)
+    assert engine.stats.phase_dropped == 3
+    assert engine.stats.duplicates_dropped == 0
+
+
+def test_duplicate_in_window_counts_as_duplicate_not_phase():
+    rng = np.random.default_rng(6)
+    pk = jax.vmap(lambda f: packetize(f, 16))(_int_flats(rng, 1, 64))
+    engine = ServerEngine(EngineConfig(n_clients=1, n_params=64, payload=16))
+    engine.rx(Packet(Kind.START, 0))
+    engine.rx(Packet(Kind.DATA, 0, 1), np.asarray(pk[0, 1]))
+    engine.rx(Packet(Kind.DATA, 0, 1), np.asarray(pk[0, 1]))   # UDP dup
+    assert engine.stats.duplicates_dropped == 1
+    assert engine.stats.phase_dropped == 0
+    assert engine.stats.data_enqueued == 1
 
 
 def test_control_packets_are_answered():
