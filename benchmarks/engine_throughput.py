@@ -19,8 +19,22 @@ Each run overwrites ``BENCH_engine.json`` (committed — its git history
 is the perf trajectory across PRs; schema in EXPERIMENTS.md
 §Engine-throughput).
 
+``--shard-sweep`` instead sweeps the sharded round engine
+(``EngineConfig(shards=N)``, DESIGN.md §7) over shards ∈ {1, 2, 4, 8}
+at K=256 on the ``'worker'`` device mesh and writes
+``BENCH_shard.json`` (schema in EXPERIMENTS.md §Shard-scaling).  The
+timed stage is one sharded round dispatch (per-shard schedule split +
+transfer + the compiled drain scan the sharding parallelizes); the
+event demux is identical across shard counts and is reported
+separately (the overlap driver hides it under the previous round's
+scan).  Run it with 8 devices, e.g.::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python benchmarks/engine_throughput.py --shard-sweep
+
 Usage:
-    python benchmarks/engine_throughput.py [--quick] [--out BENCH_engine.json]
+    python benchmarks/engine_throughput.py [--quick] [--shard-sweep]
+                                           [--out BENCH_engine.json]
 """
 from __future__ import annotations
 
@@ -43,6 +57,10 @@ CLIENT_SWEEP = (10, 64, 256)
 N_PARAMS, PAYLOAD, RING_CAPACITY = 16384, 64, 64
 LOSS_RATE, DUP_RATE = 0.01, 0.02
 OVERLAP_ROUNDS = 4
+SHARD_SWEEP = (1, 2, 4, 8)
+SHARD_K = 256               # the worker-scaling point (paper Fig. 6/7)
+SHARD_WORKERS = 8           # rings == BlueField-2 cores; fixed across the
+                            # sweep so batching (and bits) never change
 
 
 def _measure_overlap(mode: str, n_clients: int, n_params: int,
@@ -115,29 +133,125 @@ def rows(ks=CLIENT_SWEEP, quick: bool = False):
     return out
 
 
+def shard_rows(quick: bool = False):
+    """Sharded-engine sweep: shards ∈ SHARD_SWEEP at the K=256 scaling
+    point (quick: K=64, small rounds, exact only — the CI smoke)."""
+    from repro.core import engine_compiled as ec
+    from repro.core.packets import packetize
+    from repro.core.server import EngineConfig, make_uplink_stream
+    from repro.runtime.sharding import worker_mesh
+
+    k = 64 if quick else SHARD_K
+    n_params = 4096 if quick else N_PARAMS
+    modes = ("exact",) if quick else ("exact", "approx")
+    # quick rounds scan in single-digit ms, where cross-device dispatch
+    # jitter swamps a one-shot timing (±40% run-to-run observed); time a
+    # burst of dispatches per sample so the bench_gate threshold gates
+    # the code, not the scheduler
+    reps = 8 if quick else 1
+    rng = np.random.default_rng(0)
+    flats = jnp.asarray(rng.normal(size=(k, n_params)).astype(np.float32))
+    prev = jnp.zeros((n_params,), jnp.float32)
+    pk = jax.vmap(lambda f: packetize(f, PAYLOAD))(flats)
+    events, _ = make_uplink_stream(rng, pk, loss_rate=LOSS_RATE,
+                                   dup_rate=DUP_RATE)
+    out = []
+    # the drain schedule is shard- and mode-independent (it depends only
+    # on the stream and the ring topology): demux once, reuse everywhere
+    # — dispatch_round re-demuxes it per shard internally
+    cfg0 = EngineConfig(n_clients=k, n_params=n_params, payload=PAYLOAD,
+                        ring_capacity=RING_CAPACITY,
+                        n_workers=SHARD_WORKERS, compile=True)
+    t0 = time.perf_counter()
+    sched, st, _ = ec.demux_events(cfg0, events)
+    demux_s = time.perf_counter() - t0
+    for mode in modes:
+        base_scan = None
+        for shards in SHARD_SWEEP:
+            cfg = EngineConfig(n_clients=k, n_params=n_params,
+                               payload=PAYLOAD, ring_capacity=RING_CAPACITY,
+                               n_workers=SHARD_WORKERS, mode=mode,
+                               compile=True, shards=shards)
+
+            def one():
+                t0 = time.perf_counter()
+                for _ in range(reps):
+                    total = jnp.zeros((cfg.n_slots, PAYLOAD), jnp.float32)
+                    counts = jnp.zeros((cfg.n_slots,), jnp.float32)
+                    _, _, new_global, _ = ec.dispatch_round(
+                        cfg, sched, total, counts, prev)
+                    new_global.block_until_ready()
+                return (time.perf_counter() - t0) / reps
+
+            one()                                     # warmup: jit trace
+            scan_s = min(one() for _ in range(3))
+            base_scan = scan_s if shards == 1 else base_scan
+            row = {
+                "k": k, "mode": mode, "engine": "compiled_shard",
+                "shards": shards,
+                "on_mesh": worker_mesh(shards) is not None,
+                "n_params": n_params, "payload": PAYLOAD,
+                "ring_capacity": RING_CAPACITY,
+                "n_workers": SHARD_WORKERS,
+                "packets": float(st.data_enqueued),
+                "demux_s": demux_s,
+                "scan_s": scan_s,
+                "round_s": demux_s + scan_s,
+                "pkts_per_s": st.data_enqueued / scan_s,
+                "speedup_vs_shard1": base_scan / scan_s,
+                "interpret": jax.default_backend() != "tpu",
+            }
+            out.append(row)
+            print(f"K={k:4d} {mode:6s}/shards={shards} "
+                  f"{'mesh' if row['on_mesh'] else 'emul'} "
+                  f"{scan_s*1e3:9.2f} ms/scan "
+                  f"{row['pkts_per_s']/1e3:9.1f} kpkt/s "
+                  f"({row['speedup_vs_shard1']:4.2f}x vs 1 shard)")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small rounds, K<=64, no overlap rows (CI smoke)")
-    ap.add_argument("--out", default=os.path.join(
-        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        "BENCH_engine.json"))
+    ap.add_argument("--shard-sweep", action="store_true",
+                    help="sweep EngineConfig(shards=N) over the worker "
+                         "mesh and write BENCH_shard.json instead")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    ks = (10, 64) if args.quick else CLIENT_SWEEP
-    result = {
-        "bench": "engine_throughput",
-        "backend": jax.default_backend(),
-        "quick": args.quick,
-        "client_sweep": list(ks),
-        "payload": PAYLOAD,
-        "ring_capacity": RING_CAPACITY,
-        "loss_rate": LOSS_RATE,
-        "dup_rate": DUP_RATE,
-        "rows": rows(ks=ks, quick=args.quick),
-    }
-    with open(args.out, "w") as f:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if args.shard_sweep:
+        out_path = args.out or os.path.join(root, "BENCH_shard.json")
+        result = {
+            "bench": "shard_scaling",
+            "backend": jax.default_backend(),
+            "n_devices": jax.device_count(),
+            "quick": args.quick,
+            "shard_sweep": list(SHARD_SWEEP),
+            "payload": PAYLOAD,
+            "ring_capacity": RING_CAPACITY,
+            "n_workers": SHARD_WORKERS,
+            "loss_rate": LOSS_RATE,
+            "dup_rate": DUP_RATE,
+            "rows": shard_rows(quick=args.quick),
+        }
+    else:
+        out_path = args.out or os.path.join(root, "BENCH_engine.json")
+        ks = (10, 64) if args.quick else CLIENT_SWEEP
+        result = {
+            "bench": "engine_throughput",
+            "backend": jax.default_backend(),
+            "quick": args.quick,
+            "client_sweep": list(ks),
+            "payload": PAYLOAD,
+            "ring_capacity": RING_CAPACITY,
+            "loss_rate": LOSS_RATE,
+            "dup_rate": DUP_RATE,
+            "rows": rows(ks=ks, quick=args.quick),
+        }
+    with open(out_path, "w") as f:
         json.dump(result, f, indent=2)
-    print(f"wrote {args.out} ({len(result['rows'])} rows)")
+    print(f"wrote {out_path} ({len(result['rows'])} rows)")
 
 
 if __name__ == "__main__":

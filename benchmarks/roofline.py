@@ -27,8 +27,15 @@ def load(dirname: str = DEFAULT_DIR):
 
 
 def rows(dirname: str = DEFAULT_DIR):
+    arts = load(dirname)
+    if not arts:
+        # benchmarks/run.py skips (not fails) sections whose input
+        # artifact is absent
+        raise FileNotFoundError(
+            f"no dry-run artifacts under {dirname!r} "
+            "(launch/dryrun.py writes them)")
     out = []
-    for a in load(dirname):
+    for a in arts:
         if a.get("failed"):
             out.append((f"roofline_{a['arch']}_{a['shape']}", 0.0, "FAILED"))
             continue

@@ -13,7 +13,15 @@ round is bitwise identical to the one-shot ``fused_round_step``.
 ``lax.scan`` per round with donated accumulators — same bits, no
 per-drain dispatch (DESIGN.md §3).
 
+``--shards N`` additionally demuxes the compiled drain schedule over N
+worker-mesh shards, each folding a per-shard partial sum combined at
+END — the paper's per-core layout (DESIGN.md §7), still bitwise
+identical.  With fewer than N devices a single-device emulation runs;
+to see the real mesh:
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
 Run:  PYTHONPATH=src python examples/packet_server.py [--compile]
+                                                      [--shards N]
 """
 import argparse
 
@@ -32,7 +40,12 @@ def main():
     ap.add_argument("--compile", action="store_true",
                     help="run each round as one compiled lax.scan "
                          "(EngineConfig(compile=True))")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="worker-mesh shards for the compiled round "
+                         "(implies --compile; DESIGN.md §7)")
     args = ap.parse_args()
+    if args.shards > 1:
+        args.compile = True
     K, P, W = 10, 4096, 64
     rng = np.random.default_rng(0)
     # integer-valued params make f32 sums order-independent, so the
@@ -53,11 +66,14 @@ def main():
     for mode, cap in [("exact", 64), ("approx", 64)]:
         cfg = EngineConfig(n_clients=K, n_params=P, payload=W,
                            ring_capacity=cap, mode=mode,
-                           compile=args.compile)
+                           compile=args.compile, shards=args.shards)
         res = run_engine_round(cfg, client_flats, prev_global, events,
                                down_mask=down_mask)
         s = res.stats
         engine = "compiled (one lax.scan)" if args.compile else "eager"
+        if args.shards > 1:
+            engine = (f"compiled, {args.shards} worker shards "
+                      f"({min(args.shards, len(jax.devices()))} devices)")
         print(f"\n== {mode} server [{engine}] ==")
         print(f"  rx: {s.data_enqueued} unique packets ringed, "
               f"{s.duplicates_dropped} duplicates dropped at RX, "

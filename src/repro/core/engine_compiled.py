@@ -33,6 +33,15 @@ that pipeline and compiles the *execution*:
    analogue of the paper's dedicated RX core running ahead of the
    workers (§3.2).
 
+4. **Sharding** (``EngineConfig(shards=N)``, DESIGN.md §7): the drain
+   schedule is demuxed per shard by ring ownership
+   (``shard_schedule``) and each shard folds its batches into
+   shard-local ``(total, counts)`` partials — the DPU's per-core
+   partial sums — combined by one ``psum`` over the ``'worker'``
+   device mesh (``runtime.sharding.worker_mesh``) before the fused END
+   divide; a vmap emulation covers platforms with fewer devices,
+   bitwise identically.
+
 Entry points: ``run_compiled_round`` mirrors
 ``server.run_engine_round`` (which routes here when
 ``EngineConfig.compile`` is set); ``ServerEngine`` with
@@ -54,7 +63,9 @@ from repro.core.packets import depacketize
 from repro.core.protocol import Kind
 from repro.core.server import (EngineConfig, EngineStats, RoundResult)
 from repro.kernels.packet_scatter import (BLOCK_PKTS,
-                                          packet_scatter_accum_scan)
+                                          packet_scatter_accum_scan,
+                                          packet_scatter_accum_sharded)
+from repro.runtime.sharding import worker_ctx
 
 
 def _interpret() -> bool:
@@ -91,6 +102,9 @@ class DrainSchedule:
     payloads: np.ndarray    # (n_rows, B, W) f32 payload rows
     n_batches: int          # real drain batches (rest is padding)
     n_packets: int          # accepted arrivals scheduled
+    workers: Optional[np.ndarray] = None   # (n_rows,) owning worker ring
+                                           # per batch (-1 for padding);
+                                           # shard_schedule keys on it
 
 
 def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
@@ -115,7 +129,8 @@ def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
     if n == 0:
         return DrainSchedule(np.full((1, B), -1, np.int32),
                              np.zeros((1, B), np.float32),
-                             np.zeros((1, B, W), np.float32), 0, 0)
+                             np.zeros((1, B, W), np.float32), 0, 0,
+                             np.full((1,), -1, np.int64))
     if ring_assign == "slot":
         worker = slots.astype(np.int64) % n_workers
     else:
@@ -149,7 +164,73 @@ def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
     idx[row, col] = slots
     w[row, col] = weights
     pk[row, col] = payloads
-    return DrainSchedule(idx, w, pk, int(nb), n)
+    row_worker = np.full(n_rows, -1, np.int64)
+    row_worker[rank] = uniq // (n + 1)            # batch key -> its worker
+    return DrainSchedule(idx, w, pk, int(nb), n, row_worker)
+
+
+def shard_schedule(sched: DrainSchedule, n_shards: int, *,
+                   pad_batches: int = 8
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Demux a round's drain schedule per shard (DESIGN.md §7).
+
+    Shard ``s`` owns the drain batches of worker rings ``w`` with
+    ``w % n_shards == s`` — the paper's static ring→core pinning — so a
+    drain batch (and with it approx mode's last-writer-wins window)
+    lives entirely on one shard.  Batch composition is *unchanged* from
+    the unsharded schedule; only the fold of batches into accumulators
+    is regrouped, which is what keeps any shard count bitwise identical
+    to the unsharded engine on integer-valued payloads (both modes are
+    additive across batches).
+
+    Returns ``(idx, weights, payloads)`` with a leading ``(n_shards,)``
+    axis; shards are padded to a common row count (bucketed to a
+    multiple of ``pad_batches`` so round-to-round jitter reuses one jit
+    trace) with inert rows, and shards with no assigned ring (e.g.
+    ``n_shards > n_workers``) are entirely inert.
+    """
+    assert sched.workers is not None, "schedule predates worker tracking"
+    B = sched.idx.shape[1]
+    W = sched.payloads.shape[2]
+    live = sched.workers[:sched.n_batches]
+    per_shard = [np.nonzero(live % n_shards == s)[0]
+                 for s in range(n_shards)]
+    rows = max((len(p) for p in per_shard), default=0)
+    rows = max(rows, 1)
+    if pad_batches > 1:
+        rows += (-rows) % pad_batches
+    idx = np.full((n_shards, rows, B), -1, np.int32)
+    w = np.zeros((n_shards, rows, B), np.float32)
+    pk = np.zeros((n_shards, rows, B, W), np.float32)
+    for s, p in enumerate(per_shard):
+        idx[s, :len(p)] = sched.idx[p]
+        w[s, :len(p)] = sched.weights[p]
+        pk[s, :len(p)] = sched.payloads[p]
+    return idx, w, pk
+
+
+def approx_lost_updates(sched: DrainSchedule, n_shards: int = 1
+                        ) -> np.ndarray:
+    """Per-shard count of approx-mode lost updates (race accounting).
+
+    Within one drained batch every same-slot arrival beyond the last
+    writer is lost in approx mode, so the loss of a batch is (weighted
+    arrivals) − (distinct slots hit).  Batches are demuxed to shards by
+    ring ownership exactly as ``shard_schedule`` does, hence the
+    per-shard race window: each shard loses only what its own rings
+    race, summing to the unsharded total — sharding splits the lost
+    updates ≈ 1/n_shards per shard without changing the global race
+    (EXPERIMENTS.md §Shard-scaling).
+    """
+    assert sched.workers is not None
+    lost = np.zeros(n_shards, np.int64)
+    live = sched.workers[:sched.n_batches]
+    for r in range(sched.n_batches):
+        valid = (sched.idx[r] >= 0) & (sched.weights[r] > 0)
+        hits = int(valid.sum())
+        distinct = len(np.unique(sched.idx[r][valid]))
+        lost[int(live[r]) % n_shards] += hits - distinct
+    return lost
 
 
 def demux_events(cfg: EngineConfig, events: Iterable,
@@ -251,12 +332,14 @@ def demux_events(cfg: EngineConfig, events: Iterable,
 @functools.partial(jax.jit,
                    static_argnames=("mode", "payload", "n_params",
                                     "use_pallas", "block_slots",
-                                    "block_pkts", "mix_alpha", "interpret"),
+                                    "block_pkts", "mix_alpha", "interpret",
+                                    "shards", "mesh"),
                    donate_argnums=(0, 1))
 def _round_device(total, counts, sched_idx, sched_w, sched_pk, prev_global,
                   client_flats, down_mask, *, mode: str, payload: int,
                   n_params: int, use_pallas: bool, block_slots: int,
-                  block_pkts: int, mix_alpha: float, interpret: bool):
+                  block_pkts: int, mix_alpha: float, interpret: bool,
+                  shards: int = 1, mesh=None):
     """The whole round as one compiled dataflow.
 
     total (S, W) / counts (S,) are donated and carried through the drain
@@ -264,6 +347,12 @@ def _round_device(total, counts, sched_idx, sched_w, sched_pk, prev_global,
     sequence of ``StreamingAggregator.finalize`` + ``finalize_round``)
     and — when ``client_flats``/``down_mask`` are present — the TX
     downlink fallback run fused in the same call.
+
+    With ``shards > 1`` the schedule arrays carry a leading (shards,)
+    axis and the drain scan runs per shard into shard-local partials
+    combined by one psum (DESIGN.md §7) — over the ``'worker'`` device
+    mesh when ``mesh`` is given, else emulated on one device; the END
+    divide below is fused after the combine either way.
     """
     S = counts.shape[0]
     acc, cnt = total, counts[:, None]
@@ -271,10 +360,17 @@ def _round_device(total, counts, sched_idx, sched_w, sched_pk, prev_global,
     if pad:
         acc = jnp.pad(acc, ((0, pad), (0, 0)))
         cnt = jnp.pad(cnt, ((0, pad), (0, 0)))
-    acc, cnt = packet_scatter_accum_scan(
-        sched_idx, sched_w, sched_pk, acc, cnt, exact=(mode == "exact"),
-        use_pallas=use_pallas, block_slots=block_slots,
-        block_pkts=block_pkts, interpret=interpret)
+    if shards > 1:
+        acc, cnt = packet_scatter_accum_sharded(
+            sched_idx, sched_w, sched_pk, acc, cnt, mesh=mesh,
+            exact=(mode == "exact"), use_pallas=use_pallas,
+            block_slots=block_slots, block_pkts=block_pkts,
+            interpret=interpret)
+    else:
+        acc, cnt = packet_scatter_accum_scan(
+            sched_idx, sched_w, sched_pk, acc, cnt, exact=(mode == "exact"),
+            use_pallas=use_pallas, block_slots=block_slots,
+            block_pkts=block_pkts, interpret=interpret)
     total, counts = acc[:S], cnt[:S, 0]
     avg = total / jnp.maximum(counts, 1e-12)[:, None]
     avg = jnp.where(counts[:, None] > 0, avg, 0.0)
@@ -296,19 +392,33 @@ def dispatch_round(cfg: EngineConfig, sched: DrainSchedule, total, counts,
                    mix_alpha: float = 0.0):
     """Dispatch one round (async) -> (total', counts', new_global,
     new_flats|None).  ``total``/``counts`` are donated — callers pass
-    buffers they own and adopt the returned ones."""
+    buffers they own and adopt the returned ones.
+
+    ``cfg.shards > 1`` demuxes the schedule per shard and routes the
+    scan through the sharded partial-sum path: over a real ``'worker'``
+    mesh when the platform has enough devices
+    (``runtime.sharding.worker_mesh``), else a bitwise single-device
+    emulation.
+    """
     if cfg.mode not in ("exact", "approx"):
         raise ValueError(cfg.mode)
+    idx, w, pk = sched.idx, sched.weights, sched.payloads
+    mesh = None
+    if cfg.shards > 1:
+        idx, w, pk = shard_schedule(sched, cfg.shards)
+        ctx = worker_ctx(cfg.shards)
+        mesh = None if ctx is None else ctx.mesh
     return _round_device(
         jnp.asarray(total, jnp.float32), jnp.asarray(counts, jnp.float32),
-        jnp.asarray(sched.idx), jnp.asarray(sched.weights),
-        jnp.asarray(sched.payloads), jnp.asarray(prev_global),
+        jnp.asarray(idx), jnp.asarray(w), jnp.asarray(pk),
+        jnp.asarray(prev_global),
         None if client_flats is None else jnp.asarray(client_flats),
         None if down_mask is None else jnp.asarray(down_mask),
         mode=cfg.mode, payload=cfg.payload, n_params=cfg.n_params,
         use_pallas=_use_pallas(cfg), block_slots=8,
-        block_pkts=min(BLOCK_PKTS, sched.idx.shape[1]),
-        mix_alpha=float(mix_alpha), interpret=_interpret())
+        block_pkts=min(BLOCK_PKTS, idx.shape[-1]),
+        mix_alpha=float(mix_alpha), interpret=_interpret(),
+        shards=cfg.shards, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------

@@ -57,6 +57,21 @@ class EngineConfig:
     use_kernel: bool = True            # False: sequential host oracle
     compile: bool = False              # True: one lax.scan per round
     scan_body: str = "auto"            # auto | pallas | jnp (compile=True)
+    # worker-mesh shards for the compiled round (DESIGN.md §7): each
+    # shard folds its worker rings' drains into a per-shard partial sum
+    # combined at END — the paper's per-core layout.  Effective device
+    # parallelism is min(shards, n_workers, available devices); any
+    # shard count is bitwise identical on integer payloads.
+    shards: int = 1
+
+    def __post_init__(self):
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
+        if self.shards > 1 and not self.compile:
+            raise ValueError(
+                "shards > 1 requires compile=True: sharding demuxes the "
+                "compiled drain schedule over the worker mesh "
+                "(DESIGN.md §7)")
 
     @property
     def n_slots(self) -> int:

@@ -278,3 +278,78 @@ def packet_scatter_accum_scan(sched_idx: jnp.ndarray, sched_w: jnp.ndarray,
     (acc, counts), _ = jax.lax.scan(step, (acc, counts),
                                     (sched_idx, sched_w, sched_pk))
     return acc, counts
+
+
+def combine_partials(acc_parts: jnp.ndarray, cnt_parts: jnp.ndarray,
+                     axis_name: str | None = None):
+    """Merge per-shard partial sums (the paper's per-core combine, §3.2).
+
+    Inside ``shard_map`` the partials live one-per-device and the merge
+    is a single ``psum`` over ``axis_name``; in the single-device
+    emulation they carry a leading shard axis and the merge is a plain
+    sum over it.  Both orderings add one partial per shard, so for
+    payloads whose sums are exactly representable in f32 (integer-valued
+    test streams) the two paths are bitwise identical.
+    """
+    if axis_name is not None:
+        return (jax.lax.psum(acc_parts, axis_name),
+                jax.lax.psum(cnt_parts, axis_name))
+    return jnp.sum(acc_parts, axis=0), jnp.sum(cnt_parts, axis=0)
+
+
+def packet_scatter_accum_sharded(sched_idx: jnp.ndarray,
+                                 sched_w: jnp.ndarray,
+                                 sched_pk: jnp.ndarray, acc: jnp.ndarray,
+                                 counts: jnp.ndarray, *,
+                                 mesh=None, axis_name: str = "worker",
+                                 exact: bool = True,
+                                 use_pallas: bool = False,
+                                 block_slots: int = 8,
+                                 block_pkts: int = BLOCK_PKTS,
+                                 interpret: bool = False):
+    """Sharded round scan: per-shard partial sums + one combine at END.
+
+    sched_idx/sched_w (n_shards, R, B) and sched_pk (n_shards, R, B, W)
+    carry the drain schedule demuxed per shard
+    (``engine_compiled.shard_schedule``): shard s owns the drain batches
+    of the worker rings mapped to it, padded to a common row count R
+    with inert rows.  Each shard folds its slice through the unsharded
+    scan body (``packet_scatter_accum_scan``) into **zero-initialized
+    shard-local (total, counts) partials** — the DPU's per-core
+    accumulators — and the partials are merged by ``combine_partials``:
+    a ``psum`` over the ``'worker'`` mesh axis when ``mesh`` is given
+    (real devices, via ``shard_map``), else a sum over the leading shard
+    axis (vmap emulation, any device count).  The incoming ``acc`` /
+    ``counts`` are added after the combine.
+
+    Exactness: both modes' per-batch contributions are additive — exact
+    adds every weighted arrival, approx adds exactly one last-writer
+    contribution per (slot, drained batch) — so regrouping batches by
+    shard changes only f32 summation order.  On integer-valued payloads
+    the result is bitwise identical to the unsharded scan over the same
+    schedule, in both modes (tests/test_engine_sharded.py).
+    """
+    body = functools.partial(
+        packet_scatter_accum_scan, exact=exact, use_pallas=use_pallas,
+        block_slots=block_slots, block_pkts=block_pkts, interpret=interpret)
+    zero_acc = jnp.zeros_like(acc)
+    zero_cnt = jnp.zeros_like(counts)
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        def shard_fn(bidx, bw, bpk):
+            # leading shard axis is size 1 on each device
+            a, c = body(bidx[0], bw[0], bpk[0], zero_acc, zero_cnt)
+            return combine_partials(a, c, axis_name=axis_name)
+
+        spec = P(axis_name)
+        a, c = shard_map(
+            shard_fn, mesh=mesh, in_specs=(spec, spec, spec),
+            out_specs=(P(), P()))(sched_idx, sched_w, sched_pk)
+    else:
+        a_parts, c_parts = jax.vmap(
+            lambda bidx, bw, bpk: body(bidx, bw, bpk, zero_acc, zero_cnt)
+        )(sched_idx, sched_w, sched_pk)
+        a, c = combine_partials(a_parts, c_parts)
+    return acc + a, counts + c

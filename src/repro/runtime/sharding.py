@@ -16,10 +16,12 @@ Everything is a no-op when ``ctx is None`` (single-device smoke tests).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import re
 from typing import Any, Optional, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -65,6 +67,10 @@ class ParallelCtx:
         return tuple(self.mesh.axis_names)
 
     @property
+    def worker_axis(self) -> Optional[str]:
+        return WORKER_AXIS if WORKER_AXIS in self.axis_names else None
+
+    @property
     def dp_axes(self) -> Tuple[str, ...]:
         return tuple(a for a in self.axis_names if a in ("pod", "data"))
 
@@ -78,6 +84,48 @@ class ParallelCtx:
 
     def axis_size(self, name: str) -> int:
         return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[name]
+
+
+# ---------------------------------------------------------------------------
+# Worker axis: the packet-engine shard dimension (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+# The paper's server splits one round's aggregation across the DPU's
+# worker cores, each folding its ring drains into a per-core partial sum
+# combined at END.  The sharded round engine maps those cores onto a 1-D
+# ``('worker',)`` device mesh: core/engine_compiled.py demuxes the drain
+# schedule per shard and psums the shard-local (total, counts) partials.
+
+WORKER_AXIS = "worker"
+
+
+@functools.lru_cache(maxsize=None)
+def worker_mesh(n_shards: int) -> Optional[Mesh]:
+    """1-D ``('worker',)`` mesh over the first ``n_shards`` devices.
+
+    Returns None when the platform exposes fewer devices than shards
+    (e.g. single-device CPU): callers fall back to a single-device
+    emulation of the same partial-sum dataflow, which is bitwise
+    identical — CI's multi-device lane runs the real mesh under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    if n_shards <= 1:
+        return None
+    devices = jax.devices()
+    if len(devices) < n_shards:
+        return None
+    return Mesh(np.asarray(devices[:n_shards]), (WORKER_AXIS,))
+
+
+def worker_ctx(n_shards: int) -> Optional[ParallelCtx]:
+    """ParallelCtx over the worker mesh (None when no mesh is possible).
+
+    The packet engine shards no parameters and no batch — only the drain
+    schedule — so the model-parallel knobs are all off.
+    """
+    mesh = worker_mesh(n_shards)
+    if mesh is None:
+        return None
+    return ParallelCtx(mesh=mesh, fsdp=False, shard_batch=False)
 
 
 # ---------------------------------------------------------------------------

@@ -244,14 +244,15 @@ def test_round_dispatch_donates_accumulators():
         ec._round_device,
         static_argnames=("mode", "payload", "n_params", "use_pallas",
                          "block_slots", "block_pkts", "mix_alpha",
-                         "interpret"),
+                         "interpret", "shards", "mesh"),
         donate_argnums=(0, 1)).lower(
         total := jnp.zeros((cfg.n_slots, 32), jnp.float32),
         jnp.zeros((cfg.n_slots,), jnp.float32),
         jnp.asarray(sched.idx), jnp.asarray(sched.weights),
         jnp.asarray(sched.payloads), prev, None, None,
         mode="exact", payload=32, n_params=128, use_pallas=False,
-        block_slots=8, block_pkts=128, mix_alpha=0.0, interpret=True)
+        block_slots=8, block_pkts=128, mix_alpha=0.0, interpret=True,
+        shards=1, mesh=None)
     assert "tf.aliasing_output" in lowered.as_text()
 
 

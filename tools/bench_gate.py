@@ -1,0 +1,168 @@
+#!/usr/bin/env python
+"""Benchmark-regression CI gate (EXPERIMENTS.md §Shard-scaling).
+
+Compares the compiled-engine rows of freshly produced benchmark JSON
+(``BENCH_engine.json`` / ``BENCH_shard.json`` at the repo root, written
+by the CI benchmark smokes) against the committed baselines under
+``benchmarks/baselines/`` and **fails the job when any matched row's
+``pkts_per_s`` drops by more than the threshold** (default 25%) — the
+compiled round engine is the repo's hot path, and this is the tripwire
+that keeps PRs from quietly regressing it.
+
+Matching is strict: rows pair up only when every config key — k, mode,
+engine, shards, n_params, payload, ring_capacity — is identical, so a
+quick-mode run never gets compared against a full-size baseline; rows
+present on one side only are reported and skipped.  Speedups are fine;
+only drops gate.
+
+A fresh file that is absent, or one whose ``quick`` mode differs from
+the baseline's (a fresh clone carries the committed *full* sweeps while
+baselines are CI's *quick* smokes), is skipped with a note; a missing
+*baseline* is an error nudging you to ``--update-baseline``.
+
+The gate compares absolute pkts/s, so baselines are only meaningful on
+comparable hardware: CI baselines should be refreshed from a CI-class
+run when runners shift generations, and ``--threshold`` exists to widen
+the band if runner-to-runner variance ever dominates (drops from code
+regressions in the compiled path have measured 4x+; noise on the
+min-of-iters quick smokes is well under 25% on one machine).
+
+To accept an intentional perf change, regenerate the fresh files the
+same way CI does and commit the refreshed baselines::
+
+    JAX_PLATFORMS=cpu PYTHONPATH=src \
+        python benchmarks/engine_throughput.py --quick
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \
+        PYTHONPATH=src python benchmarks/engine_throughput.py \
+        --shard-sweep --quick
+    python tools/bench_gate.py --update-baseline
+    git add benchmarks/baselines/ && git commit
+
+Usage:
+    python tools/bench_gate.py [--threshold 0.25] [--update-baseline]
+                               [files ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
+DEFAULT_FILES = ("BENCH_engine.json", "BENCH_shard.json")
+# config keys that must match exactly for two rows to be comparable
+KEY_FIELDS = ("k", "mode", "engine", "shards", "n_params", "payload",
+              "ring_capacity")
+
+
+def _row_key(row: dict):
+    return tuple(row.get(f) for f in KEY_FIELDS)
+
+
+def _compiled_rows(path: str):
+    """(quick-flag, {key: pkts_per_s}) for the gated compiled rows."""
+    with open(path) as f:
+        bench = json.load(f)
+    rows = {_row_key(r): r["pkts_per_s"] for r in bench["rows"]
+            if str(r.get("engine", "")).startswith("compiled")}
+    return bool(bench.get("quick")), rows
+
+
+def _fmt_key(key) -> str:
+    return "/".join(f"{f}={v}" for f, v in zip(KEY_FIELDS, key)
+                    if v is not None)
+
+
+def gate(files, threshold: float, baseline_dir: str = BASELINE_DIR) -> int:
+    failures = 0
+    for name in files:
+        fresh_path = name if os.path.isabs(name) else os.path.join(ROOT,
+                                                                   name)
+        base_path = os.path.join(baseline_dir, os.path.basename(name))
+        if not os.path.exists(fresh_path):
+            print(f"bench_gate: SKIP {name} (fresh file absent — "
+                  f"benchmark smoke not run)")
+            continue
+        if not os.path.exists(base_path):
+            print(f"bench_gate: FAIL {name}: no committed baseline at "
+                  f"{os.path.relpath(base_path, ROOT)} — run with "
+                  f"--update-baseline and commit it")
+            failures += 1
+            continue
+        fresh_quick, fresh = _compiled_rows(fresh_path)
+        base_quick, base = _compiled_rows(base_path)
+        if fresh_quick != base_quick:
+            # committed full-mode sweeps vs quick-mode baselines share no
+            # config keys by construction — a fresh clone or a local full
+            # regenerate is not a regression, it's just not the CI smoke
+            print(f"bench_gate: SKIP {name} (fresh is "
+                  f"{'quick' if fresh_quick else 'full'}-mode, baseline is "
+                  f"{'quick' if base_quick else 'full'}-mode — rerun the "
+                  f"smoke as CI does to gate)")
+            continue
+        matched = sorted(set(fresh) & set(base))
+        for key in sorted(set(base) - set(fresh)):
+            print(f"bench_gate: note {name}: baseline-only row "
+                  f"{_fmt_key(key)} (config changed?) — skipped")
+        for key in sorted(set(fresh) - set(base)):
+            print(f"bench_gate: note {name}: new row {_fmt_key(key)} has "
+                  f"no baseline — skipped (refresh with --update-baseline)")
+        for key in matched:
+            ratio = fresh[key] / base[key]
+            verdict = "FAIL" if ratio < 1.0 - threshold else "ok"
+            print(f"bench_gate: {verdict:4s} {name} {_fmt_key(key)}: "
+                  f"{base[key]:,.0f} -> {fresh[key]:,.0f} pkts/s "
+                  f"({ratio:.2f}x)")
+            if ratio < 1.0 - threshold:
+                failures += 1
+        if not matched:
+            print(f"bench_gate: FAIL {name}: no comparable compiled rows "
+                  f"between fresh and baseline")
+            failures += 1
+    return failures
+
+
+def update_baseline(files) -> None:
+    os.makedirs(BASELINE_DIR, exist_ok=True)
+    for name in files:
+        fresh_path = name if os.path.isabs(name) else os.path.join(ROOT,
+                                                                   name)
+        if not os.path.exists(fresh_path):
+            print(f"bench_gate: skip {name} (no fresh file to adopt)")
+            continue
+        dst = os.path.join(BASELINE_DIR, os.path.basename(name))
+        shutil.copyfile(fresh_path, dst)
+        print(f"bench_gate: baseline updated: "
+              f"{os.path.relpath(dst, ROOT)} (commit it)")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", default=None,
+                    help=f"bench JSON files to gate (default: "
+                         f"{' '.join(DEFAULT_FILES)})")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated pkts/s drop (fraction, "
+                         "default 0.25)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="adopt the fresh files as the new committed "
+                         "baselines instead of gating")
+    args = ap.parse_args()
+    files = args.files or list(DEFAULT_FILES)
+    if args.update_baseline:
+        update_baseline(files)
+        return 0
+    failures = gate(files, args.threshold)
+    if failures:
+        print(f"bench_gate: {failures} regression(s) past the "
+              f"{args.threshold:.0%} threshold")
+        return 1
+    print("bench_gate: no compiled-row regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
