@@ -1,0 +1,214 @@
+"""Participation sweep — accuracy vs deadline-closed partial rounds.
+
+The fig8-style counterpart of ISSUE 5 (EXPERIMENTS.md
+§Participation-sweep): every round's aggregation runs through the
+compiled round engine via the multi-round churn driver
+(core/rounds.py), with per-round Bernoulli client sampling and
+mid-upload stragglers timed out at the deadline close.  Two row
+families land in ``BENCH_rounds.json``:
+
+- ``kind="accuracy"``: the reduced paper CNN trained end-to-end at
+  participation ∈ {1.0, 0.7, 0.4, 0.2}, the paper's exact server.
+  participation 1.0 is the *clean* all-END baseline (straggle 0); the
+  partial rows add 20% mid-upload stragglers on top (per-row
+  ``straggle_rate`` records which applied).  The derived signal is the
+  accuracy drop vs the full barrier round — what the deadline close
+  *costs* when rounds average fewer (and truncated) clients.
+- ``kind="throughput"``: the churn driver itself (overlapped
+  ``run_compiled_rounds`` path: per-round stream generation + demux +
+  one compiled dispatch per round) in pkts/s.  The row carries the
+  bench_gate config keys (``engine="compiled_churn"``), so
+  ``tools/bench_gate.py`` holds it against
+  ``benchmarks/baselines/BENCH_rounds.json`` in CI.
+
+``--quick`` keeps only the throughput row (the CI smoke): the accuracy
+sweep trains 4 CNN runs and is a local/full artifact.
+
+Usage:
+    python benchmarks/participation_sweep.py [--quick]
+                                             [--out BENCH_rounds.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PARTICIPATION_SWEEP = (1.0, 0.7, 0.4, 0.2)
+STRAGGLE_RATE = 0.2
+LOSS_RATE, DUP_RATE = 0.0468, 0.02   # the paper's measured loss regime
+ACC_ROUNDS = 6                       # matches fig8_accuracy's reduced run
+# throughput row (the CI-gated churn-driver smoke)
+TP_K, TP_PARAMS_FULL, TP_PARAMS_QUICK = 64, 16384, 4096
+TP_PAYLOAD, TP_RING, TP_ROUNDS = 64, 64, 4
+
+
+def accuracy_rows(rounds: int = ACC_ROUNDS, seed: int = 0):
+    """Reduced-CNN FedAvg through deadline-closed churn rounds."""
+    from repro.configs.paper_cnn import CNNConfig
+    from repro.core.fedavg import FedAvgConfig, ModelFns, _local_update
+    from repro.core.packets import flatten_pytree, unflatten_pytree
+    from repro.core.rounds import ChurnConfig, run_churn_rounds
+    from repro.core.server import EngineConfig
+    from repro.data.federated import partition_iid
+    from repro.data.synthetic import synthetic_image_classification
+    from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
+
+    cnn = CNNConfig(image_size=8, conv_channels=(8, 16, 16, 16),
+                    fc_hidden=32)
+    data_rng = np.random.default_rng(seed)
+    train = synthetic_image_classification(data_rng, 640, image_size=8)
+    test = synthetic_image_classification(data_rng, 256, image_size=8)
+    clients = partition_iid(train, 10, seed=seed)
+    fns = ModelFns(
+        init=lambda r: init_cnn(r, cnn),
+        loss=lambda p, b, r: cnn_loss(p, b, cnn, dropout_rng=r),
+        test_metrics=lambda p, d: {
+            "test_loss": cnn_loss(p, d, cnn, train=False),
+            "test_acc": cnn_accuracy(p, d, cnn)},
+    )
+    fcfg = FedAvgConfig(n_clients=10, rounds=rounds, local_epochs=1,
+                        batch_size=32, lr=0.05, seed=seed)
+    rng = jax.random.PRNGKey(seed)
+    rng, init_rng = jax.random.split(rng)
+    flat0, handle = flatten_pytree(fns.init(init_rng))
+    P, K = flat0.shape[0], fcfg.n_clients
+    local_update = _local_update(fns, fcfg)
+
+    @jax.jit
+    def train_all(flats, r):
+        def one(flat, data, rr):
+            params = unflatten_pytree(flat, handle)
+            out, _ = flatten_pytree(local_update(params, data, rr))
+            return out
+        return jax.vmap(one)(flats, clients,
+                             jax.random.split(jax.random.fold_in(rng, r), K))
+
+    ecfg = EngineConfig(n_clients=K, n_params=P, payload=64,
+                        ring_capacity=2, compile=True)
+    # acc_drop_vs_full needs the clean baseline measured first
+    assert PARTICIPATION_SWEEP[0] == 1.0, \
+        "the sweep must start at full participation (the baseline row)"
+    out, base_acc = [], None
+    for participation in PARTICIPATION_SWEEP:
+        churn = ChurnConfig(
+            participation=participation,
+            straggle_rate=STRAGGLE_RATE if participation < 1.0 else 0.0,
+            loss_rate=LOSS_RATE, dup_rate=DUP_RATE,
+            down_loss_rate=LOSS_RATE)
+        hist = run_churn_rounds(
+            ecfg, churn, jnp.tile(flat0[None], (K, 1)), flat0, rounds,
+            rng=np.random.default_rng(seed + 1),
+            train_fn=lambda flats, r: train_all(flats, r))
+        metrics = fns.test_metrics(
+            unflatten_pytree(hist.final_global, handle), test)
+        acc = float(metrics["test_acc"])
+        base_acc = acc if participation == 1.0 else base_acc
+        row = {
+            "kind": "accuracy", "participation": participation,
+            "straggle_rate": churn.straggle_rate, "rounds": rounds,
+            "final_acc": acc,
+            "final_loss": float(metrics["test_loss"]),
+            "acc_drop_vs_full": (None if base_acc is None
+                                 else base_acc - acc),
+            # true mid-upload stragglers (from the driver's logs); the
+            # engine-level timeout count also includes clients that
+            # simply were not sampled that round (it cannot tell "not
+            # invited" from "invited but silent") and is reported
+            # separately
+            "stragglers_total": int(sum(lg.stragglers.sum()
+                                        for lg in hist.logs)),
+            "timed_out_total": int(sum(r_.stats.stragglers_timed_out
+                                       for r_ in hist.results)),
+            "packets_total": int(sum(r_.stats.data_enqueued
+                                     for r_ in hist.results)),
+        }
+        out.append(row)
+        drop = ("    n/a" if row["acc_drop_vs_full"] is None
+                else f"{row['acc_drop_vs_full']:+7.3f}")
+        print(f"participation={participation:.1f} acc={acc:.3f} "
+              f"drop_vs_full={drop} "
+              f"stragglers={row['stragglers_total']}")
+    return out
+
+
+def throughput_row(quick: bool = False):
+    """The churn driver (stream gen + demux + compiled dispatch per
+    round, overlapped) — the bench_gate-gated row."""
+    from repro.core.rounds import ChurnConfig, run_churn_rounds
+    from repro.core.server import EngineConfig
+
+    n_params = TP_PARAMS_QUICK if quick else TP_PARAMS_FULL
+    cfg = EngineConfig(n_clients=TP_K, n_params=n_params,
+                       payload=TP_PAYLOAD, ring_capacity=TP_RING,
+                       compile=True)
+    churn = ChurnConfig(participation=0.9, straggle_rate=0.1,
+                        loss_rate=0.01, dup_rate=0.02)
+    rng = np.random.default_rng(0)
+    flats = jnp.asarray(rng.normal(size=(TP_K, n_params))
+                        .astype(np.float32))
+    prev = jnp.zeros((n_params,), jnp.float32)
+
+    def one():
+        t0 = time.perf_counter()
+        hist = run_churn_rounds(cfg, churn, flats, prev, TP_ROUNDS,
+                                rng=np.random.default_rng(1))
+        dt = (time.perf_counter() - t0) / TP_ROUNDS
+        pkts = sum(r.stats.data_enqueued for r in hist.results) / TP_ROUNDS
+        return dt, pkts
+
+    one()                                       # warmup: jit trace
+    dt, pkts = min((one() for _ in range(3)), key=lambda x: x[0])
+    row = {
+        "kind": "throughput", "k": TP_K, "mode": "exact",
+        "engine": "compiled_churn", "n_params": n_params,
+        "payload": TP_PAYLOAD, "ring_capacity": TP_RING,
+        "rounds": TP_ROUNDS, "participation": churn.participation,
+        "straggle_rate": churn.straggle_rate,
+        "packets": pkts, "round_s": dt, "pkts_per_s": pkts / dt,
+        "interpret": jax.default_backend() != "tpu",
+    }
+    print(f"churn driver K={TP_K} {dt*1e3:8.2f} ms/round "
+          f"{row['pkts_per_s']/1e3:8.1f} kpkt/s "
+          f"({row['participation']:.0%} participation, "
+          f"{row['straggle_rate']:.0%} straggle)")
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="throughput row only (CI smoke; skips the CNN "
+                         "accuracy sweep)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    rows = [] if args.quick else accuracy_rows()
+    rows.append(throughput_row(quick=args.quick))
+    result = {
+        "bench": "participation_rounds",
+        "backend": jax.default_backend(),
+        "quick": args.quick,
+        "participation_sweep": list(PARTICIPATION_SWEEP),
+        "straggle_rate": STRAGGLE_RATE,
+        "loss_rate": LOSS_RATE,
+        "dup_rate": DUP_RATE,
+        "rows": rows,
+    }
+    out_path = args.out or os.path.join(root, "BENCH_rounds.json")
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {out_path} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

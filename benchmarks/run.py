@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV:
   agg_*   measured aggregation throughput on this machine (§5.2 analogue)
   engine_*  eager vs compiled packet-path engine throughput (BENCH_engine)
   shard_*  sharded-engine scaling from the committed BENCH_shard.json
+  rounds_*  participation sweep + churn-driver throughput from the
+            committed BENCH_rounds.json
   roofline_*  per (arch x shape x mesh) from the dry-run artifacts
 
 Sections whose input artifact is absent (a BENCH_*.json not yet
@@ -63,6 +65,30 @@ def main() -> None:
                  f";mesh={r['on_mesh']}")
                 for r in bench["rows"]]
 
+    def rounds_rows():
+        # reports the committed participation sweep rather than
+        # re-running it (the accuracy family trains 4 CNN runs;
+        # EXPERIMENTS.md §Participation-sweep documents regeneration)
+        with open(os.path.join(ROOT, "BENCH_rounds.json")) as f:
+            bench = json.load(f)
+        out = []
+        for r in bench["rows"]:
+            if r.get("kind") == "accuracy":
+                drop = (f"{r['acc_drop_vs_full']:+.3f}"
+                        if r["acc_drop_vs_full"] is not None else "n/a")
+                out.append((f"rounds_participation_{r['participation']}",
+                            0.0,
+                            f"final_acc={r['final_acc']:.3f}"
+                            f";acc_drop_vs_full={drop}"
+                            f";stragglers={r['stragglers_total']}"))
+            else:
+                out.append((f"rounds_churn_driver_K{r['k']}",
+                            r["round_s"] * 1e6,
+                            f"pkts_per_s={r['pkts_per_s']:.0f}"
+                            f";participation={r['participation']}"
+                            f";straggle={r['straggle_rate']}"))
+        return out
+
     sections = [
         ("fig6", fig6_response_time.rows),
         ("fig7", fig7_breakdown.rows),
@@ -71,6 +97,7 @@ def main() -> None:
         ("agg", agg_rows),
         ("engine", engine_rows),
         ("shard", shard_rows),
+        ("rounds", rounds_rows),
         ("roofline", roofline.rows),
     ]
     failures = 0

@@ -20,8 +20,19 @@ identical.  With fewer than N devices a single-device emulation runs;
 to see the real mesh:
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
+``--deadline [N]`` makes client 0 a permanent straggler: its last
+packets and its END trail the round deadline, the server times it out
+and closes on whatever arrived (DESIGN.md §8) — and the demo verifies
+the partial round is *bitwise identical* to the same round with the
+straggler's undelivered packets as wire losses.  Without N the deadline
+lands right after the healthy clients' ENDs.
+
+``--churn`` runs a short multi-round demo through the churn driver
+(core/rounds.py): per-round Bernoulli client sampling, join/leave
+membership churn, and mid-upload stragglers timed out at the close.
+
 Run:  PYTHONPATH=src python examples/packet_server.py [--compile]
-                                                      [--shards N]
+                        [--shards N] [--deadline [N]] [--churn]
 """
 import argparse
 
@@ -31,8 +42,78 @@ import numpy as np
 
 from repro.core.aggregation import fused_round_step
 from repro.core.packets import packetize
+from repro.core.rounds import losses_only_twin, make_straggler_stream
 from repro.core.server import (EngineConfig, make_uplink_stream,
                                run_engine_round)
+
+
+def straggler_demo(args):
+    """Deadline-closed partial round: a permanent straggler is timed
+    out and the round stays bitwise equal to its losses-only twin."""
+    K, P, W = 10, 4096, 64
+    rng = np.random.default_rng(0)
+    flats = jnp.asarray(rng.integers(-8, 9, (K, P)).astype(np.float32))
+    prev = jnp.zeros((P,), jnp.float32)
+    pk = jax.vmap(lambda f: packetize(f, W))(flats)
+    events, _ = make_uplink_stream(rng, pk, loss_rate=0.0468,
+                                   dup_rate=0.05)
+    # client 0 delivers only its first 20 surviving packets, then
+    # stalls: the rest of its DATA and its END trail the deadline
+    # (core/rounds.py owns the stream rearrangement)
+    dl_events, auto_deadline, loss_events = make_straggler_stream(
+        events, straggler=0, keep=20)
+    deadline = auto_deadline if args.deadline < 0 else args.deadline
+    if args.deadline >= 0:
+        # an explicit deadline cuts at an arbitrary position: derive
+        # the matching twin from the same single authority
+        loss_events = losses_only_twin(dl_events, deadline)
+    print(f"\n== deadline-closed partial round (deadline={deadline}, "
+          f"straggler=client 0) ==")
+    for mode in ("exact", "approx"):
+        kw = dict(n_clients=K, n_params=P, payload=W, ring_capacity=64,
+                  mode=mode, compile=args.compile, shards=args.shards)
+        got = run_engine_round(
+            EngineConfig(round_deadline=deadline, **kw), flats, prev,
+            dl_events)
+        want = run_engine_round(EngineConfig(**kw), flats, prev,
+                                loss_events)
+        same = (np.array_equal(np.asarray(got.new_global),
+                               np.asarray(want.new_global))
+                and np.array_equal(np.asarray(got.counts),
+                                   np.asarray(want.counts)))
+        s = got.stats
+        print(f"  {mode:6s}: {s.stragglers_timed_out} straggler timed "
+              f"out, {s.late_dropped} late packets dropped, "
+              f"{s.data_enqueued} aggregated; bitwise == losses-only "
+              f"round: {same}")
+        assert same, "deadline round diverged from its losses-only twin"
+
+
+def churn_demo(args):
+    """Multi-round serving loop: sampling + churn + stragglers."""
+    from repro.core.rounds import ChurnConfig, run_churn_rounds
+    K, P, W = 10, 4096, 64
+    rng = np.random.default_rng(0)
+    flats = jnp.asarray(rng.integers(-8, 9, (K, P)).astype(np.float32))
+    cfg = EngineConfig(n_clients=K, n_params=P, payload=W,
+                       ring_capacity=64, compile=True,
+                       shards=args.shards)
+    churn = ChurnConfig(participation=0.7, p_join=0.3, p_leave=0.1,
+                        straggle_rate=0.25, loss_rate=0.0468,
+                        dup_rate=0.05, down_loss_rate=0.0468)
+    print(f"\n== churn driver: 5 rounds, 70% participation, 25% "
+          f"straggle, join/leave churn ==")
+    hist = run_churn_rounds(cfg, churn, flats, jnp.zeros((P,)), 5,
+                            rng=rng)
+    for r, (res, log) in enumerate(zip(hist.results, hist.logs)):
+        s = res.stats
+        print(f"  round {r}: {int(log.selected.sum())} sampled "
+              f"({int(log.stragglers.sum())} straggled, "
+              f"{int(log.active.sum())}/{K} active), "
+              f"{s.data_enqueued} pkts aggregated, "
+              f"{s.stragglers_timed_out} timed out at close, "
+              f"{int(jnp.sum(res.counts > 0))}/{res.counts.shape[0]} "
+              f"slots delivered")
 
 
 def main():
@@ -43,9 +124,25 @@ def main():
     ap.add_argument("--shards", type=int, default=1,
                     help="worker-mesh shards for the compiled round "
                          "(implies --compile; DESIGN.md §7)")
+    ap.add_argument("--deadline", type=int, nargs="?", const=-1,
+                    default=None, metavar="N",
+                    help="deadline-closed partial-round demo: time out "
+                         "a permanent straggler after N events (no N: "
+                         "right after the healthy ENDs; DESIGN.md §8)")
+    ap.add_argument("--churn", action="store_true",
+                    help="multi-round churn-driver demo "
+                         "(core/rounds.py: sampling + join/leave + "
+                         "stragglers)")
     args = ap.parse_args()
     if args.shards > 1:
         args.compile = True
+    if args.deadline is not None:
+        straggler_demo(args)
+        if not args.churn:
+            return
+    if args.churn:
+        churn_demo(args)
+        return
     K, P, W = 10, 4096, 64
     rng = np.random.default_rng(0)
     # integer-valued params make f32 sums order-independent, so the

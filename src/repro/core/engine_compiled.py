@@ -61,7 +61,10 @@ import numpy as np
 from repro.core.aggregation import expand_packet_mask
 from repro.core.packets import depacketize
 from repro.core.protocol import Kind
-from repro.core.server import (EngineConfig, EngineStats, RoundResult)
+# QuorumError is re-exported so callers of the bulk path can catch it
+# from either module
+from repro.core.server import (EngineConfig, EngineStats, QuorumError,
+                               RoundResult, check_quorum)  # noqa: F401
 from repro.kernels.packet_scatter import (BLOCK_PKTS,
                                           packet_scatter_accum_scan,
                                           packet_scatter_accum_sharded)
@@ -245,6 +248,16 @@ def demux_events(cfg: EngineConfig, events: Iterable,
     copy of each (client, slot) counts.  Control replies are *counted*
     (stats parity with the FSM) but not materialized — callers that
     need the reply packets use the per-packet API.
+
+    ``cfg.round_deadline`` closes the uplink barrier at that event
+    position, exactly as the eager engine's rx does (DESIGN.md §8):
+    only pre-deadline STARTs/ENDs frame a client, DATA at or past the
+    deadline is ``late_dropped``, clients without an accepted END are
+    ``stragglers_timed_out`` (their accepted arrivals stay in the
+    schedule — a deadline-closed round is bitwise the same round with
+    the stragglers' undelivered packets as wire losses), late ENDs from
+    timed-out clients are still grace-ack-counted, and the
+    ``min_clients`` quorum guard raises before any device work.
     """
     K, n_slots = cfg.n_clients, cfg.n_slots
     wts = (np.ones(K, np.float32) if weights is None
@@ -278,21 +291,34 @@ def demux_events(cfg: EngineConfig, events: Iterable,
             e_pos.append(pos)
         pos += 1
     inf = pos + 1
+    # the uplink barrier closes at the deadline: events at pos >= cut are
+    # past the close (cut = inf replays the no-deadline behavior)
+    deadline_set = cfg.round_deadline is not None
+    cut = cfg.round_deadline if deadline_set else inf
     first_start = np.full(K, inf, np.int64)
     if s_c:
         sc, sp = np.asarray(s_c), np.asarray(s_pos, np.int64)
-        np.minimum.at(first_start, sc, sp)
+        pre = sp < cut
+        np.minimum.at(first_start, sc[pre], sp[pre])
     first_end = np.full(K, inf, np.int64)
     if e_c:
         ec, ep = np.asarray(e_c), np.asarray(e_pos, np.int64)
-        after = ep > first_start[ec]
+        after = (ep > first_start[ec]) & (ep < cut)
         np.minimum.at(first_end, ec[after], ep[after])
     stats = EngineStats()
-    if s_c:       # STARTs inside [first_start, first_end) are (re-)acked
+    # clients short of their END at the close are this round's stragglers
+    timed = (first_end >= inf) if deadline_set else np.zeros(K, bool)
+    stats.stragglers_timed_out = int(np.sum(timed))
+    check_quorum(int(np.sum(first_end < inf)), cfg.min_clients,
+                 stats.stragglers_timed_out)
+    if s_c:       # STARTs in any post-START phase are (re-)acked; a
+                  # TIMED_OUT client's round is closed — no ack past cut
         stats.control_replies += int(np.sum(
-            (sp >= first_start[sc]) & (sp < first_end[sc])))
-    if e_c:       # ENDs at/after the accepted END are (re-)acked
-        stats.control_replies += int(np.sum(ep >= first_end[ec]))
+            (sp >= first_start[sc]) & ~(timed[sc] & (sp >= cut))))
+    if e_c:       # ENDs at/after the accepted END are (re-)acked, and a
+                  # timed-out straggler's late END is grace-acked too
+        stats.control_replies += int(np.sum(
+            (ep >= first_end[ec]) | (timed[ec] & (ep >= cut))))
     up = np.zeros((K, n_slots), np.float32)
     if not d_c:
         sched = build_drain_schedule(
@@ -304,8 +330,14 @@ def demux_events(cfg: EngineConfig, events: Iterable,
     dc = np.asarray(d_c, np.int64)
     ds = np.asarray(d_s, np.int64)
     dp = np.asarray(d_pos, np.int64)
-    phase_ok = (dp > first_start[dc]) & (dp < first_end[dc])
-    stats.phase_dropped = int(np.sum(~phase_ok))
+    # every DATA packet past the deadline is late (the eager rx drops it
+    # before the FSM gate); pre-deadline DATA outside its client's
+    # START..END frame is phase-dropped as before
+    pre = dp < cut
+    frame_ok = (dp > first_start[dc]) & (dp < first_end[dc])
+    phase_ok = pre & frame_ok
+    stats.late_dropped = int(np.sum(~pre))
+    stats.phase_dropped = int(np.sum(pre & ~frame_ok))
     ok_rows = np.nonzero(phase_ok)[0]
     keys = dc[ok_rows] * n_slots + ds[ok_rows]
     _, first_idx = np.unique(keys, return_index=True)
@@ -457,7 +489,18 @@ def run_compiled_rounds(cfg: EngineConfig, rounds: Iterable,
     prev = jnp.asarray(prev_global)
     pending: Optional[RoundResult] = None
     for events, client_flats, down_mask in rounds:
-        sched, stats, up = demux_events(cfg, events, weights)
+        try:
+            sched, stats, up = demux_events(cfg, events, weights)
+        except QuorumError as e:
+            # a continuously serving loop must not lose the rounds it
+            # already served because one round missed quorum: flush the
+            # in-flight round and hand the completed results to the
+            # caller on the exception
+            if pending is not None:
+                pending.new_global.block_until_ready()
+                results.append(pending)
+            e.results = results
+            raise
         if pending is not None:       # round r-1 ran while we demuxed
             pending.new_global.block_until_ready()
             results.append(pending)

@@ -57,6 +57,16 @@ class EngineConfig:
     use_kernel: bool = True            # False: sequential host oracle
     compile: bool = False              # True: one lax.scan per round
     scan_body: str = "auto"            # auto | pallas | jnp (compile=True)
+    # deadline-closed partial rounds (DESIGN.md §8): the round's uplink
+    # barrier closes after this many rx events — clients still short of
+    # their END are TIMED_OUT (their delivered packets count, their
+    # undelivered ones become wire losses) and later DATA is dropped as
+    # ``late_dropped``.  None: the barrier only closes at finalize.
+    round_deadline: Optional[int] = None
+    # quorum guard: finalizing a round with fewer clients past their
+    # uplink END than this raises instead of publishing a global built
+    # from too few contributions.  0 disables the guard.
+    min_clients: int = 0
     # worker-mesh shards for the compiled round (DESIGN.md §7): each
     # shard folds its worker rings' drains into a per-shard partial sum
     # combined at END — the paper's per-core layout.  Effective device
@@ -67,6 +77,13 @@ class EngineConfig:
     def __post_init__(self):
         if self.shards < 1:
             raise ValueError(f"shards must be >= 1, got {self.shards}")
+        if self.round_deadline is not None and self.round_deadline < 0:
+            raise ValueError(
+                f"round_deadline must be >= 0, got {self.round_deadline}")
+        if not 0 <= self.min_clients <= self.n_clients:
+            raise ValueError(
+                f"min_clients must be in [0, n_clients], got "
+                f"{self.min_clients}")
         if self.shards > 1 and not self.compile:
             raise ValueError(
                 "shards > 1 requires compile=True: sharding demuxes the "
@@ -85,6 +102,22 @@ class EngineStats:
     phase_dropped: int = 0             # DATA outside START..END framing
     batches_drained: int = 0           # scatter-accumulate calls
     control_replies: int = 0           # START_ACK / END_ACK emitted
+    stragglers_timed_out: int = 0      # clients short of END at round close
+    late_dropped: int = 0              # DATA arriving past the deadline
+
+
+class QuorumError(RuntimeError):
+    """Round closed with fewer participants than ``min_clients``."""
+
+
+def check_quorum(participants: int, min_clients: int,
+                 stragglers: int) -> None:
+    """Shared quorum guard: the eager close and the compiled bulk demux
+    must report the same verdict, in the same words, for one round."""
+    if participants < min_clients:
+        raise QuorumError(
+            f"round closed with {participants} participant(s) < "
+            f"min_clients={min_clients} ({stragglers} timed out)")
 
 
 @dataclasses.dataclass
@@ -128,6 +161,8 @@ class ServerEngine:
         self._pend_slots: List[int] = []
         self._pend_weights: List[float] = []
         self._pend_payloads: List[np.ndarray] = []
+        self._events_seen = 0
+        self._deadline_fired = False
         self.stats = EngineStats()
 
     # -- RX core --------------------------------------------------------------
@@ -137,11 +172,26 @@ class ServerEngine:
         DATA packets must carry their payload row (W,).  Duplicates —
         same (client, index) seen before — are dropped here, mirroring
         the set semantics of ``ServerFSM.uplink``.
+
+        With ``cfg.round_deadline`` set, the round's uplink barrier
+        closes after that many rx events: stragglers time out
+        (``ServerFSM.deadline_expired``) and every later DATA packet is
+        dropped and counted in ``stats.late_dropped`` — late control
+        traffic still reaches the FSM, so a straggler's retransmitted
+        END is grace-acked rather than ignored (DESIGN.md §8).
         """
+        if (self.cfg.round_deadline is not None
+                and not self._deadline_fired
+                and self._events_seen >= self.cfg.round_deadline):
+            self._fire_deadline()
+        self._events_seen += 1
         if packet.kind != Kind.DATA:
             replies = self.fsm.on_packet(packet)
             self.stats.control_replies += len(replies)
             return replies
+        if self._deadline_fired:
+            self.stats.late_dropped += 1
+            return []
         c, slot = packet.client, packet.index
         if self.fsm.phase[c] != ServerPhase.RECV_PARAMS:
             # DATA outside the START..END framing — distinct from a
@@ -191,6 +241,28 @@ class ServerEngine:
         for wkr in range(self.cfg.n_workers):
             self._drain(wkr)
 
+    # -- deadline / quorum ----------------------------------------------------
+    def _fire_deadline(self) -> None:
+        newly = self.fsm.deadline_expired()
+        self.stats.stragglers_timed_out += len(newly)
+        self._deadline_fired = True
+
+    def _close_round(self) -> None:
+        """Close the uplink barrier before the END divide.
+
+        With ``round_deadline`` set, the close *is* the deadline — a
+        short stream (fewer events than the budget) still times out its
+        stragglers here, so a round's straggler accounting does not
+        depend on how much late traffic happened to trail it.  Then the
+        quorum guard: a round with fewer clients past their uplink than
+        ``min_clients`` raises instead of publishing a global built from
+        too few contributions.
+        """
+        if self.cfg.round_deadline is not None and not self._deadline_fired:
+            self._fire_deadline()
+        check_quorum(self.fsm.participants(), self.cfg.min_clients,
+                     self.stats.stragglers_timed_out)
+
     # -- END: count-normalized divide ----------------------------------------
     def finalize_round(self, prev_global: jnp.ndarray
                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -203,6 +275,7 @@ class ServerEngine:
         round — every drain batch, the divide, the fallback — runs as
         one compiled ``lax.scan`` call (DESIGN.md §3).
         """
+        self._close_round()
         if self.cfg.compile:
             new_global, counts, _ = self._finalize_compiled(prev_global)
             return new_global, counts
@@ -227,9 +300,10 @@ class ServerEngine:
         device dispatch for the whole round.
         """
         if self.cfg.compile:
+            self._close_round()
             return self._finalize_compiled(prev_global, client_flats,
                                            down_mask, mix_alpha)
-        new_global, counts = self.finalize_round(prev_global)
+        new_global, counts = self.finalize_round(prev_global)  # closes there
         new_flats = self.distribute(new_global, client_flats, down_mask,
                                     mix_alpha=mix_alpha)
         return new_global, counts, new_flats
@@ -271,11 +345,19 @@ class ServerEngine:
         return new_flats
 
     def up_mask(self) -> jnp.ndarray:
-        """(K, N) deduplicated protocol-level arrival mask."""
+        """(K, N) deduplicated protocol-level arrival mask.
+
+        One pass over the FSM's uplink sets builds the (client, slot)
+        index arrays and a single fancy-index assignment sets the mask —
+        the old per-(client, slot) double loop cost O(K·N) interpreter
+        work once per round in every benchmark row.
+        """
         m = np.zeros((self.cfg.n_clients, self.cfg.n_slots), np.float32)
-        for c, got in enumerate(self.fsm.uplink):
-            for s in got:
-                m[c, s] = 1.0
+        pairs = [(c, s) for c, got in enumerate(self.fsm.uplink)
+                 for s in got]
+        if pairs:
+            cs, ss = np.asarray(pairs, np.int64).T
+            m[cs, ss] = 1.0
         return jnp.asarray(m)
 
 

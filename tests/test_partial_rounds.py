@@ -1,0 +1,217 @@
+"""Deadline-closed partial rounds: cross-engine parity + conservation.
+
+The ISSUE 5 acceptance criterion: a round with a permanent straggler
+closes at ``round_deadline`` with no hang in every engine mode, and is
+**bitwise identical** to the same round in which the straggler's
+undelivered packets were wire losses — exact and approx modes, eager /
+compiled / sharded engines, both demux policies.  Approx equality is
+the strong check: it holds only if the deadline merely *truncates* the
+accepted-arrival stream without perturbing the drain batching (the race
+window).
+
+Plus the stats contract: ``stragglers_timed_out`` / ``late_dropped``
+conservation — every DATA event is accounted for exactly once across
+``data_enqueued + duplicates_dropped + phase_dropped + late_dropped``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.packets import packetize
+from repro.core.protocol import Kind
+from repro.core.server import (EngineConfig, QuorumError, ServerEngine,
+                               make_uplink_stream, run_engine_round)
+
+K, P, W = 6, 480, 48
+N = P // W
+
+
+def _round_inputs(seed):
+    rng = np.random.default_rng(seed)
+    flats = jnp.asarray(rng.integers(-8, 9, (K, P)).astype(np.float32))
+    prev = jnp.asarray(rng.integers(-8, 9, P).astype(np.float32))
+    pk = jax.vmap(lambda f: packetize(f, W))(flats)
+    return rng, flats, prev, pk
+
+
+def _straggler_streams(rng, pk, straggler=0, keep=3, loss=0.2, dup=0.3):
+    """Build the acceptance pair via the shared builder
+    (core/rounds.py): ``deadline_events`` has the straggler deliver
+    ``keep`` packets before the deadline with the rest of its DATA and
+    its END trailing late; ``losses_events`` is the identical round
+    where the undelivered packets never existed (wire losses) and the
+    END arrives normally.  Returns (deadline_events, D, losses_events).
+    """
+    from repro.core.rounds import make_straggler_stream
+
+    events, _ = make_uplink_stream(rng, pk, loss_rate=loss, dup_rate=dup)
+    dl_events, D, loss_events = make_straggler_stream(events, straggler,
+                                                      keep)
+    # the pair is only a meaningful deadline test with a real late tail
+    assert len(dl_events) - D > 1, "need a non-empty undelivered tail"
+    return dl_events, D, loss_events
+
+
+def _cfg(mode, assign, deadline=None, **kw):
+    return EngineConfig(n_clients=K, n_params=P, payload=W,
+                        ring_capacity=7, mode=mode, ring_assign=assign,
+                        round_deadline=deadline, **kw)
+
+
+def _assert_rounds_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.new_global),
+                                  np.asarray(b.new_global))
+    np.testing.assert_array_equal(np.asarray(a.counts), np.asarray(b.counts))
+    np.testing.assert_array_equal(np.asarray(a.up_mask),
+                                  np.asarray(b.up_mask))
+    if a.new_client_flats is not None:
+        np.testing.assert_array_equal(np.asarray(a.new_client_flats),
+                                      np.asarray(b.new_client_flats))
+
+
+@pytest.mark.parametrize("mode", ["exact", "approx"])
+@pytest.mark.parametrize("assign", ["rr", "slot"])
+@pytest.mark.parametrize("engine", ["eager", "compiled", "sharded"])
+def test_deadline_round_bitwise_equals_losses_round(mode, assign, engine):
+    """The acceptance criterion, all 12 engine × mode × demux cells."""
+    rng, flats, prev, pk = _round_inputs(42)
+    dl_events, D, loss_events = _straggler_streams(rng, pk)
+    down = jnp.asarray((rng.random((K, N)) > 0.2).astype(np.float32))
+    weights = jnp.asarray(rng.integers(1, 4, K).astype(np.float32))
+    kw = dict(compile=engine != "eager",
+              shards=4 if engine == "sharded" else 1)
+    got = run_engine_round(_cfg(mode, assign, deadline=D, **kw), flats,
+                           prev, dl_events, down_mask=down, weights=weights)
+    want = run_engine_round(_cfg(mode, assign, **kw), flats, prev,
+                            loss_events, down_mask=down, weights=weights)
+    _assert_rounds_equal(want, got)
+    assert got.stats.stragglers_timed_out == 1
+    assert got.stats.late_dropped > 0
+    assert want.stats.stragglers_timed_out == 0
+    assert want.stats.late_dropped == 0
+    # the straggler's delivered prefix really is in the aggregate
+    assert float(np.asarray(got.up_mask)[0].sum()) >= 3
+
+
+@pytest.mark.parametrize("engine", ["eager", "compiled"])
+def test_deadline_stats_conservation(engine):
+    """Every DATA event lands in exactly one counter, and the deadline
+    round's acceptance counters equal the losses round's."""
+    rng, flats, prev, pk = _round_inputs(7)
+    dl_events, D, loss_events = _straggler_streams(rng, pk)
+    n_data = sum(e[0].kind is Kind.DATA for e in dl_events)
+    n_suffix = sum(e[0].kind is Kind.DATA for e in dl_events[D:])
+    cfg = _cfg("exact", "rr", deadline=D, compile=engine == "compiled")
+    got = run_engine_round(cfg, flats, prev, dl_events)
+    s = got.stats
+    assert (s.data_enqueued + s.duplicates_dropped + s.phase_dropped
+            + s.late_dropped) == n_data
+    assert s.late_dropped == n_suffix
+    assert s.stragglers_timed_out == 1
+    base = run_engine_round(
+        _cfg("exact", "rr", compile=engine == "compiled"), flats, prev,
+        loss_events)
+    assert base.stats.data_enqueued == s.data_enqueued
+    assert base.stats.duplicates_dropped == s.duplicates_dropped
+    assert base.stats.batches_drained == s.batches_drained
+
+
+def test_per_packet_deadline_matches_bulk_both_compile_modes():
+    """ServerEngine.rx fires the deadline mid-stream (eager and
+    compile=True record paths) — both must equal the bulk path."""
+    rng, flats, prev, pk = _round_inputs(23)
+    dl_events, D, _ = _straggler_streams(rng, pk)
+    down = jnp.asarray((rng.random((K, N)) > 0.2).astype(np.float32))
+    bulk = run_engine_round(_cfg("exact", "rr", deadline=D, compile=True),
+                            flats, prev, dl_events, down_mask=down)
+    for compile_ in (False, True):
+        eng = ServerEngine(_cfg("exact", "rr", deadline=D,
+                                compile=compile_))
+        for packet, payload in dl_events:
+            eng.rx(packet, payload)
+        ng, cnt, nf = eng.finalize_and_distribute(prev, flats, down)
+        np.testing.assert_array_equal(np.asarray(bulk.new_global),
+                                      np.asarray(ng))
+        np.testing.assert_array_equal(np.asarray(bulk.counts),
+                                      np.asarray(cnt))
+        np.testing.assert_array_equal(np.asarray(bulk.new_client_flats),
+                                      np.asarray(nf))
+        assert eng.stats.stragglers_timed_out == 1
+        assert eng.stats.late_dropped == bulk.stats.late_dropped
+        np.testing.assert_array_equal(np.asarray(eng.up_mask()),
+                                      np.asarray(bulk.up_mask))
+
+
+def test_short_stream_times_out_stragglers_at_finalize():
+    """A stream shorter than the deadline still closes its stragglers
+    at finalize — the accounting must not depend on trailing traffic."""
+    rng, flats, prev, pk = _round_inputs(3)
+    events, _ = make_uplink_stream(rng, pk, loss_rate=0.1)
+    events = [e for e in events
+              if not (e[0].client == 2 and e[0].kind is Kind.END)]
+    for compile_ in (False, True):
+        cfg = _cfg("exact", "rr", deadline=10 ** 9, compile=compile_)
+        res = run_engine_round(cfg, flats, prev, events)
+        assert res.stats.stragglers_timed_out == 1
+        assert res.stats.late_dropped == 0
+        # the straggler's delivered packets still count
+        assert float(np.asarray(res.up_mask)[2].sum()) > 0
+
+
+def test_deadline_zero_round_falls_back_to_prev_global():
+    """Deadline 0: everything is late, every client times out, and the
+    round degenerates to new_global == prev_global."""
+    rng, flats, prev, pk = _round_inputs(5)
+    events, _ = make_uplink_stream(rng, pk)
+    n_data = sum(e[0].kind is Kind.DATA for e in events)
+    for compile_ in (False, True):
+        cfg = _cfg("exact", "rr", deadline=0, compile=compile_)
+        res = run_engine_round(cfg, flats, prev, events)
+        np.testing.assert_array_equal(np.asarray(res.new_global),
+                                      np.asarray(prev))
+        np.testing.assert_array_equal(np.asarray(res.counts), 0.0)
+        assert res.stats.stragglers_timed_out == K
+        assert res.stats.late_dropped == n_data
+        assert res.stats.data_enqueued == 0
+
+
+@pytest.mark.parametrize("engine", ["eager", "compiled", "sharded"])
+def test_quorum_guard_raises_below_min_clients(engine):
+    """min_clients: closing a round with too few finished uplinks raises
+    QuorumError in every engine mode instead of publishing the global."""
+    rng, flats, prev, pk = _round_inputs(11)
+    dl_events, D, _ = _straggler_streams(rng, pk)
+    kw = dict(compile=engine != "eager",
+              shards=4 if engine == "sharded" else 1)
+    ok = _cfg("exact", "rr", deadline=D, min_clients=K - 1, **kw)
+    res = run_engine_round(ok, flats, prev, dl_events)       # 5 of 6: fine
+    assert res.stats.stragglers_timed_out == 1
+    bad = _cfg("exact", "rr", deadline=D, min_clients=K, **kw)
+    with pytest.raises(QuorumError):
+        run_engine_round(bad, flats, prev, dl_events)
+
+
+def test_quorum_counts_participants_without_deadline():
+    """The guard also protects undeadlined rounds: participants are the
+    clients whose END was accepted by round close."""
+    rng, flats, prev, pk = _round_inputs(13)
+    events, _ = make_uplink_stream(rng, pk)
+    events = [e for e in events
+              if not (e[0].client == 0 and e[0].kind is Kind.END)]
+    for compile_ in (False, True):
+        with pytest.raises(QuorumError):
+            run_engine_round(_cfg("exact", "rr", min_clients=K,
+                                  compile=compile_), flats, prev, events)
+        res = run_engine_round(_cfg("exact", "rr", min_clients=K - 1,
+                                    compile=compile_), flats, prev, events)
+        # no deadline: nobody is *timed out*, the guard just counted ENDs
+        assert res.stats.stragglers_timed_out == 0
+
+
+def test_engine_config_validates_deadline_and_quorum():
+    with pytest.raises(ValueError):
+        EngineConfig(n_clients=2, n_params=64, payload=16,
+                     round_deadline=-1)
+    with pytest.raises(ValueError):
+        EngineConfig(n_clients=2, n_params=64, payload=16, min_clients=3)

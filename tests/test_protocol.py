@@ -1,9 +1,17 @@
-"""Protocol liveness + delivery properties under arbitrary transient loss."""
+"""Protocol liveness + delivery properties under arbitrary transient loss.
+
+The deadline-close contract (ISSUE 5, DESIGN.md §8): *no* loss /
+duplication / churn pattern may deadlock a round — a permanent straggler
+is TIMED_OUT at ``round_deadline``, the aggregation barrier opens on
+whatever arrived, and ``run_round`` always returns a ``RoundOutcome``
+instead of ever raising the old ``RuntimeError``.
+"""
 import numpy as np
 import pytest
 from _hypothesis_shim import given, settings, st
 
-from repro.core.protocol import Kind, Packet, run_round
+from repro.core.protocol import (Kind, Packet, RoundOutcome, ServerFSM,
+                                 ServerPhase, run_round)
 
 
 def test_lossless_round_delivers_everything():
@@ -59,6 +67,148 @@ def test_data_loss_reflected_in_uplink_sets():
     assert down[0] == set(range(6))
 
 
-def test_permanent_total_loss_raises():
-    with pytest.raises(RuntimeError):
-        run_round(1, 2, lambda p, step: True, max_steps=200)
+def test_permanent_total_loss_closes_at_deadline():
+    """The old deadlock path: 100% permanent loss used to raise
+    RuntimeError; now the round closes at the deadline with every
+    client timed out and empty delivery sets."""
+    res = run_round(1, 2, lambda p, step: True, max_steps=200,
+                    round_deadline=50)
+    assert isinstance(res, RoundOutcome)
+    assert res.timed_out == [0]
+    assert not res.completed
+    assert res.uplink[0] == set() and res.downlink[0] == set()
+    assert res.steps <= 60        # closed just past the deadline, no hang
+
+
+def test_budget_exhaustion_never_raises():
+    """Even without an explicit deadline the step budget closes the
+    round instead of raising."""
+    res = run_round(1, 2, lambda p, step: True, max_steps=200)
+    assert res.timed_out == [0] and not res.completed
+
+
+def test_permanent_straggler_rest_of_round_completes():
+    """One dead client must not hold the others' round: the deadline
+    times it out, everyone else delivers everything, and the straggler's
+    pre-deadline arrivals would have counted (here: none)."""
+    def drop(p, step):
+        return p.client == 1 and not p.from_server
+
+    res = run_round(3, 6, drop, round_deadline=40, max_steps=400)
+    assert res.timed_out == [1]
+    for c in (0, 2):
+        assert res.uplink[c] == set(range(6))
+        assert res.downlink[c] == set(range(6))
+    assert res.uplink[1] == set()
+
+
+def test_straggler_partial_uplink_is_kept():
+    """A client whose END never arrives still contributes its delivered
+    DATA: the deadline turns only its *undelivered* packets into wire
+    losses (DESIGN.md §8)."""
+    def drop(p, step):
+        if p.from_server or p.client != 0:
+            return False
+        # client 0: START goes through, packets >= 3 and END are lost
+        return (p.kind == Kind.DATA and p.index >= 3) or p.kind == Kind.END
+
+    res = run_round(2, 6, drop, round_deadline=60, max_steps=600)
+    assert res.timed_out == [0]
+    assert res.uplink[0] == {0, 1, 2}
+    assert res.uplink[1] == set(range(6))
+
+
+def test_deadline_beyond_budget_is_rejected():
+    """A deadline the budget could never reach would silently skew
+    straggler accounting — refuse it instead of clamping."""
+    with pytest.raises(ValueError):
+        run_round(1, 2, lambda p, step: False, max_steps=100,
+                  round_deadline=500)
+
+
+def test_duplication_is_idempotent():
+    """dup_fn delivering every packet twice changes nothing: data sets
+    dedup, control handling is idempotent, the round completes."""
+    res = run_round(3, 8, lambda p, step: False,
+                    dup_fn=lambda p, step: True)
+    assert res.completed and res.timed_out == []
+    for c in range(3):
+        assert res.uplink[c] == set(range(8))
+        assert res.downlink[c] == set(range(8))
+
+
+def test_start_is_reacked_in_every_post_start_phase():
+    """Satellite regression: a duplicated/late START arriving after the
+    client's END used to be silently ignored (only RECV_PARAMS
+    re-acked) — the client would retransmit START forever.  Every
+    post-START phase must answer; TIMED_OUT must not."""
+    fsm = ServerFSM(1, 2)
+    assert [p.kind for p in fsm.on_packet(Packet(Kind.START, 0))] \
+        == [Kind.START_ACK]
+    fsm.on_packet(Packet(Kind.DATA, 0, 0))
+    fsm.on_packet(Packet(Kind.END, 0))          # -> COMPUTE
+    for phase in (ServerPhase.COMPUTE, ServerPhase.SEND_GLOBAL,
+                  ServerPhase.AWAIT_END_ACK, ServerPhase.DONE):
+        fsm.phase[0] = phase
+        replies = fsm.on_packet(Packet(Kind.START, 0))
+        assert [p.kind for p in replies] == [Kind.START_ACK], phase
+    fsm.phase[0] = ServerPhase.TIMED_OUT
+    assert fsm.on_packet(Packet(Kind.START, 0)) == []
+
+
+def test_timed_out_straggler_late_end_is_grace_acked():
+    """A straggler that finally sends END after the deadline gets an
+    END_ACK (it must not deadlock itself retransmitting), and its late
+    DATA is dropped *and counted*."""
+    fsm = ServerFSM(2, 4)
+    fsm.on_packet(Packet(Kind.START, 0))
+    fsm.on_packet(Packet(Kind.DATA, 0, 0))
+    assert fsm.deadline_expired() == [0, 1]
+    assert fsm.phase[0] == ServerPhase.TIMED_OUT
+    assert fsm.all_uplinks_done()               # barrier opens
+    replies = fsm.on_packet(Packet(Kind.END, 0))
+    assert [p.kind for p in replies] == [Kind.END_ACK]
+    assert fsm.on_packet(Packet(Kind.DATA, 0, 1)) == []
+    assert fsm.late_data_dropped == 1
+    assert fsm.uplink[0] == {0}                 # pre-deadline arrival kept
+    assert fsm.phase[0] == ServerPhase.TIMED_OUT  # late END joins nothing
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), loss=st.floats(0.0, 1.0),
+       dup=st.floats(0.0, 0.5), n_clients=st.integers(1, 5),
+       n_dead=st.integers(0, 5), deadline=st.integers(5, 60))
+def test_no_pattern_deadlocks_or_runs_past_deadline(seed, loss, dup,
+                                                    n_clients, n_dead,
+                                                    deadline):
+    """The ISSUE 5 property: arbitrary Bernoulli loss (up to 100%),
+    duplication, and churn (permanently dead clients, late joiners)
+    never deadlock a round or hold the uplink barrier past
+    ``round_deadline`` — run_round always returns within the budget,
+    dead clients are exactly the timed-out ones when loss is transient,
+    and the delivery sets stay consistent."""
+    rng = np.random.default_rng(seed)
+    dead = set(rng.choice(n_clients, size=min(n_dead, n_clients),
+                          replace=False).tolist())
+    join_step = {c: int(rng.integers(0, deadline)) for c in range(n_clients)}
+
+    def drop(p, step):
+        c = p.client
+        if c in dead and not p.from_server:
+            return True                       # permanently dead (churn)
+        if step < join_step[c] and not p.from_server:
+            return True                       # late joiner (churn)
+        return rng.random() < loss
+
+    max_steps = 4 * deadline
+    res = run_round(n_clients, 10, drop, max_steps=max_steps,
+                    round_deadline=deadline, dup_fn=lambda p, s:
+                    rng.random() < dup)
+    assert isinstance(res, RoundOutcome)
+    assert res.steps <= max_steps
+    assert dead <= set(res.timed_out)     # dead clients always time out
+    for c in range(n_clients):
+        assert res.uplink[c] <= set(range(10))
+        assert res.downlink[c] <= set(range(10))
+        if c in dead:
+            assert res.uplink[c] == set()

@@ -1,0 +1,208 @@
+"""Multi-round churn driver: sampling, stragglers, chaining contracts.
+
+core/rounds.py turns the compiled engine into a continuously serving
+loop (DESIGN.md §8).  The load-bearing properties:
+
+1. Per-round counts equal the weighted column sums of the partial
+   up_mask, and ``new_global`` equals ``fused_round_step`` on the same
+   masks — partial participation changes *which* packets arrive, never
+   the aggregation dataflow.
+2. ``stragglers_timed_out`` accounts for every client short of an END
+   (stalled participants AND unsampled clients — the engine cannot tell
+   "not invited" from "invited but silent").
+3. The overlapped (no train_fn) and sequential (train_fn) paths share
+   one per-round dataflow; rounds chain device-side through
+   ``prev_global``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import fused_round_step
+from repro.core.packets import packetize
+from repro.core.protocol import Kind
+from repro.core.rounds import (CLOSE_AT_FINALIZE, ChurnConfig,
+                               make_partial_round_events, run_churn_rounds)
+from repro.core.server import EngineConfig, QuorumError
+
+K, P, W = 8, 320, 32
+N = P // W
+
+
+def _cfg(**kw):
+    return EngineConfig(n_clients=K, n_params=P, payload=W,
+                        ring_capacity=8, compile=True, **kw)
+
+
+def _flats(seed):
+    rng = np.random.default_rng(seed)
+    return rng, jnp.asarray(rng.integers(-8, 9, (K, P)).astype(np.float32))
+
+
+def test_partial_round_events_respect_selection_and_stall():
+    rng, flats = _flats(0)
+    pk = jax.vmap(lambda f: packetize(f, W))(flats)
+    sel = np.array([True] * 6 + [False] * 2)
+    strag = np.array([True, True] + [False] * 6)
+    events, up = make_partial_round_events(rng, pk, sel, strag,
+                                           loss_rate=0.2, dup_rate=0.2)
+    clients_in_stream = {p.client for p, _ in events}
+    assert clients_in_stream <= {0, 1, 2, 3, 4, 5}
+    ends = {p.client for p, _ in events if p.kind is Kind.END}
+    assert ends == {2, 3, 4, 5}               # stragglers never END
+    assert up[6].sum() == 0 and up[7].sum() == 0
+    # a straggler's mask is a subset of what it would have delivered
+    for c in (0, 1):
+        stream_c = {p.index for p, _ in events
+                    if p.client == c and p.kind is Kind.DATA}
+        assert set(np.nonzero(up[c])[0].tolist()) == stream_c
+
+
+def test_round_results_match_fused_round_step():
+    """Property 1: every driven partial round is the fused dataflow on
+    its own up/down masks (bitwise, integer payloads)."""
+    rng, flats = _flats(1)
+    churn = ChurnConfig(participation=0.6, straggle_rate=0.4,
+                        loss_rate=0.15, dup_rate=0.2, down_loss_rate=0.1)
+    hist = run_churn_rounds(_cfg(), churn, flats, jnp.zeros((P,)), 4,
+                            rng=rng)
+    g = jnp.zeros((P,))
+    for res, log in zip(hist.results, hist.logs):
+        up = jnp.asarray(res.up_mask)
+        down = jnp.asarray(log.down_mask)
+        nf, ng, cnt = fused_round_step(flats, up, down, g, W, mode="exact")
+        np.testing.assert_array_equal(np.asarray(res.new_global),
+                                      np.asarray(ng))
+        np.testing.assert_array_equal(np.asarray(res.counts),
+                                      np.asarray(cnt))
+        np.testing.assert_array_equal(np.asarray(res.new_client_flats),
+                                      np.asarray(nf))
+        np.testing.assert_array_equal(np.asarray(res.counts),
+                                      np.asarray(up).sum(axis=0))
+        g = ng
+
+
+def test_straggler_accounting_per_round():
+    """Property 2: timed-out clients == K - clients that ENDed."""
+    rng, flats = _flats(2)
+    churn = ChurnConfig(participation=0.7, straggle_rate=0.5,
+                        p_leave=0.2, p_join=0.5)
+    hist = run_churn_rounds(_cfg(), churn, flats, jnp.zeros((P,)), 5,
+                            rng=rng)
+    for res, log in zip(hist.results, hist.logs):
+        finishers = int((log.selected & ~log.stragglers).sum())
+        assert res.stats.stragglers_timed_out == K - finishers
+        assert res.stats.late_dropped == 0    # nothing trails the close
+        # only finishers get the downlink
+        assert (np.asarray(log.down_mask).sum(axis=1) > 0).sum() \
+            <= finishers
+
+
+def test_sequential_train_fn_chains_downlink():
+    """The chained path feeds round r's downlink into round r+1's
+    uplink: with train_fn=identity the payloads evolve, and each round
+    still satisfies the fused oracle on its own masks."""
+    rng, flats = _flats(3)
+    churn = ChurnConfig(participation=1.0, down_loss_rate=0.0)
+    seen = []
+    hist = run_churn_rounds(_cfg(), churn, flats, jnp.zeros((P,)), 3,
+                            rng=rng,
+                            train_fn=lambda f, r: seen.append(r) or f)
+    assert seen == [0, 1, 2]
+    # full participation + lossless downlink: all clients adopt the
+    # global, so round 2's uplink payloads equal round 1's global
+    g1 = np.asarray(hist.results[0].new_global)
+    np.testing.assert_array_equal(
+        np.asarray(hist.results[0].new_client_flats),
+        np.tile(g1[None], (K, 1)))
+
+
+def test_rounds_chain_prev_global():
+    """An all-straggler round contributes nothing: its global equals the
+    previous round's (the per-slot fallback), and the chain continues."""
+    rng, flats = _flats(4)
+    churn = ChurnConfig(participation=1.0, straggle_rate=0.0)
+    hist = run_churn_rounds(_cfg(), churn, flats, jnp.zeros((P,)), 2,
+                            rng=rng)
+    dead = ChurnConfig(participation=0.0)
+    rng2 = np.random.default_rng(99)
+    hist2 = run_churn_rounds(_cfg(), dead, flats,
+                             hist.final_global, 2, rng=rng2)
+    for res in hist2.results:
+        np.testing.assert_array_equal(np.asarray(res.new_global),
+                                      np.asarray(hist.final_global))
+        assert res.stats.stragglers_timed_out == K
+
+
+def test_quorum_guard_stops_underpopulated_rounds():
+    rng, flats = _flats(5)
+    churn = ChurnConfig(participation=0.0)
+    with pytest.raises(QuorumError):
+        run_churn_rounds(_cfg(min_clients=1), churn, flats,
+                         jnp.zeros((P,)), 1, rng=rng)
+
+
+def test_quorum_failure_preserves_completed_rounds():
+    """A serving loop must not lose finished rounds to one thin round:
+    the QuorumError carries the completed prefix as ``e.history``, and
+    its rounds still chain bitwise from prev_global."""
+    _, flats = _flats(5)
+    churn = ChurnConfig(participation=0.55)
+    # seed 0: rounds 0-1 make quorum (>= 4 of 8), round 2 does not
+    with pytest.raises(QuorumError) as ei:
+        run_churn_rounds(_cfg(min_clients=4), churn, flats,
+                         jnp.zeros((P,)), 6,
+                         rng=np.random.default_rng(0))
+    hist = ei.value.history
+    assert len(hist.results) == 2
+    assert len(hist.logs) == len(hist.results)
+    for res, log in zip(hist.results, hist.logs):
+        assert int((log.selected & ~log.stragglers).sum()) >= 4
+        np.testing.assert_array_equal(np.asarray(res.counts),
+                                      np.asarray(res.up_mask).sum(axis=0))
+
+
+def test_driver_requires_compiled_engine_and_validates_churn():
+    rng, flats = _flats(6)
+    with pytest.raises(ValueError):
+        run_churn_rounds(
+            EngineConfig(n_clients=K, n_params=P, payload=W),
+            ChurnConfig(), flats, jnp.zeros((P,)), 1, rng=rng)
+    with pytest.raises(ValueError):
+        ChurnConfig(participation=1.5)
+
+
+def test_driver_defaults_deadline_to_close_at_finalize():
+    _, flats = _flats(7)
+    cfg = _cfg()
+    assert cfg.round_deadline is None
+    hist = run_churn_rounds(cfg, ChurnConfig(), flats, jnp.zeros((P,)), 1,
+                            rng=np.random.default_rng(70))
+    assert hist.results[0].stats.late_dropped == 0
+    explicit = dataclasses.replace(cfg, round_deadline=CLOSE_AT_FINALIZE)
+    hist2 = run_churn_rounds(explicit, ChurnConfig(), flats,
+                             jnp.zeros((P,)), 1,
+                             rng=np.random.default_rng(70))
+    np.testing.assert_array_equal(np.asarray(hist.results[0].new_global),
+                                  np.asarray(hist2.results[0].new_global))
+
+
+def test_sharded_churn_rounds_match_unsharded():
+    """Partial rounds keep the shard-invariance contract: the sharded
+    driver is bitwise the unsharded one on identical streams."""
+    churn = ChurnConfig(participation=0.6, straggle_rate=0.4,
+                        loss_rate=0.2, dup_rate=0.2, down_loss_rate=0.1)
+    outs = []
+    for shards in (1, 4):
+        rng, flats = _flats(8)
+        hist = run_churn_rounds(_cfg(shards=shards), churn, flats,
+                                jnp.zeros((P,)), 3, rng=rng)
+        outs.append(hist)
+    for a, b in zip(outs[0].results, outs[1].results):
+        np.testing.assert_array_equal(np.asarray(a.new_global),
+                                      np.asarray(b.new_global))
+        np.testing.assert_array_equal(np.asarray(a.counts),
+                                      np.asarray(b.counts))

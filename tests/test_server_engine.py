@@ -178,6 +178,26 @@ def test_duplicate_in_window_counts_as_duplicate_not_phase():
     assert engine.stats.data_enqueued == 1
 
 
+def test_up_mask_vectorized_matches_double_loop():
+    """Satellite regression: up_mask's single fancy-index assignment
+    must equal the old per-(client, slot) double loop on a lossy,
+    duplicated stream — including clients with empty uplink sets."""
+    rng, flats, prev, pk = _round_inputs(31, k=7, p=560, w=56)
+    events, up = make_uplink_stream(rng, pk, loss_rate=0.4, dup_rate=0.3)
+    events = [(p_, pl_) for p_, pl_ in events if p_.client != 3
+              or p_.kind is not Kind.DATA]          # client 3: nothing lands
+    cfg = EngineConfig(n_clients=7, n_params=560, payload=56)
+    engine = ServerEngine(cfg)
+    for packet, payload in events:
+        engine.rx(packet, payload)
+    ref = np.zeros((cfg.n_clients, cfg.n_slots), np.float32)
+    for c, got in enumerate(engine.fsm.uplink):
+        for s in got:
+            ref[c, s] = 1.0
+    np.testing.assert_array_equal(np.asarray(engine.up_mask()), ref)
+    assert ref[3].sum() == 0.0
+
+
 def test_control_packets_are_answered():
     cfg = EngineConfig(n_clients=2, n_params=64, payload=16)
     engine = ServerEngine(cfg)

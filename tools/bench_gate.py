@@ -2,8 +2,9 @@
 """Benchmark-regression CI gate (EXPERIMENTS.md §Shard-scaling).
 
 Compares the compiled-engine rows of freshly produced benchmark JSON
-(``BENCH_engine.json`` / ``BENCH_shard.json`` at the repo root, written
-by the CI benchmark smokes) against the committed baselines under
+(``BENCH_engine.json`` / ``BENCH_shard.json`` / ``BENCH_rounds.json``
+at the repo root, written by the CI benchmark smokes) against the
+committed baselines under
 ``benchmarks/baselines/`` and **fails the job when any matched row's
 ``pkts_per_s`` drops by more than the threshold** (default 25%) — the
 compiled round engine is the repo's hot path, and this is the tripwire
@@ -52,7 +53,8 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
-DEFAULT_FILES = ("BENCH_engine.json", "BENCH_shard.json")
+DEFAULT_FILES = ("BENCH_engine.json", "BENCH_shard.json",
+                 "BENCH_rounds.json")
 # config keys that must match exactly for two rows to be comparable
 KEY_FIELDS = ("k", "mode", "engine", "shards", "n_params", "payload",
               "ring_capacity")
