@@ -15,6 +15,17 @@ Measurements reuse the memoized ``engine_measured.measure_engine_round``
 caches, so running under ``benchmarks/run.py`` (after fig6/fig7) adds
 only the K > 10 configurations.
 
+``compiled_q8`` rows run the compressed int8 uplink (DESIGN.md §9):
+the same stream quantized to int8 payloads + per-packet scales, the
+dequantize fused into the compiled drain scan.  Every row additionally
+reports wire economics — ``payload_bytes``/``packet_wire_bytes`` per
+packet, achieved ``wire_mb_s``, and ``bytes_per_model_delta`` (wire
+bytes to ship one client's full model update) — plus the
+``WIRE_BUDGET_MB_S``-capped ``effective_pkts_per_s``: on a NIC whose
+uplink budget, not the server, is the bottleneck, the q8 rows' measured
+``speedup_at_wire_budget`` is the ~2.4x admission-rate win of the
+smaller wire format (EXPERIMENTS.md §Compressed-uplink).
+
 Each run overwrites ``BENCH_engine.json`` (committed — its git history
 is the perf trajectory across PRs; schema in EXPERIMENTS.md
 §Engine-throughput).
@@ -61,6 +72,72 @@ SHARD_SWEEP = (1, 2, 4, 8)
 SHARD_K = 256               # the worker-scaling point (paper Fig. 6/7)
 SHARD_WORKERS = 8           # rings == BlueField-2 cores; fixed across the
                             # sweep so batching (and bits) never change
+# Simulated NIC uplink budget for the wire-limited columns.  Chosen so
+# the wire, not the server, is the bottleneck for BOTH formats on every
+# compiled row (f32 admits ~37k pkts/s, q8 ~87k — the compiled engine
+# sustains >100k), so ``speedup_at_wire_budget`` measures the format,
+# not the machine.
+WIRE_BUDGET_MB_S = 12.0
+
+
+def _wire_cols(row, wire: str = "f32"):
+    """Attach the wire-economics columns every row carries (§9)."""
+    from repro.core.packets import packet_wire_bytes, payload_wire_bytes
+    pw = packet_wire_bytes(row["payload"], wire)
+    n_slots = -(-row["n_params"] // row["payload"])
+    row["wire_dtype"] = wire
+    row["payload_bytes"] = payload_wire_bytes(row["payload"], wire)
+    row["packet_wire_bytes"] = pw
+    row["wire_mb_s"] = row["pkts_per_s"] * pw / 1e6
+    row["bytes_per_model_delta"] = pw * n_slots
+    row["wire_limited_pkts_per_s"] = WIRE_BUDGET_MB_S * 1e6 / pw
+    row["effective_pkts_per_s"] = min(row["pkts_per_s"],
+                                      row["wire_limited_pkts_per_s"])
+    return row
+
+
+def _measure_q8_round(mode: str, n_clients: int, n_params: int,
+                      iters: int = 3):
+    """Compiled round on the q8 wire: int8 schedule + scale column,
+    dequantize fused into the drain scan.  Mirrors
+    ``engine_measured.measure_engine_round``'s compiled branch (same
+    seed, warmup, min-of-iters) so the f32/q8 delta is the wire format,
+    not the harness."""
+    from repro.core import engine_compiled as ec
+    from repro.core.aggregation import quantize_packets
+    from repro.core.packets import packetize
+    from repro.core.server import EngineConfig, make_uplink_stream
+
+    rng = np.random.default_rng(0)
+    flats = jnp.asarray(rng.normal(size=(n_clients, n_params))
+                        .astype(np.float32))
+    prev = jnp.zeros((n_params,), jnp.float32)
+    pk = jax.vmap(lambda f: packetize(f, PAYLOAD))(flats)
+    q, scales = quantize_packets(pk)
+    events, _ = make_uplink_stream(rng, q, loss_rate=LOSS_RATE,
+                                   dup_rate=DUP_RATE, scales=scales)
+    down = jnp.asarray((rng.random((n_clients, pk.shape[1])) > LOSS_RATE)
+                       .astype(np.float32))
+    cfg = EngineConfig(n_clients=n_clients, n_params=n_params,
+                       payload=PAYLOAD, ring_capacity=RING_CAPACITY,
+                       mode=mode, compile=True)
+    stats = {}
+
+    def one_round():
+        t0 = time.perf_counter()
+        sched, st, _ = ec.demux_events(cfg, events)
+        total = jnp.zeros((cfg.n_slots, PAYLOAD), jnp.float32)
+        counts = jnp.zeros((cfg.n_slots,), jnp.float32)
+        _, _, new_global, new_flats = ec.dispatch_round(
+            cfg, sched, total, counts, prev, client_flats=flats,
+            down_mask=down)
+        new_flats.block_until_ready()
+        stats["packets"] = float(st.data_enqueued)
+        return time.perf_counter() - t0
+
+    one_round()                                       # warmup: jit trace
+    dt = min(one_round() for _ in range(iters))
+    return {"response_time": dt, **stats}
 
 
 def _measure_overlap(mode: str, n_clients: int, n_params: int,
@@ -107,10 +184,13 @@ def rows(ks=CLIENT_SWEEP, quick: bool = False):
                 mode=mode, n_clients=k, n_params=n_params, compiled=False)
             comp = measure_engine_round(
                 mode=mode, n_clients=k, n_params=n_params, compiled=True)
-            variants = [("eager", eager), ("compiled", comp)]
+            q8 = _measure_q8_round(mode, k, n_params)
+            variants = [("eager", eager), ("compiled", comp),
+                        ("compiled_q8", q8)]
             if not quick:
                 variants.append(
                     ("compiled_overlap", _measure_overlap(mode, k, n_params)))
+            comp_row = None
             for engine, m in variants:
                 t = m["response_time"]
                 row = {
@@ -122,14 +202,26 @@ def rows(ks=CLIENT_SWEEP, quick: bool = False):
                     "pkts_per_s": m["packets"] / t,
                     "interpret": jax.default_backend() != "tpu",
                 }
+                _wire_cols(row, "q8" if engine == "compiled_q8" else "f32")
                 if engine != "eager":
                     row["speedup_vs_eager"] = (eager["response_time"] / t)
+                if engine == "compiled":
+                    comp_row = row
+                tag = f" ({row['speedup_vs_eager']:6.1f}x vs eager)" \
+                    if engine != "eager" else ""
+                if engine == "compiled_q8":
+                    # the headline: packets admitted per second when the
+                    # simulated NIC uplink budget is the bottleneck
+                    row["speedup_at_wire_budget"] = (
+                        row["effective_pkts_per_s"]
+                        / comp_row["effective_pkts_per_s"])
+                    tag += (f" [{row['speedup_at_wire_budget']:.2f}x @ "
+                            f"{WIRE_BUDGET_MB_S:.0f} MB/s wire]")
                 out.append(row)
-                tag = (f" ({row['speedup_vs_eager']:6.1f}x vs eager)"
-                       if engine != "eager" else "")
                 print(f"K={k:4d} {mode:6s}/{engine:16s} "
                       f"{t*1e3:10.2f} ms/round "
-                      f"{row['pkts_per_s']/1e3:10.1f} kpkt/s{tag}")
+                      f"{row['pkts_per_s']/1e3:10.1f} kpkt/s "
+                      f"{row['wire_mb_s']:7.1f} MB/s{tag}")
     return out
 
 
@@ -201,6 +293,7 @@ def shard_rows(quick: bool = False):
                 "speedup_vs_shard1": base_scan / scan_s,
                 "interpret": jax.default_backend() != "tpu",
             }
+            _wire_cols(row)
             out.append(row)
             print(f"K={k:4d} {mode:6s}/shards={shards} "
                   f"{'mesh' if row['on_mesh'] else 'emul'} "
@@ -247,6 +340,7 @@ def main():
             "ring_capacity": RING_CAPACITY,
             "loss_rate": LOSS_RATE,
             "dup_rate": DUP_RATE,
+            "wire_budget_mb_s": WIRE_BUDGET_MB_S,
             "rows": rows(ks=ks, quick=args.quick),
         }
     with open(out_path, "w") as f:

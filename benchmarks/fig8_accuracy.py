@@ -38,7 +38,7 @@ import numpy as np
 from repro.configs.paper_cnn import CNNConfig
 from repro.core.fedavg import FedAvgConfig, ModelFns, _local_update
 from repro.core.packets import PacketizedShape, flatten_pytree, loss_mask, \
-    packetize, unflatten_pytree
+    packetize, quantize_batch_with_feedback, unflatten_pytree
 from repro.core.server import EngineConfig, make_uplink_stream, \
     run_engine_round
 from repro.data.federated import partition_iid
@@ -80,12 +80,19 @@ def aggregation_error_rows(seed: int = 0):
 
 
 def _train_with_engine(mode: str, ring_capacity: int, rounds: int,
-                       seed: int = 0):
+                       seed: int = 0, wire: str = "f32"):
     """Reduced-CNN FedAvg with the packet-path engine as the server.
 
     Mirrors run_fedavg's loop, but each round's aggregation consumes a
     freshly generated lossy/duplicated/out-of-order packet stream via
     run_engine_round instead of calling fused_round_step.
+
+    ``wire='q8'`` runs the compressed uplink (DESIGN.md §9): each round
+    the clients quantize through their error-feedback residual
+    (``quantize_batch_with_feedback``) and the stream carries int8
+    payloads + per-packet scales; ``wire='q8_noef'`` is the
+    residual-off control (the residual stays zero), isolating what
+    error feedback buys (EXPERIMENTS.md §Compressed-uplink).
     """
     cnn = CNNConfig(image_size=8, conv_channels=(8, 16, 16, 16),
                     fc_hidden=32)
@@ -124,14 +131,26 @@ def _train_with_engine(mode: str, ring_capacity: int, rounds: int,
     stream_rng = np.random.default_rng(seed + 1)
     ecfg = EngineConfig(n_clients=K, n_params=P, payload=PAYLOAD,
                         ring_capacity=ring_capacity, mode=mode)
+    residuals = jnp.zeros((K, P), jnp.float32)
     history = {"test_loss": [], "test_acc": []}
     for t in range(rounds):
         rng, r_tr, r_dn = jax.random.split(rng, 3)
         client_flats = train_all(client_flats,
                                  jax.random.split(r_tr, K))
-        pk = jax.vmap(lambda f: packetize(f, PAYLOAD))(client_flats)
-        events, _ = make_uplink_stream(stream_rng, pk, loss_rate=LOSS_RATE,
-                                       dup_rate=DUP_RATE)
+        if wire == "f32":
+            pk = jax.vmap(lambda f: packetize(f, PAYLOAD))(client_flats)
+            events, _ = make_uplink_stream(stream_rng, pk,
+                                           loss_rate=LOSS_RATE,
+                                           dup_rate=DUP_RATE)
+        else:
+            pk, scales, new_res = quantize_batch_with_feedback(
+                client_flats, residuals, PAYLOAD)
+            if wire == "q8":          # 'q8_noef' keeps the residual at 0
+                residuals = new_res
+            events, _ = make_uplink_stream(stream_rng, pk,
+                                           loss_rate=LOSS_RATE,
+                                           dup_rate=DUP_RATE,
+                                           scales=scales)
         down = loss_mask(r_dn, K, pshape.n_packets, LOSS_RATE)
         res = run_engine_round(ecfg, client_flats, server_flat, events,
                                down_mask=down)
@@ -146,14 +165,15 @@ def _train_with_engine(mode: str, ring_capacity: int, rounds: int,
 def rows(rounds: int = 6):
     out = aggregation_error_rows()
     hist = {}
-    for name, mode, cap in [("exact", "exact", 2),
-                            ("approx", "approx", 2),
-                            ("approx_wide", "approx", 4)]:
-        hist[name] = _train_with_engine(mode, cap, rounds)
+    for name, mode, cap, wire in [("exact", "exact", 2, "f32"),
+                                  ("approx", "approx", 2, "f32"),
+                                  ("approx_wide", "approx", 4, "f32"),
+                                  ("int8_ef", "exact", 2, "q8")]:
+        hist[name] = _train_with_engine(mode, cap, rounds, wire=wire)
         out.append((f"fig8acc_train_{name}", 0.0,
                     f"final_test_loss={hist[name]['test_loss'][-1]:.4f};"
                     f"final_acc={hist[name]['test_acc'][-1]:.3f};"
-                    f"ring_capacity={cap}"))
+                    f"ring_capacity={cap};wire={wire}"))
     for name, tag in [("approx", "paper_regime"), ("approx_wide", "stress")]:
         d_acc = (hist["exact"]["test_acc"][-1] - hist[name]["test_acc"][-1])
         d_loss = abs(hist["exact"]["test_loss"][-1]
@@ -161,6 +181,14 @@ def rows(rounds: int = 6):
         out.append((f"fig8acc_delta_{tag}", 0.0,
                     f"acc_drop={d_acc:+.4f};|loss_delta|={d_loss:.4f} "
                     f"(paper §5.3: negligible loss)"))
+    # compressed-uplink acceptance: q8 + error feedback must track the
+    # f32 engine within 0.01 accuracy (EXPERIMENTS.md §Compressed-uplink)
+    d_acc = hist["exact"]["test_acc"][-1] - hist["int8_ef"]["test_acc"][-1]
+    d_loss = abs(hist["exact"]["test_loss"][-1]
+                 - hist["int8_ef"]["test_loss"][-1])
+    out.append(("fig8acc_delta_int8", 0.0,
+                f"acc_drop={d_acc:+.4f};|loss_delta|={d_loss:.4f} "
+                f"(target: acc_drop <= 0.01 with error feedback on)"))
     return out
 
 

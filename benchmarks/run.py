@@ -48,8 +48,12 @@ def main() -> None:
         return [(f"engine_K{r['k']}_{r['mode']}_{r['engine']}",
                  r["round_s"] * 1e6,
                  f"pkts_per_s={r['pkts_per_s']:.0f}"
+                 f";wire_mb_s={r['wire_mb_s']:.1f}"
                  + (f";speedup={r['speedup_vs_eager']:.1f}x"
-                    if "speedup_vs_eager" in r else ""))
+                    if "speedup_vs_eager" in r else "")
+                 + (f";wire_budget_speedup="
+                    f"{r['speedup_at_wire_budget']:.2f}x"
+                    if "speedup_at_wire_budget" in r else ""))
                 for r in engine_throughput.rows()]
 
     def shard_rows():

@@ -31,8 +31,14 @@ lands right after the healthy clients' ENDs.
 (core/rounds.py): per-round Bernoulli client sampling, join/leave
 membership churn, and mid-upload stragglers timed out at the close.
 
+``--int8`` sends the same round over the compressed uplink (DESIGN.md
+§9): int8 payloads + a per-packet scale in the header, ~3.8x fewer
+payload bytes on the wire, the dequantize fused into the compiled
+drain scan — and verifies the q8 round is *bitwise identical* to
+decoding the wire bytes on the host and running the f32 engine.
+
 Run:  PYTHONPATH=src python examples/packet_server.py [--compile]
-                        [--shards N] [--deadline [N]] [--churn]
+                [--shards N] [--deadline [N]] [--churn] [--int8]
 """
 import argparse
 
@@ -116,6 +122,49 @@ def churn_demo(args):
               f"slots delivered")
 
 
+def int8_demo(args):
+    """Compressed uplink: int8 wire payloads, fused dequantize, bitwise
+    equal to host-decoding the same bytes and running the f32 engine."""
+    from repro.core.aggregation import quantize_packets
+    from repro.core.packets import packet_wire_bytes
+    K, P, W = 10, 4096, 64
+    rng = np.random.default_rng(0)
+    client_flats = jnp.asarray(rng.normal(size=(K, P))
+                               .astype(np.float32))
+    prev = jnp.zeros((P,), jnp.float32)
+    pk = jax.vmap(lambda f: packetize(f, W))(client_flats)
+    q, scales = quantize_packets(pk)
+    # same rng seed => identical loss/dup/ordering fate on both wires
+    ev_q8, _ = make_uplink_stream(np.random.default_rng(1), q,
+                                  loss_rate=0.0468, dup_rate=0.05,
+                                  scales=scales)
+    deq = (np.asarray(q).astype(np.float32)
+           * np.asarray(scales, np.float32)[..., None])
+    ev_f32, _ = make_uplink_stream(np.random.default_rng(1),
+                                   jnp.asarray(deq),
+                                   loss_rate=0.0468, dup_rate=0.05)
+    n_data = len(ev_q8) - 2 * K
+    b_q8 = n_data * packet_wire_bytes(W, "q8")
+    b_f32 = n_data * packet_wire_bytes(W, "f32")
+    print(f"\n== compressed int8 uplink (DESIGN.md §9) ==")
+    print(f"  {n_data} DATA packets on the wire: "
+          f"{b_f32/1e3:.0f} kB as f32 -> {b_q8/1e3:.0f} kB as q8 "
+          f"({b_f32/b_q8:.2f}x smaller)")
+    for mode in ("exact", "approx"):
+        cfg = EngineConfig(n_clients=K, n_params=P, payload=W,
+                           ring_capacity=64, mode=mode,
+                           compile=args.compile, shards=args.shards)
+        got = run_engine_round(cfg, client_flats, prev, ev_q8)
+        want = run_engine_round(cfg, client_flats, prev, ev_f32)
+        same = (np.array_equal(np.asarray(got.new_global),
+                               np.asarray(want.new_global))
+                and np.array_equal(np.asarray(got.counts),
+                                   np.asarray(want.counts)))
+        print(f"  {mode:6s}: {got.stats.data_enqueued} pkts aggregated, "
+              f"fused dequant bitwise == host-decoded f32 round: {same}")
+        assert same, "q8 round diverged from its host-decoded twin"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--compile", action="store_true",
@@ -133,15 +182,22 @@ def main():
                     help="multi-round churn-driver demo "
                          "(core/rounds.py: sampling + join/leave + "
                          "stragglers)")
+    ap.add_argument("--int8", action="store_true",
+                    help="compressed int8 uplink demo: quantized wire "
+                         "payloads, dequantize fused into the round "
+                         "(DESIGN.md §9)")
     args = ap.parse_args()
     if args.shards > 1:
         args.compile = True
     if args.deadline is not None:
         straggler_demo(args)
-        if not args.churn:
+        if not (args.churn or args.int8):
             return
     if args.churn:
         churn_demo(args)
+        return
+    if args.int8:
+        int8_demo(args)
         return
     K, P, W = 10, 4096, 64
     rng = np.random.default_rng(0)

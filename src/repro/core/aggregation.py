@@ -98,11 +98,15 @@ def client_update_with_fallback(local_packets: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def quantize_packets(packets: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """(K, N, W) f32 -> (int8 payloads, per-packet scales (K, N))."""
-    absmax = jnp.max(jnp.abs(packets), axis=-1)              # (K, N)
-    scale = jnp.maximum(absmax, 1e-12) / 127.0
-    q = jnp.clip(jnp.round(packets / scale[..., None]), -127, 127)
-    return q.astype(jnp.int8), scale.astype(jnp.float32)
+    """(K, N, W) f32 -> (int8 payloads, per-packet scales (K, N)).
+
+    Delegates to ``packets.quantize_payload`` — ONE definition of the
+    symmetric absmax encoding shared by this aggregation shortcut and
+    the wire path (DESIGN.md §9), so host- and kernel-side dequantized
+    values are bitwise comparable.
+    """
+    from repro.core.packets import quantize_payload
+    return quantize_payload(packets)
 
 
 def dequantize_aggregate(q: jnp.ndarray, scale: jnp.ndarray,

@@ -102,19 +102,25 @@ class DrainSchedule:
     """
     idx: np.ndarray         # (n_rows, B) int32 slot rows
     weights: np.ndarray     # (n_rows, B) f32 per-arrival FedAvg weights
-    payloads: np.ndarray    # (n_rows, B, W) f32 payload rows
+    payloads: np.ndarray    # (n_rows, B, W) payload rows: f32 wire, or
+                            # int8 when ``scales`` is present (q8 wire)
     n_batches: int          # real drain batches (rest is padding)
     n_packets: int          # accepted arrivals scheduled
     workers: Optional[np.ndarray] = None   # (n_rows,) owning worker ring
                                            # per batch (-1 for padding);
                                            # shard_schedule keys on it
+    scales: Optional[np.ndarray] = None    # (n_rows, B) f32 per-packet
+                                           # q8 dequant scales (0 inert);
+                                           # None on the f32 wire path
 
 
 def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
                          payloads: np.ndarray, *, n_workers: int,
                          ring_capacity: int, ring_assign: str = "rr",
                          block_pkts: int = BLOCK_PKTS,
-                         pad_batches: int = 8) -> DrainSchedule:
+                         pad_batches: int = 8,
+                         scales: Optional[np.ndarray] = None
+                         ) -> DrainSchedule:
     """Vectorized replay of the eager engine's ring demux.
 
     slots (n,) int32 / weights (n,) f32 / payloads (n, W) f32 are the
@@ -125,15 +131,23 @@ def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
     full, and partial rings flush at END in worker order.  Batch rows
     are padded to ``B = ceil(capacity / block_pkts) * block_pkts``, the
     same inert padding the eager ``scatter_add`` applies per drain.
+
+    ``scales`` (n,) f32 marks a q8 round: payloads are then the int8
+    wire rows and the schedule carries the per-packet scale column next
+    to the weights (DESIGN.md §9); padding entries get scale 0, which
+    dequantizes padding to 0 exactly like the f32 inert rows.
     """
     n = int(slots.shape[0])
     W = int(payloads.shape[1])
     B = ring_capacity + (-ring_capacity) % block_pkts
+    pk_dtype = np.float32 if scales is None else np.int8
     if n == 0:
         return DrainSchedule(np.full((1, B), -1, np.int32),
                              np.zeros((1, B), np.float32),
-                             np.zeros((1, B, W), np.float32), 0, 0,
-                             np.full((1,), -1, np.int64))
+                             np.zeros((1, B, W), pk_dtype), 0, 0,
+                             np.full((1,), -1, np.int64),
+                             None if scales is None
+                             else np.zeros((1, B), np.float32))
     if ring_assign == "slot":
         worker = slots.astype(np.int64) % n_workers
     else:
@@ -163,18 +177,23 @@ def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
     n_rows = (nb + (-nb) % pad_batches) if pad_batches > 1 else nb
     idx = np.full((n_rows, B), -1, np.int32)
     w = np.zeros((n_rows, B), np.float32)
-    pk = np.zeros((n_rows, B, W), np.float32)
+    pk = np.zeros((n_rows, B, W), pk_dtype)
     idx[row, col] = slots
     w[row, col] = weights
     pk[row, col] = payloads
+    sc = None
+    if scales is not None:
+        sc = np.zeros((n_rows, B), np.float32)
+        sc[row, col] = scales
     row_worker = np.full(n_rows, -1, np.int64)
     row_worker[rank] = uniq // (n + 1)            # batch key -> its worker
-    return DrainSchedule(idx, w, pk, int(nb), n, row_worker)
+    return DrainSchedule(idx, w, pk, int(nb), n, row_worker, sc)
 
 
 def shard_schedule(sched: DrainSchedule, n_shards: int, *,
                    pad_batches: int = 8
-                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                              Optional[np.ndarray]]:
     """Demux a round's drain schedule per shard (DESIGN.md §7).
 
     Shard ``s`` owns the drain batches of worker rings ``w`` with
@@ -186,10 +205,11 @@ def shard_schedule(sched: DrainSchedule, n_shards: int, *,
     to the unsharded engine on integer-valued payloads (both modes are
     additive across batches).
 
-    Returns ``(idx, weights, payloads)`` with a leading ``(n_shards,)``
-    axis; shards are padded to a common row count (bucketed to a
-    multiple of ``pad_batches`` so round-to-round jitter reuses one jit
-    trace) with inert rows, and shards with no assigned ring (e.g.
+    Returns ``(idx, weights, payloads, scales)`` with a leading
+    ``(n_shards,)`` axis (``scales`` is None on the f32 wire path);
+    shards are padded to a common row count (bucketed to a multiple of
+    ``pad_batches`` so round-to-round jitter reuses one jit trace) with
+    inert rows, and shards with no assigned ring (e.g.
     ``n_shards > n_workers``) are entirely inert.
     """
     assert sched.workers is not None, "schedule predates worker tracking"
@@ -204,12 +224,16 @@ def shard_schedule(sched: DrainSchedule, n_shards: int, *,
         rows += (-rows) % pad_batches
     idx = np.full((n_shards, rows, B), -1, np.int32)
     w = np.zeros((n_shards, rows, B), np.float32)
-    pk = np.zeros((n_shards, rows, B, W), np.float32)
+    pk = np.zeros((n_shards, rows, B, W), sched.payloads.dtype)
+    sc = (None if sched.scales is None
+          else np.zeros((n_shards, rows, B), np.float32))
     for s, p in enumerate(per_shard):
         idx[s, :len(p)] = sched.idx[p]
         w[s, :len(p)] = sched.weights[p]
         pk[s, :len(p)] = sched.payloads[p]
-    return idx, w, pk
+        if sc is not None:
+            sc[s, :len(p)] = sched.scales[p]
+    return idx, w, pk, sc
 
 
 def approx_lost_updates(sched: DrainSchedule, n_shards: int = 1
@@ -266,6 +290,8 @@ def demux_events(cfg: EngineConfig, events: Iterable,
     d_s: List[int] = []
     d_pay: List = []
     d_pos: List[int] = []
+    d_q8: List[bool] = []
+    d_sc: List[float] = []
     s_c: List[int] = []
     s_pos: List[int] = []
     e_c: List[int] = []
@@ -275,6 +301,7 @@ def demux_events(cfg: EngineConfig, events: Iterable,
     data_k, start_k, end_k = Kind.DATA, Kind.START, Kind.END
     dc_ap, ds_ap = d_c.append, d_s.append
     dpay_ap, dpos_ap = d_pay.append, d_pos.append
+    dq_ap, dsc_ap = d_q8.append, d_sc.append
     pos = 0
     for packet, payload in events:
         kind = packet.kind
@@ -283,6 +310,8 @@ def demux_events(cfg: EngineConfig, events: Iterable,
             ds_ap(packet.index)
             dpay_ap(payload)
             dpos_ap(pos)
+            dq_ap(packet.wire_dtype != "f32")
+            dsc_ap(packet.scale)
         elif kind is start_k:
             s_c.append(packet.client)
             s_pos.append(pos)
@@ -347,12 +376,31 @@ def demux_events(cfg: EngineConfig, events: Iterable,
     up[dc[acc_rows], ds[acc_rows]] = 1.0
     # stack only the *accepted* payload rows: dropped DATA may legally
     # carry no payload (the eager rx phase-drops before its assert)
-    pay = (np.asarray([d_pay[i] for i in acc_rows], np.float32)
-           if len(acc_rows) else np.zeros((0, cfg.payload), np.float32))
+    n_q8 = sum(d_q8[i] for i in acc_rows)
+    scales_col = None
+    if n_q8 == 0:
+        pay = (np.asarray([d_pay[i] for i in acc_rows], np.float32)
+               if len(acc_rows) else np.zeros((0, cfg.payload), np.float32))
+    elif n_q8 == len(acc_rows):
+        # homogeneous q8 round: the schedule stays int8 end to end and
+        # the per-packet scale column rides beside the weights — the
+        # only f32 form of the uplink is built inside the scan body
+        pay = np.asarray([d_pay[i] for i in acc_rows], np.int8)
+        scales_col = np.asarray([d_sc[i] for i in acc_rows], np.float32)
+    else:
+        # mixed f32/q8 round: correctness fallback — decode the q8 rows
+        # host-side into one f32 schedule (same elementwise q * scale
+        # the fused kernel applies, so numerics are unchanged)
+        pay = np.stack([
+            np.asarray(d_pay[i], np.int8).astype(np.float32)
+            * np.float32(d_sc[i]) if d_q8[i]
+            else np.asarray(d_pay[i], np.float32)
+            for i in acc_rows])
     sched = build_drain_schedule(
         ds[acc_rows].astype(np.int32), wts[dc[acc_rows]],
         pay, n_workers=cfg.n_workers,
-        ring_capacity=cfg.ring_capacity, ring_assign=cfg.ring_assign)
+        ring_capacity=cfg.ring_capacity, ring_assign=cfg.ring_assign,
+        scales=scales_col)
     stats.batches_drained = sched.n_batches
     return sched, stats, up
 
@@ -367,11 +415,11 @@ def demux_events(cfg: EngineConfig, events: Iterable,
                                     "block_pkts", "mix_alpha", "interpret",
                                     "shards", "mesh"),
                    donate_argnums=(0, 1))
-def _round_device(total, counts, sched_idx, sched_w, sched_pk, prev_global,
-                  client_flats, down_mask, *, mode: str, payload: int,
-                  n_params: int, use_pallas: bool, block_slots: int,
-                  block_pkts: int, mix_alpha: float, interpret: bool,
-                  shards: int = 1, mesh=None):
+def _round_device(total, counts, sched_idx, sched_w, sched_pk, sched_scales,
+                  prev_global, client_flats, down_mask, *, mode: str,
+                  payload: int, n_params: int, use_pallas: bool,
+                  block_slots: int, block_pkts: int, mix_alpha: float,
+                  interpret: bool, shards: int = 1, mesh=None):
     """The whole round as one compiled dataflow.
 
     total (S, W) / counts (S,) are donated and carried through the drain
@@ -379,6 +427,11 @@ def _round_device(total, counts, sched_idx, sched_w, sched_pk, prev_global,
     sequence of ``StreamingAggregator.finalize`` + ``finalize_round``)
     and — when ``client_flats``/``down_mask`` are present — the TX
     downlink fallback run fused in the same call.
+
+    On the q8 wire path ``sched_pk`` is int8 and ``sched_scales``
+    carries the per-packet dequant scales; dequantization happens
+    inside the scan body (DESIGN.md §9), so the round's only f32 uplink
+    form is the accumulator itself.
 
     With ``shards > 1`` the schedule arrays carry a leading (shards,)
     axis and the drain scan runs per shard into shard-local partials
@@ -394,13 +447,15 @@ def _round_device(total, counts, sched_idx, sched_w, sched_pk, prev_global,
         cnt = jnp.pad(cnt, ((0, pad), (0, 0)))
     if shards > 1:
         acc, cnt = packet_scatter_accum_sharded(
-            sched_idx, sched_w, sched_pk, acc, cnt, mesh=mesh,
+            sched_idx, sched_w, sched_pk, acc, cnt,
+            sched_scales=sched_scales, mesh=mesh,
             exact=(mode == "exact"), use_pallas=use_pallas,
             block_slots=block_slots, block_pkts=block_pkts,
             interpret=interpret)
     else:
         acc, cnt = packet_scatter_accum_scan(
-            sched_idx, sched_w, sched_pk, acc, cnt, exact=(mode == "exact"),
+            sched_idx, sched_w, sched_pk, acc, cnt,
+            sched_scales=sched_scales, exact=(mode == "exact"),
             use_pallas=use_pallas, block_slots=block_slots,
             block_pkts=block_pkts, interpret=interpret)
     total, counts = acc[:S], cnt[:S, 0]
@@ -434,15 +489,17 @@ def dispatch_round(cfg: EngineConfig, sched: DrainSchedule, total, counts,
     """
     if cfg.mode not in ("exact", "approx"):
         raise ValueError(cfg.mode)
-    idx, w, pk = sched.idx, sched.weights, sched.payloads
+    idx, w, pk, sc = (sched.idx, sched.weights, sched.payloads,
+                      sched.scales)
     mesh = None
     if cfg.shards > 1:
-        idx, w, pk = shard_schedule(sched, cfg.shards)
+        idx, w, pk, sc = shard_schedule(sched, cfg.shards)
         ctx = worker_ctx(cfg.shards)
         mesh = None if ctx is None else ctx.mesh
     return _round_device(
         jnp.asarray(total, jnp.float32), jnp.asarray(counts, jnp.float32),
         jnp.asarray(idx), jnp.asarray(w), jnp.asarray(pk),
+        None if sc is None else jnp.asarray(sc),
         jnp.asarray(prev_global),
         None if client_flats is None else jnp.asarray(client_flats),
         None if down_mask is None else jnp.asarray(down_mask),

@@ -6,10 +6,19 @@ index + 1468 B payload).  ``PAYLOAD_F32 = 367`` is kept byte-faithful for
 the protocol/simulation layer; the device-side aggregation kernels use a
 lane-aligned chunk (multiple of 128) instead, with the mapping handled by
 padding (DESIGN.md §2).
+
+The compressed uplink (DESIGN.md §9) replaces the f32 weight block with
+int8 weights plus ONE per-packet symmetric scale in the header: 4 B
+index + 4 B f32 scale + up to 1464 int8 weights.  ``packetize_q8`` /
+``depacketize_q8`` are the chunk twins of the f32 path, and
+``QuantClientState`` carries the client-side error-feedback residual so
+repeated rounds converge like f32 (the quantization error of round *t*
+is added back into the transmitted delta of round *t+1*).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -22,8 +31,11 @@ UDP_HEADER = 8
 INDEX_BYTES = 4
 PAYLOAD_BYTES = MTU - IP_HEADER - UDP_HEADER - INDEX_BYTES   # 1468
 PAYLOAD_F32 = PAYLOAD_BYTES // 4                             # 367
+SCALE_BYTES = 4                     # per-packet f32 symmetric scale (q8)
+PAYLOAD_Q8 = PAYLOAD_BYTES - SCALE_BYTES                     # 1464
 ETH_OVERHEAD = 14 + 4 + 8 + 12      # eth hdr + FCS + preamble + IFG
 WIRE_PACKET_BYTES = MTU + ETH_OVERHEAD
+Q8_LEVELS = 127                     # symmetric int8: [-127, 127]
 
 # device-side chunk: lane-aligned (multiple of 128 f32)
 DEVICE_CHUNK_F32 = 512
@@ -55,6 +67,87 @@ def packetize(flat: jnp.ndarray, payload: int = PAYLOAD_F32) -> jnp.ndarray:
 def depacketize(packets: jnp.ndarray, n_params: int) -> jnp.ndarray:
     """(n_packets, payload) -> (P,)."""
     return packets.reshape(-1)[:n_params]
+
+
+# ---------------------------------------------------------------------------
+# Compressed (int8) wire path — DESIGN.md §9
+# ---------------------------------------------------------------------------
+
+def quantize_payload(packets: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(..., W) f32 -> int8 weights + per-packet symmetric scale (...,).
+
+    Symmetric absmax quantization: ``scale = max(|x|, eps) / 127`` so the
+    full int8 range covers the packet; the scale travels in the packet
+    header.  Same arithmetic as ``aggregation.quantize_packets`` — one
+    definition for host- and device-side dequantization keeps the two
+    bitwise comparable.
+    """
+    absmax = jnp.max(jnp.abs(packets), axis=-1)
+    scale = (jnp.maximum(absmax, 1e-12) / Q8_LEVELS).astype(jnp.float32)
+    q = jnp.clip(jnp.round(packets / scale[..., None]),
+                 -Q8_LEVELS, Q8_LEVELS).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_payload(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """int8 weights (..., W) + scales (...,) -> f32 (..., W)."""
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def packetize_q8(flat: jnp.ndarray, payload: int = PAYLOAD_Q8
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(P,) f32 -> ((n_packets, payload) int8, (n_packets,) f32 scales)."""
+    return quantize_payload(packetize(flat, payload))
+
+
+def depacketize_q8(q: jnp.ndarray, scales: jnp.ndarray,
+                   n_params: int) -> jnp.ndarray:
+    """Int8 packets + scales -> (P,) f32 (the wire-decoded vector)."""
+    return depacketize(dequantize_payload(q, scales), n_params)
+
+
+@functools.partial(jax.jit, static_argnames=("payload",))
+def quantize_with_feedback(flat: jnp.ndarray, residual: jnp.ndarray,
+                           payload: int = PAYLOAD_Q8):
+    """Error-feedback encode: quantize ``flat + residual``, carry back
+    the quantization error.
+
+    Returns ``(q, scales, new_residual)`` where ``new_residual`` is the
+    part of the compensated vector the int8 encoding could not express —
+    added to next round's upload, so quantization error averages out
+    across rounds instead of biasing every round the same way (EF-SGD).
+    """
+    target = flat + residual
+    q, scales = packetize_q8(target, payload)
+    decoded = depacketize_q8(q, scales, flat.shape[0])
+    return q, scales, target - decoded
+
+
+def quantize_batch_with_feedback(flats: jnp.ndarray, residuals: jnp.ndarray,
+                                 payload: int = PAYLOAD_Q8):
+    """vmap of ``quantize_with_feedback`` over a (K, P) client batch."""
+    return jax.vmap(
+        lambda f, r: quantize_with_feedback(f, r, payload))(flats, residuals)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantClientState:
+    """One client's persistent error-feedback residual (DESIGN.md §9)."""
+    residual: jnp.ndarray            # (P,) f32, zero-initialized
+    payload: int = PAYLOAD_Q8
+
+    @classmethod
+    def init(cls, n_params: int,
+             payload: int = PAYLOAD_Q8) -> "QuantClientState":
+        return cls(residual=jnp.zeros((n_params,), jnp.float32),
+                   payload=payload)
+
+    def encode(self, flat: jnp.ndarray):
+        """-> (q int8 packets, f32 scales, next round's state)."""
+        q, scales, new_residual = quantize_with_feedback(
+            flat, self.residual, self.payload)
+        return q, scales, dataclasses.replace(self, residual=new_residual)
 
 
 def flatten_pytree(params) -> Tuple[jnp.ndarray, object]:
@@ -97,7 +190,26 @@ def straggler_mask(rng, n_clients: int, dropout_rate: float) -> jnp.ndarray:
     return keep.astype(jnp.float32)
 
 
-def packet_bytes_on_wire(n_params: int, payload: int = PAYLOAD_F32) -> int:
+def payload_wire_bytes(payload: int, wire_dtype: str = "f32") -> int:
+    """UDP payload bytes carrying ``payload`` weights at ``wire_dtype``.
+
+    f32: 4 B per weight.  q8: 1 B per weight plus the 4 B scale header.
+    """
+    if wire_dtype == "f32":
+        return 4 * payload
+    if wire_dtype == "q8":
+        return payload + SCALE_BYTES
+    raise ValueError(f"unknown wire_dtype {wire_dtype!r}")
+
+
+def packet_wire_bytes(payload: int, wire_dtype: str = "f32") -> int:
+    """Bytes ONE packet occupies on the wire, all framing included."""
+    return (ETH_OVERHEAD + IP_HEADER + UDP_HEADER + INDEX_BYTES
+            + payload_wire_bytes(payload, wire_dtype))
+
+
+def packet_bytes_on_wire(n_params: int, payload: int = PAYLOAD_F32,
+                         wire_dtype: str = "f32") -> int:
     """Total bytes on the 25GbE wire for one client's parameter upload."""
     n_pkts = PacketizedShape(n_params, payload).n_packets
-    return n_pkts * WIRE_PACKET_BYTES
+    return n_pkts * packet_wire_bytes(payload, wire_dtype)

@@ -42,6 +42,11 @@ class Packet:
     client: int
     index: int = -1          # data packet index
     from_server: bool = False
+    # Compressed-uplink wire header (DESIGN.md §9).  The FSM and the
+    # dedup path never look at these — f32 and q8 streams coexist on
+    # one socket and framing/retransmission behave identically.
+    wire_dtype: str = "f32"  # "f32" | "q8" payload encoding
+    scale: float = 1.0       # q8 per-packet symmetric dequant scale
 
 
 class ClientPhase(enum.Enum):

@@ -161,6 +161,8 @@ class ServerEngine:
         self._pend_slots: List[int] = []
         self._pend_weights: List[float] = []
         self._pend_payloads: List[np.ndarray] = []
+        self._pend_q8: List[bool] = []       # wire_dtype per arrival
+        self._pend_scales: List[float] = []  # q8 dequant scale (DESIGN.md §9)
         self._events_seen = 0
         self._deadline_fired = False
         self.stats = EngineStats()
@@ -205,10 +207,13 @@ class ServerEngine:
         self.fsm.on_packet(packet)               # records the arrival
         if self.cfg.compile:
             # record only — the drain schedule is built (and the whole
-            # round dispatched) once, at finalize time
+            # round dispatched) once, at finalize time; q8 payloads stay
+            # int8 here so dequantization can fuse into the scan body
             self._pend_slots.append(slot)
             self._pend_weights.append(float(self.weights[c]))
             self._pend_payloads.append(payload)
+            self._pend_q8.append(packet.wire_dtype != "f32")
+            self._pend_scales.append(packet.scale)
             self.stats.data_enqueued += 1
             return []
         if self.cfg.ring_assign == "slot":
@@ -216,9 +221,15 @@ class ServerEngine:
         else:
             worker = self._rr_next
             self._rr_next = (self._rr_next + 1) % self.cfg.n_workers
+        if packet.wire_dtype != "f32":
+            # eager path: wire-decode at RX (same elementwise q * scale
+            # the fused q8 kernel applies, so numerics are unchanged)
+            row = (np.asarray(payload, np.int8).astype(np.float32)
+                   * np.float32(packet.scale))
+        else:
+            row = np.asarray(payload, np.float32)
         ring = self._rings[worker]
-        ring.append((slot, float(self.weights[c]),
-                     np.asarray(payload, np.float32)))
+        ring.append((slot, float(self.weights[c]), row))
         self.stats.data_enqueued += 1
         if len(ring) >= self.cfg.ring_capacity:
             self._drain(worker)
@@ -311,16 +322,34 @@ class ServerEngine:
     def _finalize_compiled(self, prev_global, client_flats=None,
                            down_mask=None, mix_alpha: float = 0.0):
         from repro.core import engine_compiled as ec
+        n_q8 = sum(self._pend_q8)
+        scales = None
+        if n_q8 == 0:
+            pay = (np.asarray(self._pend_payloads, np.float32)
+                   if self._pend_payloads
+                   else np.zeros((0, self.cfg.payload), np.float32))
+        elif n_q8 == len(self._pend_payloads):
+            # homogeneous q8 round: int8 schedule + scale column, the
+            # dequantize runs fused inside the compiled scan
+            pay = np.asarray(self._pend_payloads, np.int8)
+            scales = np.asarray(self._pend_scales, np.float32)
+        else:
+            # mixed wire round: decode q8 rows host-side (coexistence
+            # fallback, numerics unchanged — DESIGN.md §9)
+            pay = np.stack([
+                np.asarray(p, np.int8).astype(np.float32) * np.float32(s)
+                if q else np.asarray(p, np.float32)
+                for p, q, s in zip(self._pend_payloads, self._pend_q8,
+                                   self._pend_scales)])
         sched = ec.build_drain_schedule(
             np.asarray(self._pend_slots, np.int32),
             np.asarray(self._pend_weights, np.float32),
-            (np.asarray(self._pend_payloads, np.float32)
-             if self._pend_payloads
-             else np.zeros((0, self.cfg.payload), np.float32)),
+            pay,
             n_workers=self.cfg.n_workers,
             ring_capacity=self.cfg.ring_capacity,
-            ring_assign=self.cfg.ring_assign)
+            ring_assign=self.cfg.ring_assign, scales=scales)
         self._pend_slots, self._pend_weights, self._pend_payloads = [], [], []
+        self._pend_q8, self._pend_scales = [], []
         total, counts, new_global, new_flats = ec.dispatch_round(
             self.cfg, sched, self.agg.total, self.agg.counts, prev_global,
             client_flats=client_flats, down_mask=down_mask,
@@ -367,7 +396,8 @@ class ServerEngine:
 
 def make_uplink_stream(rng: np.random.Generator, client_pk: jnp.ndarray,
                        *, loss_rate: float = 0.0, dup_rate: float = 0.0,
-                       shuffle: bool = True
+                       shuffle: bool = True,
+                       scales: Optional[jnp.ndarray] = None
                        ) -> Tuple[list, jnp.ndarray]:
     """Build one round's interleaved uplink from packetized client state.
 
@@ -376,6 +406,14 @@ def make_uplink_stream(rng: np.random.Generator, client_pk: jnp.ndarray,
     ``dup_rate``; delivery order is shuffled across clients and packets
     (UDP reordering).  START frames precede all data, END frames follow
     (the FSM only accepts DATA between them).
+
+    With ``scales`` (K, N) the stream is the compressed uplink
+    (DESIGN.md §9): client_pk then carries the int8 wire payloads (from
+    ``packets.packetize_q8`` / ``QuantClientState.encode``) and each
+    DATA packet is stamped ``wire_dtype='q8'`` with its per-packet
+    dequant scale in the header.  Loss/dup/reorder draws consume the
+    identical rng sequence either way, so an f32 and a q8 stream built
+    from the same generator state see the same wire fate per packet.
 
     Returns (events, up_mask): events is a list of ``(Packet, payload)``
     pairs consumable by :meth:`ServerEngine.rx`; up_mask (K, N) marks
@@ -402,8 +440,14 @@ def make_uplink_stream(rng: np.random.Generator, client_pk: jnp.ndarray,
         perm = rng.permutation(cl.size)
         cl, sl = cl[perm], sl[perm]
     events = [(Packet(Kind.START, c), None) for c in range(K)]
-    events += [(Packet(Kind.DATA, int(c), int(s)), pk_host[c, s])
-               for c, s in zip(cl.tolist(), sl.tolist())]
+    if scales is None:
+        events += [(Packet(Kind.DATA, int(c), int(s)), pk_host[c, s])
+                   for c, s in zip(cl.tolist(), sl.tolist())]
+    else:
+        sc_host = np.asarray(scales, np.float32)
+        events += [(Packet(Kind.DATA, int(c), int(s), wire_dtype="q8",
+                           scale=float(sc_host[c, s])), pk_host[c, s])
+                   for c, s in zip(cl.tolist(), sl.tolist())]
     events += [(Packet(Kind.END, c), None) for c in range(K)]
     return events, jnp.asarray(keep.astype(np.float32))
 

@@ -98,13 +98,17 @@ def packet_scatter_pallas(packets: jnp.ndarray, idx: jnp.ndarray,
     )(idx.astype(jnp.int32), packets, init.astype(packets.dtype))
 
 
-def _scatter_accum_kernel(idx_ref, w_ref, pkt_ref, acc_in_ref, cnt_in_ref,
-                          acc_ref, cnt_ref, *, exact: bool):
-    """idx/w (1, BN); pkt (BN, W); acc blocks (BS, W); cnt blocks (BS, 1).
+def _scatter_accum_body(idx_ref, w_ref, pkt, acc_in_ref, cnt_in_ref,
+                        acc_ref, cnt_ref, *, exact: bool):
+    """Shared grid-step body: route an f32 packet block into the live
+    accumulator.  ``pkt`` (BN, W) f32 is already wire-decoded — the f32
+    kernel passes the payload block through, the q8 kernel dequantizes
+    rows first — so both wire formats share one accumulate dataflow.
 
-    The acc/cnt output blocks are revisited across the (innermost)
-    packet-block dimension: copied from the live accumulator at the first
-    packet block, then updated in VMEM for the rest of the sweep.
+    idx/w (1, BN); acc blocks (BS, W); cnt blocks (BS, 1).  The acc/cnt
+    output blocks are revisited across the (innermost) packet-block
+    dimension: copied from the live accumulator at the first packet
+    block, then updated in VMEM for the rest of the sweep.
     """
     j = pl.program_id(1)
 
@@ -122,7 +126,6 @@ def _scatter_accum_kernel(idx_ref, w_ref, pkt_ref, acc_in_ref, cnt_in_ref,
     # the divisor sees every arrival, in both modes (§3.2.2 count rule)
     cnt_ref[...] += jnp.sum(whot, axis=1, keepdims=True)
 
-    pkt = pkt_ref[...].astype(jnp.float32)
     if exact:
         acc_ref[...] += jnp.dot(whot, pkt,
                                 preferred_element_type=jnp.float32)
@@ -140,6 +143,31 @@ def _scatter_accum_kernel(idx_ref, w_ref, pkt_ref, acc_in_ref, cnt_in_ref,
                           preferred_element_type=jnp.float32)
         acc_ref[...] = jnp.where(lastcol > 0, acc_in_ref[...] + contrib,
                                  acc_ref[...])
+
+
+def _scatter_accum_kernel(idx_ref, w_ref, pkt_ref, acc_in_ref, cnt_in_ref,
+                          acc_ref, cnt_ref, *, exact: bool):
+    """f32 wire format: the payload block is the packet block."""
+    _scatter_accum_body(idx_ref, w_ref, pkt_ref[...].astype(jnp.float32),
+                        acc_in_ref, cnt_in_ref, acc_ref, cnt_ref,
+                        exact=exact)
+
+
+def _scatter_accum_q8_kernel(idx_ref, w_ref, s_ref, pkt_ref, acc_in_ref,
+                             cnt_in_ref, acc_ref, cnt_ref, *, exact: bool):
+    """q8 wire format: fused dequantize-then-accumulate.
+
+    ``s_ref`` (BN, 1) carries the per-packet symmetric scales; rows are
+    dequantized (``q * scale``, the ``quantized_accum.py`` pattern) and
+    THEN routed through the shared matmul body.  Dequantizing rows first
+    — rather than folding the scale into the one-hot weights — keeps the
+    result bitwise equal to dequantizing on the host and running the f32
+    kernel, because the per-element IEEE ops are identical (f32 multiply
+    is not associative across the dot contraction).
+    """
+    pkt = pkt_ref[...].astype(jnp.float32) * s_ref[...]
+    _scatter_accum_body(idx_ref, w_ref, pkt, acc_in_ref, cnt_in_ref,
+                        acc_ref, cnt_ref, exact=exact)
 
 
 def packet_scatter_accum_pallas(packets: jnp.ndarray, idx: jnp.ndarray,
@@ -196,6 +224,59 @@ def packet_scatter_accum_pallas(packets: jnp.ndarray, idx: jnp.ndarray,
       counts.astype(jnp.float32))
 
 
+def packet_scatter_accum_q8_pallas(packets: jnp.ndarray,
+                                   scales: jnp.ndarray, idx: jnp.ndarray,
+                                   weights: jnp.ndarray, acc: jnp.ndarray,
+                                   counts: jnp.ndarray, *,
+                                   exact: bool = True,
+                                   block_slots: int = 8,
+                                   block_pkts: int = BLOCK_PKTS,
+                                   interpret: bool = False):
+    """q8 twin of ``packet_scatter_accum_pallas`` (DESIGN.md §9).
+
+    packets (N, W) **int8** wire payloads; scales (N,) f32 per-packet
+    symmetric dequant scales (0 for ring padding).  Dequantization is
+    fused into the accumulate grid step, so no f32 copy of the uplink
+    ever materializes outside VMEM.  Same contract and same numerics as
+    dequantizing host-side and calling the f32 kernel.
+    """
+    N, W = packets.shape
+    S = acc.shape[0]
+    assert N % block_pkts == 0, (N, block_pkts)
+    assert S % block_slots == 0, (S, block_slots)
+    n_pkt_blocks = N // block_pkts
+    idx2d = idx.astype(jnp.int32).reshape(n_pkt_blocks, block_pkts)
+    w2d = weights.astype(jnp.float32).reshape(n_pkt_blocks, block_pkts)
+    # scales ride as an (N, 1) column so the block lands as (BN, 1) and
+    # broadcasts against the (BN, W) payload with no in-kernel transpose
+    s2d = scales.astype(jnp.float32).reshape(N, 1)
+    grid = (S // block_slots, n_pkt_blocks)
+    kernel = functools.partial(_scatter_accum_q8_kernel, exact=exact)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_pkts), lambda s, j: (j, 0)),
+            pl.BlockSpec((1, block_pkts), lambda s, j: (j, 0)),
+            pl.BlockSpec((block_pkts, 1), lambda s, j: (j, 0)),
+            pl.BlockSpec((block_pkts, W), lambda s, j: (j, 0)),
+            pl.BlockSpec((block_slots, W), lambda s, j: (s, 0)),
+            pl.BlockSpec((block_slots, 1), lambda s, j: (s, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_slots, W), lambda s, j: (s, 0)),
+            pl.BlockSpec((block_slots, 1), lambda s, j: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, W), jnp.float32),
+            jax.ShapeDtypeStruct((S, 1), jnp.float32),
+        ],
+        input_output_aliases={4: 0, 5: 1},
+        interpret=interpret,
+    )(idx2d, w2d, s2d, packets.astype(jnp.int8), acc.astype(jnp.float32),
+      counts.astype(jnp.float32))
+
+
 def packet_scatter_accum_batch_jnp(packets: jnp.ndarray, idx: jnp.ndarray,
                                    weights: jnp.ndarray, acc: jnp.ndarray,
                                    counts: jnp.ndarray, *,
@@ -240,9 +321,26 @@ def packet_scatter_accum_batch_jnp(packets: jnp.ndarray, idx: jnp.ndarray,
     return acc, counts
 
 
+def packet_scatter_accum_batch_q8_jnp(packets: jnp.ndarray,
+                                      scales: jnp.ndarray,
+                                      idx: jnp.ndarray,
+                                      weights: jnp.ndarray,
+                                      acc: jnp.ndarray,
+                                      counts: jnp.ndarray, *,
+                                      exact: bool = True):
+    """jnp twin of one ``packet_scatter_accum_q8_pallas`` call:
+    elementwise dequantize (``q * scale``), then the shared f32 batch
+    dataflow — the same op order as the fused kernel, so the two are
+    bitwise equal for any block tiling."""
+    pkt = packets.astype(jnp.float32) * scales.astype(jnp.float32)[:, None]
+    return packet_scatter_accum_batch_jnp(pkt, idx, weights, acc, counts,
+                                          exact=exact)
+
+
 def packet_scatter_accum_scan(sched_idx: jnp.ndarray, sched_w: jnp.ndarray,
                               sched_pk: jnp.ndarray, acc: jnp.ndarray,
                               counts: jnp.ndarray, *,
+                              sched_scales: jnp.ndarray | None = None,
                               exact: bool = True,
                               use_pallas: bool = False,
                               block_slots: int = 8,
@@ -259,24 +357,44 @@ def packet_scatter_accum_scan(sched_idx: jnp.ndarray, sched_w: jnp.ndarray,
     the Pallas grid kernel (the production TPU body; S must then be a
     multiple of ``block_slots`` and B of ``block_pkts``) vs the jnp
     twin; both implement the same DESIGN.md §3 contract per batch.
+
+    When ``sched_scales`` (n_batches, B) is given, sched_pk carries the
+    int8 wire payloads and each batch dequantizes inside the scan body
+    (the q8 kernel / its jnp twin) — the f32 uplink never materializes
+    as a whole-round tensor (DESIGN.md §9).
     """
+    q8 = sched_scales is not None
     if use_pallas:
         def step(carry, batch):
             a, c = carry
-            bidx, bw, bpk = batch
-            a, c = packet_scatter_accum_pallas(
-                bpk, bidx, bw, a, c, exact=exact, block_slots=block_slots,
-                block_pkts=block_pkts, interpret=interpret)
+            if q8:
+                bidx, bw, bsc, bpk = batch
+                a, c = packet_scatter_accum_q8_pallas(
+                    bpk, bsc, bidx, bw, a, c, exact=exact,
+                    block_slots=block_slots, block_pkts=block_pkts,
+                    interpret=interpret)
+            else:
+                bidx, bw, bpk = batch
+                a, c = packet_scatter_accum_pallas(
+                    bpk, bidx, bw, a, c, exact=exact,
+                    block_slots=block_slots,
+                    block_pkts=block_pkts, interpret=interpret)
             return (a, c), None
     else:
         def step(carry, batch):
             a, c = carry
-            bidx, bw, bpk = batch
-            a, c = packet_scatter_accum_batch_jnp(bpk, bidx, bw, a, c,
-                                                  exact=exact)
+            if q8:
+                bidx, bw, bsc, bpk = batch
+                a, c = packet_scatter_accum_batch_q8_jnp(
+                    bpk, bsc, bidx, bw, a, c, exact=exact)
+            else:
+                bidx, bw, bpk = batch
+                a, c = packet_scatter_accum_batch_jnp(bpk, bidx, bw, a, c,
+                                                      exact=exact)
             return (a, c), None
-    (acc, counts), _ = jax.lax.scan(step, (acc, counts),
-                                    (sched_idx, sched_w, sched_pk))
+    xs = ((sched_idx, sched_w, sched_scales, sched_pk) if q8
+          else (sched_idx, sched_w, sched_pk))
+    (acc, counts), _ = jax.lax.scan(step, (acc, counts), xs)
     return acc, counts
 
 
@@ -301,6 +419,7 @@ def packet_scatter_accum_sharded(sched_idx: jnp.ndarray,
                                  sched_w: jnp.ndarray,
                                  sched_pk: jnp.ndarray, acc: jnp.ndarray,
                                  counts: jnp.ndarray, *,
+                                 sched_scales: jnp.ndarray | None = None,
                                  mesh=None, axis_name: str = "worker",
                                  exact: bool = True,
                                  use_pallas: bool = False,
@@ -334,19 +453,38 @@ def packet_scatter_accum_sharded(sched_idx: jnp.ndarray,
         block_slots=block_slots, block_pkts=block_pkts, interpret=interpret)
     zero_acc = jnp.zeros_like(acc)
     zero_cnt = jnp.zeros_like(counts)
+    q8 = sched_scales is not None
     if mesh is not None:
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
-        def shard_fn(bidx, bw, bpk):
-            # leading shard axis is size 1 on each device
-            a, c = body(bidx[0], bw[0], bpk[0], zero_acc, zero_cnt)
-            return combine_partials(a, c, axis_name=axis_name)
-
         spec = P(axis_name)
-        a, c = shard_map(
-            shard_fn, mesh=mesh, in_specs=(spec, spec, spec),
-            out_specs=(P(), P()))(sched_idx, sched_w, sched_pk)
+        if q8:
+            def shard_fn(bidx, bw, bsc, bpk):
+                # leading shard axis is size 1 on each device
+                a, c = body(bidx[0], bw[0], bpk[0], zero_acc, zero_cnt,
+                            sched_scales=bsc[0])
+                return combine_partials(a, c, axis_name=axis_name)
+
+            a, c = shard_map(
+                shard_fn, mesh=mesh, in_specs=(spec, spec, spec, spec),
+                out_specs=(P(), P()))(sched_idx, sched_w, sched_scales,
+                                      sched_pk)
+        else:
+            def shard_fn(bidx, bw, bpk):
+                # leading shard axis is size 1 on each device
+                a, c = body(bidx[0], bw[0], bpk[0], zero_acc, zero_cnt)
+                return combine_partials(a, c, axis_name=axis_name)
+
+            a, c = shard_map(
+                shard_fn, mesh=mesh, in_specs=(spec, spec, spec),
+                out_specs=(P(), P()))(sched_idx, sched_w, sched_pk)
+    elif q8:
+        a_parts, c_parts = jax.vmap(
+            lambda bidx, bw, bsc, bpk: body(bidx, bw, bpk, zero_acc,
+                                            zero_cnt, sched_scales=bsc)
+        )(sched_idx, sched_w, sched_scales, sched_pk)
+        a, c = combine_partials(a_parts, c_parts)
     else:
         a_parts, c_parts = jax.vmap(
             lambda bidx, bw, bpk: body(bidx, bw, bpk, zero_acc, zero_cnt)

@@ -5,21 +5,31 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def fedavg_accum_ref(packets: jnp.ndarray, wmask: jnp.ndarray):
-    """packets (K, C, W); wmask (K, C) -> (avg (C, W) f32, counts (C, 1))."""
+def fedavg_accum_ref(packets: jnp.ndarray, wmask: jnp.ndarray,
+                     finalize: bool = True):
+    """packets (K, C, W); wmask (K, C) -> (avg (C, W) f32, counts (C, 1)).
+
+    ``finalize=False`` returns the raw weighted sums instead of the
+    count-normalized average — the shard-partial form, mirroring
+    ``ops.fedavg_accum`` so partial folds have an oracle too.
+    """
     x = packets.astype(jnp.float32)
     m = wmask.astype(jnp.float32)
     total = jnp.einsum("kcw,kc->cw", x, m)
     counts = jnp.sum(m, axis=0)
+    if not finalize:
+        return total, counts[:, None]
     avg = total / jnp.maximum(counts, 1e-12)[:, None]
     avg = jnp.where(counts[:, None] > 0, avg, 0.0)
     return avg, counts[:, None]
 
 
 def quantized_accum_ref(q: jnp.ndarray, scales: jnp.ndarray,
-                        wmask: jnp.ndarray):
+                        wmask: jnp.ndarray, finalize: bool = True):
+    """Dequantize-then-accumulate oracle; ``finalize=False`` matches the
+    kernel's raw-sum (shard-partial) mode."""
     deq = q.astype(jnp.float32) * scales.astype(jnp.float32)[..., None]
-    return fedavg_accum_ref(deq, wmask)
+    return fedavg_accum_ref(deq, wmask, finalize=finalize)
 
 
 def packet_scatter_ref(packets: jnp.ndarray, idx: jnp.ndarray, n_slots: int,

@@ -249,7 +249,7 @@ def test_round_dispatch_donates_accumulators():
         total := jnp.zeros((cfg.n_slots, 32), jnp.float32),
         jnp.zeros((cfg.n_slots,), jnp.float32),
         jnp.asarray(sched.idx), jnp.asarray(sched.weights),
-        jnp.asarray(sched.payloads), prev, None, None,
+        jnp.asarray(sched.payloads), None, prev, None, None,
         mode="exact", payload=32, n_params=128, use_pallas=False,
         block_slots=8, block_pkts=128, mix_alpha=0.0, interpret=True,
         shards=1, mesh=None)

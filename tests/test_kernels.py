@@ -124,6 +124,57 @@ def test_fedavg_accum_unfinalized_returns_raw_sums():
                                   np.asarray(jnp.sum(m, axis=0)))
 
 
+def test_quantized_accum_unfinalized_matches_ref():
+    """int8 raw-sum (shard-partial) mode vs the dequantize-then-sum
+    oracle.  Tolerance is the blocked-summation-order idiom used by the
+    finalized parity tests above."""
+    rng = np.random.default_rng(21)
+    q = jnp.asarray(rng.integers(-127, 128, (13, 6, 128)).astype(np.int8))
+    s = jnp.asarray(rng.random((13, 6)).astype(np.float32) * 0.02)
+    m = jnp.asarray((rng.random((13, 6)) > 0.2).astype(np.float32))
+    sums, cnts = ops.quantized_accum(q, s, m, finalize=False)
+    rsums, rcnts = ref.quantized_accum_ref(q, s, m, finalize=False)
+    np.testing.assert_allclose(sums, rsums, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(cnts), np.asarray(rcnts[:, 0]))
+    # and counts are finalize-invariant
+    _, cnts_f = ops.quantized_accum(q, s, m, finalize=True)
+    np.testing.assert_array_equal(np.asarray(cnts), np.asarray(cnts_f))
+
+
+def test_accum_ref_finalize_is_divide_of_raw_sums():
+    """The two oracle modes relate by exactly the END divide."""
+    rng = np.random.default_rng(23)
+    pk = jnp.asarray(rng.normal(size=(9, 5, 128)).astype(np.float32))
+    m = jnp.asarray((rng.random((9, 5)) > 0.5).astype(np.float32))
+    m = m.at[:, 0].set(0.0)                     # one packet nobody sent
+    total, cnts = ref.fedavg_accum_ref(pk, m, finalize=False)
+    avg, cnts2 = ref.fedavg_accum_ref(pk, m, finalize=True)
+    np.testing.assert_array_equal(np.asarray(cnts), np.asarray(cnts2))
+    expect = jnp.where(cnts > 0, total / jnp.maximum(cnts, 1e-12), 0.0)
+    np.testing.assert_array_equal(np.asarray(avg), np.asarray(expect))
+
+
+def test_quantized_accum_shard_partials_fold_to_full():
+    """DESIGN.md §7 x §9: per-shard int8 raw sums folded host-side then
+    divided equal the single-shot finalized kernel result."""
+    rng = np.random.default_rng(29)
+    K, C, W, shards = 16, 6, 128, 4
+    q = jnp.asarray(rng.integers(-127, 128, (K, C, W)).astype(np.int8))
+    s = jnp.asarray(rng.random((K, C)).astype(np.float32) * 0.02)
+    m = jnp.asarray((rng.random((K, C)) > 0.2).astype(np.float32))
+    total = jnp.zeros((C, W), jnp.float32)
+    cnts = jnp.zeros((C,), jnp.float32)
+    for i in range(shards):                     # client-sharded partials
+        sl = slice(i * K // shards, (i + 1) * K // shards)
+        t, c = ops.quantized_accum(q[sl], s[sl], m[sl], finalize=False)
+        total, cnts = total + t, cnts + c
+    folded = jnp.where((cnts > 0)[:, None],
+                       total / jnp.maximum(cnts, 1e-12)[:, None], 0.0)
+    full, cnts_full = ops.quantized_accum(q, s, m, finalize=True)
+    np.testing.assert_array_equal(np.asarray(cnts), np.asarray(cnts_full))
+    np.testing.assert_allclose(folded, full, rtol=1e-5, atol=1e-6)
+
+
 def test_padded_chunks_carry_zero_mask():
     """C=7 pads to 8: the padded chunk must not leak into counts."""
     rng = np.random.default_rng(3)

@@ -6,9 +6,14 @@ Compares the compiled-engine rows of freshly produced benchmark JSON
 at the repo root, written by the CI benchmark smokes) against the
 committed baselines under
 ``benchmarks/baselines/`` and **fails the job when any matched row's
-``pkts_per_s`` drops by more than the threshold** (default 25%) — the
+``pkts_per_s`` — or, where both sides report it, achieved
+``wire_mb_s`` — drops by more than the threshold** (default 25%) — the
 compiled round engine is the repo's hot path, and this is the tripwire
-that keeps PRs from quietly regressing it.
+that keeps PRs from quietly regressing it.  The ``compiled_q8`` rows
+(the compressed int8 uplink, EXPERIMENTS.md §Compressed-uplink) match
+on ``engine`` like any other compiled row, so the quantized wire path
+is gated on both throughput axes the moment its rows land in a
+baseline.
 
 Matching is strict: rows pair up only when every config key — k, mode,
 engine, shards, n_params, payload, ring_capacity — is identical, so a
@@ -64,11 +69,17 @@ def _row_key(row: dict):
     return tuple(row.get(f) for f in KEY_FIELDS)
 
 
+# per-row metrics gated when present on BOTH sides (pkts_per_s always
+# is; wire_mb_s appears once a baseline carries the wire columns)
+GATED_METRICS = ("pkts_per_s", "wire_mb_s")
+
+
 def _compiled_rows(path: str):
-    """(quick-flag, {key: pkts_per_s}) for the gated compiled rows."""
+    """(quick-flag, {key: {metric: value}}) for the gated compiled rows."""
     with open(path) as f:
         bench = json.load(f)
-    rows = {_row_key(r): r["pkts_per_s"] for r in bench["rows"]
+    rows = {_row_key(r): {m: r[m] for m in GATED_METRICS if m in r}
+            for r in bench["rows"]
             if str(r.get("engine", "")).startswith("compiled")}
     return bool(bench.get("quick")), rows
 
@@ -113,13 +124,16 @@ def gate(files, threshold: float, baseline_dir: str = BASELINE_DIR) -> int:
             print(f"bench_gate: note {name}: new row {_fmt_key(key)} has "
                   f"no baseline — skipped (refresh with --update-baseline)")
         for key in matched:
-            ratio = fresh[key] / base[key]
-            verdict = "FAIL" if ratio < 1.0 - threshold else "ok"
-            print(f"bench_gate: {verdict:4s} {name} {_fmt_key(key)}: "
-                  f"{base[key]:,.0f} -> {fresh[key]:,.0f} pkts/s "
-                  f"({ratio:.2f}x)")
-            if ratio < 1.0 - threshold:
-                failures += 1
+            for metric in GATED_METRICS:
+                if metric not in fresh[key] or metric not in base[key]:
+                    continue          # older baselines lack wire columns
+                ratio = fresh[key][metric] / base[key][metric]
+                verdict = "FAIL" if ratio < 1.0 - threshold else "ok"
+                print(f"bench_gate: {verdict:4s} {name} {_fmt_key(key)}: "
+                      f"{base[key][metric]:,.0f} -> "
+                      f"{fresh[key][metric]:,.0f} {metric} ({ratio:.2f}x)")
+                if ratio < 1.0 - threshold:
+                    failures += 1
         if not matched:
             print(f"bench_gate: FAIL {name}: no comparable compiled rows "
                   f"between fresh and baseline")
