@@ -26,6 +26,14 @@ uplink budget, not the server, is the bottleneck, the q8 rows' measured
 ``speedup_at_wire_budget`` is the ~2.4x admission-rate win of the
 smaller wire format (EXPERIMENTS.md §Compressed-uplink).
 
+``compiled_async`` rows run the async buffered engine (DESIGN.md §10):
+several waves' worth of complete sessions stream through ONE
+``buffer_size=K`` demux call, so every wave emits once and the whole
+multi-wave fold is a single donated device dispatch.  Like the shard
+rows, the timed stage is the device dispatch (the host demux is pure
+host code a double-buffered driver overlaps; it is reported separately
+as ``demux_s``).
+
 Each run overwrites ``BENCH_engine.json`` (committed — its git history
 is the perf trajectory across PRs; schema in EXPERIMENTS.md
 §Engine-throughput).
@@ -140,6 +148,60 @@ def _measure_q8_round(mode: str, n_clients: int, n_params: int,
     return {"response_time": dt, **stats}
 
 
+def _measure_async(mode: str, n_clients: int, n_params: int,
+                   waves: int = OVERLAP_ROUNDS, iters: int = 3):
+    """Async buffered engine (DESIGN.md §10): ``waves`` rounds' worth of
+    complete sessions stream through ONE ``buffer_size=K`` demux call —
+    every wave emits once, and the whole multi-wave fold is a single
+    donated device dispatch (a ``lax.scan`` over emit windows).
+
+    As in ``shard_rows``, the timed stage is the device dispatch
+    (``scan_s``); the host demux is reported separately (``demux_s``) —
+    it is pure host code with no device dependency, so a double-buffered
+    driver hides wave t+1's demux under wave t's scan exactly like the
+    sync ``compiled_overlap`` rows.  Both are returned; the row's
+    ``pkts_per_s`` is the dispatch rate, ``round_s`` the unoverlapped
+    per-wave total."""
+    from repro.core import engine_compiled as ec
+    from repro.core.packets import packetize
+    from repro.core.server import EngineConfig
+
+    rng = np.random.default_rng(0)
+    flats = jnp.asarray(rng.normal(size=(n_clients, n_params))
+                        .astype(np.float32))
+    prev = jnp.zeros((n_params,), jnp.float32)
+    pk = jax.vmap(lambda f: packetize(f, PAYLOAD))(flats)
+    from repro.core.server import make_uplink_stream
+    events = []
+    for t in range(waves):
+        ev, _ = make_uplink_stream(np.random.default_rng(t), pk,
+                                   loss_rate=LOSS_RATE, dup_rate=DUP_RATE)
+        events += ev
+    cfg = EngineConfig(n_clients=n_clients, n_params=n_params,
+                       payload=PAYLOAD, ring_capacity=RING_CAPACITY,
+                       mode=mode, compile=True, buffer_size=n_clients)
+    t0 = time.perf_counter()
+    asched, st, _ = ec.demux_events_async(cfg, events)
+    demux_s = (time.perf_counter() - t0) / waves
+    assert asched.n_emits == waves
+
+    def one():
+        total = jnp.zeros((cfg.n_slots, PAYLOAD), jnp.float32)
+        counts = jnp.zeros((cfg.n_slots,), jnp.float32)
+        t0 = time.perf_counter()
+        _, _, g, _, _ = ec.dispatch_async(cfg, asched, total, counts, prev)
+        g.block_until_ready()
+        return (time.perf_counter() - t0) / waves
+
+    one()                                             # warmup: jit trace
+    scan_s = min(one() for _ in range(iters))
+    return {"response_time": scan_s,
+            "packets": float(st.data_enqueued) / waves,
+            "demux_s": demux_s, "scan_s": scan_s,
+            "round_s": demux_s + scan_s,
+            "buffer_size": n_clients, "waves": waves}
+
+
 def _measure_overlap(mode: str, n_clients: int, n_params: int,
                      rounds: int = OVERLAP_ROUNDS):
     """Amortized per-round time of the double-buffered driver."""
@@ -190,6 +252,10 @@ def rows(ks=CLIENT_SWEEP, quick: bool = False):
             if not quick:
                 variants.append(
                     ("compiled_overlap", _measure_overlap(mode, k, n_params)))
+            variants.append(
+                ("compiled_async",
+                 _measure_async(mode, k, n_params,
+                                waves=2 if quick else OVERLAP_ROUNDS)))
             comp_row = None
             for engine, m in variants:
                 t = m["response_time"]
@@ -203,6 +269,12 @@ def rows(ks=CLIENT_SWEEP, quick: bool = False):
                     "interpret": jax.default_backend() != "tpu",
                 }
                 _wire_cols(row, "q8" if engine == "compiled_q8" else "f32")
+                if engine == "compiled_async":
+                    # buffer_size=K: one emit per wave; pkts_per_s is
+                    # the dispatch rate, round_s the unoverlapped total
+                    for key in ("demux_s", "scan_s", "round_s",
+                                "buffer_size", "waves"):
+                        row[key] = m[key]
                 if engine != "eager":
                     row["speedup_vs_eager"] = (eager["response_time"] / t)
                 if engine == "compiled":

@@ -14,6 +14,14 @@ families land in ``BENCH_rounds.json``:
   ``straggle_rate`` records which applied).  The derived signal is the
   accuracy drop vs the full barrier round — what the deadline close
   *costs* when rounds average fewer (and truncated) clients.
+- ``kind="async_accuracy"``: the async-staleness sweep (EXPERIMENTS.md
+  §Async-staleness): the same reduced CNN driven through the *async
+  buffered* engine (``run_async_rounds``, DESIGN.md §10) with a set of
+  slow clients that never refresh their download, so their updates age
+  by one version per emit.  Three variants — all-fresh baseline,
+  unweighted (``const``) staleness damage, and ``poly``
+  staleness-weighted — with ``stale_recovered`` measuring how much of
+  the const drop the weighting wins back (acceptance: ≥ 0.5).
 - ``kind="throughput"``: the churn driver itself (overlapped
   ``run_compiled_rounds`` path: per-round stream generation + demux +
   one compiled dispatch per round) in pkts/s.  The row carries the
@@ -52,13 +60,12 @@ TP_K, TP_PARAMS_FULL, TP_PARAMS_QUICK = 64, 16384, 4096
 TP_PAYLOAD, TP_RING, TP_ROUNDS = 64, 64, 4
 
 
-def accuracy_rows(rounds: int = ACC_ROUNDS, seed: int = 0):
-    """Reduced-CNN FedAvg through deadline-closed churn rounds."""
+def _cnn_problem(seed: int, rounds: int, noise: float = 0.35):
+    """Reduced paper CNN + synthetic federated data + the vmapped
+    local-update step both accuracy families train with."""
     from repro.configs.paper_cnn import CNNConfig
     from repro.core.fedavg import FedAvgConfig, ModelFns, _local_update
     from repro.core.packets import flatten_pytree, unflatten_pytree
-    from repro.core.rounds import ChurnConfig, run_churn_rounds
-    from repro.core.server import EngineConfig
     from repro.data.federated import partition_iid
     from repro.data.synthetic import synthetic_image_classification
     from repro.models.cnn import cnn_accuracy, cnn_loss, init_cnn
@@ -66,8 +73,10 @@ def accuracy_rows(rounds: int = ACC_ROUNDS, seed: int = 0):
     cnn = CNNConfig(image_size=8, conv_channels=(8, 16, 16, 16),
                     fc_hidden=32)
     data_rng = np.random.default_rng(seed)
-    train = synthetic_image_classification(data_rng, 640, image_size=8)
-    test = synthetic_image_classification(data_rng, 256, image_size=8)
+    train = synthetic_image_classification(data_rng, 640, image_size=8,
+                                           noise=noise)
+    test = synthetic_image_classification(data_rng, 256, image_size=8,
+                                          noise=noise)
     clients = partition_iid(train, 10, seed=seed)
     fns = ModelFns(
         init=lambda r: init_cnn(r, cnn),
@@ -81,7 +90,7 @@ def accuracy_rows(rounds: int = ACC_ROUNDS, seed: int = 0):
     rng = jax.random.PRNGKey(seed)
     rng, init_rng = jax.random.split(rng)
     flat0, handle = flatten_pytree(fns.init(init_rng))
-    P, K = flat0.shape[0], fcfg.n_clients
+    K = fcfg.n_clients
     local_update = _local_update(fns, fcfg)
 
     @jax.jit
@@ -93,6 +102,20 @@ def accuracy_rows(rounds: int = ACC_ROUNDS, seed: int = 0):
         return jax.vmap(one)(flats, clients,
                              jax.random.split(jax.random.fold_in(rng, r), K))
 
+    def test_acc(flat):
+        m = fns.test_metrics(unflatten_pytree(flat, handle), test)
+        return float(m["test_acc"]), float(m["test_loss"])
+
+    return flat0, train_all, test_acc, K
+
+
+def accuracy_rows(rounds: int = ACC_ROUNDS, seed: int = 0):
+    """Reduced-CNN FedAvg through deadline-closed churn rounds."""
+    from repro.core.rounds import ChurnConfig, run_churn_rounds
+    from repro.core.server import EngineConfig
+
+    flat0, train_all, test_acc, K = _cnn_problem(seed, rounds)
+    P = flat0.shape[0]
     ecfg = EngineConfig(n_clients=K, n_params=P, payload=64,
                         ring_capacity=2, compile=True)
     # acc_drop_vs_full needs the clean baseline measured first
@@ -109,15 +132,13 @@ def accuracy_rows(rounds: int = ACC_ROUNDS, seed: int = 0):
             ecfg, churn, jnp.tile(flat0[None], (K, 1)), flat0, rounds,
             rng=np.random.default_rng(seed + 1),
             train_fn=lambda flats, r: train_all(flats, r))
-        metrics = fns.test_metrics(
-            unflatten_pytree(hist.final_global, handle), test)
-        acc = float(metrics["test_acc"])
+        acc, loss = test_acc(hist.final_global)
         base_acc = acc if participation == 1.0 else base_acc
         row = {
             "kind": "accuracy", "participation": participation,
             "straggle_rate": churn.straggle_rate, "rounds": rounds,
             "final_acc": acc,
-            "final_loss": float(metrics["test_loss"]),
+            "final_loss": loss,
             "acc_drop_vs_full": (None if base_acc is None
                                  else base_acc - acc),
             # true mid-upload stragglers (from the driver's logs); the
@@ -138,6 +159,95 @@ def accuracy_rows(rounds: int = ACC_ROUNDS, seed: int = 0):
         print(f"participation={participation:.1f} acc={acc:.3f} "
               f"drop_vs_full={drop} "
               f"stragglers={row['stragglers_total']}")
+    return out
+
+
+# --- async-staleness sweep (EXPERIMENTS.md §Async-staleness) --------------
+ASYNC_WAVES = 12            # uplink waves through the buffered engine
+ASYNC_B = 3                 # buffer_size: emit every 3 folded updates
+ASYNC_SLOW = 4              # clients that never refresh their download
+ASYNC_NOISE = 0.5           # harder task than the sync family: accuracy
+                            # must sit mid-range for staleness to show
+ASYNC_ALPHA = 2.0           # poly decay (1+s)^-alpha
+ASYNC_TAIL = 6              # emitted globals averaged for evaluation
+
+
+def async_accuracy_rows(seed: int = 0):
+    """Accuracy vs staleness through the async buffered engine
+    (DESIGN.md §10): three ``kind="async_accuracy"`` rows.
+
+    ``variant="fresh"`` is the baseline (every finisher refreshes its
+    download each wave).  ``variant="const"`` makes ``ASYNC_SLOW``
+    clients never refresh — they keep training from the initial global,
+    so their updates age by one version per emit — with unit weights:
+    the unmitigated staleness damage.  ``variant="poly"`` runs the same
+    slow clients under ``(1+s)^-ASYNC_ALPHA`` staleness weighting; the
+    acceptance signal is ``stale_recovered`` ≥ 0.5 (the weighting wins
+    back at least half the const drop).
+
+    Evaluation is a Polyak-style tail average of the last
+    ``ASYNC_TAIL`` emitted globals: each emit *replaces* the covered
+    slots with its own window average (the accumulator resets,
+    DESIGN.md §10), so any single emitted global is a B-update sample —
+    too noisy to compare variants on.  ``final_acc`` (the last global
+    alone) is reported for reference.
+    """
+    from repro.core.rounds import ChurnConfig, run_async_rounds
+    from repro.core.server import EngineConfig
+
+    flat0, train_all, test_acc, K = _cnn_problem(seed, ASYNC_WAVES,
+                                                 noise=ASYNC_NOISE)
+    P = flat0.shape[0]
+    churn = ChurnConfig(participation=0.8, straggle_rate=0.1,
+                        loss_rate=LOSS_RATE, dup_rate=DUP_RATE)
+    slow = np.zeros(K, bool)
+    slow[:ASYNC_SLOW] = True
+    variants = (("fresh", "const", np.zeros(K, bool)),
+                ("const", "const", slow),
+                ("poly", "poly", slow))
+    out, accs = [], {}
+    for variant, mode, slow_mask in variants:
+        ecfg = EngineConfig(n_clients=K, n_params=P, payload=64,
+                            ring_capacity=2, compile=True,
+                            buffer_size=ASYNC_B, staleness_mode=mode,
+                            staleness_alpha=ASYNC_ALPHA)
+        hist = run_async_rounds(
+            ecfg, churn, jnp.tile(flat0[None], (K, 1)), flat0,
+            ASYNC_WAVES, rng=np.random.default_rng(seed + 1),
+            train_fn=lambda flats, t: train_all(flats, t),
+            slow_clients=slow_mask)
+        gs = hist.emitted_globals
+        tail = gs[-ASYNC_TAIL:] if gs.shape[0] >= ASYNC_TAIL else gs
+        acc, loss = test_acc(jnp.mean(tail, axis=0))
+        final_acc, _ = test_acc(hist.final_global)
+        accs[variant] = acc
+        stal = [u.staleness for r in hist.results for u in r.updates]
+        row = {
+            "kind": "async_accuracy", "variant": variant,
+            "staleness_mode": mode,
+            "staleness_alpha": ASYNC_ALPHA if mode == "poly" else None,
+            "buffer_size": ASYNC_B, "waves": ASYNC_WAVES,
+            "slow_clients": int(slow_mask.sum()),
+            "participation": churn.participation,
+            "straggle_rate": churn.straggle_rate,
+            "tail_globals": int(tail.shape[0]),
+            "acc": acc, "loss": loss, "final_acc": final_acc,
+            "emits": int(hist.state.version),
+            "max_staleness": max(stal, default=0),
+            "updates_total": len(stal),
+        }
+        if variant != "fresh":
+            drop = accs["fresh"] - accs["const"]
+            row["acc_drop_vs_fresh"] = accs["fresh"] - acc
+            if variant == "poly":
+                row["stale_recovered"] = ((acc - accs["const"])
+                                          / drop if drop > 0 else None)
+        out.append(row)
+        extra = ""
+        if variant == "poly" and row.get("stale_recovered") is not None:
+            extra = f" recovered={row['stale_recovered']:.2f}"
+        print(f"async {variant:5s}: acc={acc:.3f} (final={final_acc:.3f}) "
+              f"max_staleness={row['max_staleness']}{extra}")
     return out
 
 
@@ -192,7 +302,7 @@ def main():
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    rows = [] if args.quick else accuracy_rows()
+    rows = [] if args.quick else accuracy_rows() + async_accuracy_rows()
     rows.append(throughput_row(quick=args.quick))
     result = {
         "bench": "participation_rounds",

@@ -85,6 +85,14 @@ def main() -> None:
                             f"final_acc={r['final_acc']:.3f}"
                             f";acc_drop_vs_full={drop}"
                             f";stragglers={r['stragglers_total']}"))
+            elif r.get("kind") == "async_accuracy":
+                extra = (f";stale_recovered={r['stale_recovered']:.2f}"
+                         if r.get("stale_recovered") is not None else "")
+                out.append((f"rounds_async_{r['variant']}",
+                            0.0,
+                            f"acc={r['acc']:.3f}"
+                            f";max_staleness={r['max_staleness']}"
+                            f"{extra}"))
             else:
                 out.append((f"rounds_churn_driver_K{r['k']}",
                             r["round_s"] * 1e6,

@@ -37,8 +37,15 @@ payload bytes on the wire, the dequantize fused into the compiled
 drain scan — and verifies the q8 round is *bitwise identical* to
 decoding the wire bytes on the host and running the f32 engine.
 
+``--async [B]`` kills the round barrier entirely (DESIGN.md §10):
+client sessions interleave freely across waves, the server folds each
+update at its END and emits a new staleness-weighted global every B
+accepted updates — and the demo verifies the compiled one-scan fold is
+*bitwise identical* to the eager per-packet fold at every emitted
+global (composable with ``--shards``).
+
 Run:  PYTHONPATH=src python examples/packet_server.py [--compile]
-                [--shards N] [--deadline [N]] [--churn] [--int8]
+        [--shards N] [--deadline [N]] [--churn] [--int8] [--async [B]]
 """
 import argparse
 
@@ -165,6 +172,61 @@ def int8_demo(args):
         assert same, "q8 round diverged from its host-decoded twin"
 
 
+def async_demo(args):
+    """Async buffered mode (DESIGN.md §10): no round barrier — sessions
+    interleave across waves, the server emits a new global every B
+    folded updates, stale updates are down-weighted, and the compiled
+    scan fold is bitwise the eager per-packet fold."""
+    from repro.core.rounds import make_async_stream
+    from repro.core.server import run_async_engine
+    K, P, W = 10, 4096, 64
+    B = args.async_b
+    rng = np.random.default_rng(0)
+    events = []
+    for t in range(3):
+        flats = jnp.asarray(rng.integers(-8, 9, (K, P))
+                            .astype(np.float32))
+        pk = jax.vmap(lambda f: packetize(f, W))(flats)
+        sel = rng.random(K) < 0.8          # participation churn
+        open_ = rng.random(K) < 0.15       # sessions left in flight
+        ver = rng.integers(0, 3, K)        # version-at-send tags
+        ev, _ = make_async_stream(rng, pk, sel, ver, open_sessions=open_,
+                                  loss_rate=0.0468, dup_rate=0.05)
+        events += ev
+    print(f"\n== async buffered mode (B={B}, DESIGN.md §10) ==")
+    print(f"  {len(events)} wire events over 3 interleaved waves "
+          f"(80% participation, 15% in-flight sessions, version tags)")
+    kw = dict(n_clients=K, n_params=P, payload=W, ring_capacity=64,
+              buffer_size=B, staleness_mode="poly", staleness_alpha=1.0)
+    prev = jnp.zeros((P,), jnp.float32)
+    re_ = run_async_engine(EngineConfig(**kw), events, prev)
+    rc = run_async_engine(EngineConfig(**kw, compile=True,
+                                       shards=args.shards), events, prev)
+    same = (np.array_equal(np.asarray(re_.globals_),
+                           np.asarray(rc.globals_))
+            and np.array_equal(np.asarray(re_.state.global_),
+                               np.asarray(rc.state.global_))
+            and np.array_equal(np.asarray(re_.state.total),
+                               np.asarray(rc.state.total))
+            and re_.updates == rc.updates and re_.stats == rc.stats)
+    s = rc.stats
+    shard_note = (f", {args.shards} worker shards" if args.shards > 1
+                  else "")
+    print(f"  {s.data_enqueued} pkts folded, {s.duplicates_dropped} dup "
+          f"+ {s.phase_dropped} out-of-session dropped, "
+          f"{s.updates_accepted} updates accepted, "
+          f"{s.updates_in_flight} still in flight")
+    print(f"  {s.emits} globals emitted (server version "
+          f"{rc.state.version}), {rc.state.pending} updates carried in "
+          f"the accumulator")
+    hist = " ".join(f"s={k}:{v}" for k, v in
+                    sorted(s.staleness_hist.items()))
+    print(f"  staleness histogram (poly alpha=1 down-weighting): {hist}")
+    print(f"  compiled scan fold{shard_note} bitwise == eager fold at "
+          f"every emitted global: {same}")
+    assert same, "async compiled fold diverged from the eager fold"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--compile", action="store_true",
@@ -186,9 +248,17 @@ def main():
                     help="compressed int8 uplink demo: quantized wire "
                          "payloads, dequantize fused into the round "
                          "(DESIGN.md §9)")
+    ap.add_argument("--async", type=int, nargs="?", const=16,
+                    default=None, dest="async_b", metavar="B",
+                    help="async buffered-aggregation demo: emit a new "
+                         "global every B folded updates, staleness-"
+                         "weighted, no round barrier (DESIGN.md §10)")
     args = ap.parse_args()
     if args.shards > 1:
         args.compile = True
+    if args.async_b is not None:
+        async_demo(args)
+        return
     if args.deadline is not None:
         straggler_demo(args)
         if not (args.churn or args.int8):

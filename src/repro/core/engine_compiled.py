@@ -63,11 +63,14 @@ from repro.core.packets import depacketize
 from repro.core.protocol import Kind
 # QuorumError is re-exported so callers of the bulk path can catch it
 # from either module
-from repro.core.server import (EngineConfig, EngineStats, QuorumError,
-                               RoundResult, check_quorum)  # noqa: F401
+from repro.core.server import (AsyncResult, AsyncState, AsyncStats,
+                               EngineConfig, EngineStats, QuorumError,
+                               RoundResult, UpdateRecord,  # noqa: F401
+                               check_quorum)
 from repro.kernels.packet_scatter import (BLOCK_PKTS,
                                           packet_scatter_accum_scan,
-                                          packet_scatter_accum_sharded)
+                                          packet_scatter_accum_sharded,
+                                          staleness_weights)
 from repro.runtime.sharding import worker_ctx
 
 
@@ -112,6 +115,10 @@ class DrainSchedule:
     scales: Optional[np.ndarray] = None    # (n_rows, B) f32 per-packet
                                            # q8 dequant scales (0 inert);
                                            # None on the f32 wire path
+    staleness: Optional[np.ndarray] = None # (n_rows, B) f32 per-packet
+                                           # update age at fold time
+                                           # (DESIGN.md §10); None on
+                                           # synchronous rounds
 
 
 def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
@@ -119,7 +126,8 @@ def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
                          ring_capacity: int, ring_assign: str = "rr",
                          block_pkts: int = BLOCK_PKTS,
                          pad_batches: int = 8,
-                         scales: Optional[np.ndarray] = None
+                         scales: Optional[np.ndarray] = None,
+                         staleness: Optional[np.ndarray] = None
                          ) -> DrainSchedule:
     """Vectorized replay of the eager engine's ring demux.
 
@@ -136,6 +144,10 @@ def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
     wire rows and the schedule carries the per-packet scale column next
     to the weights (DESIGN.md §9); padding entries get scale 0, which
     dequantizes padding to 0 exactly like the f32 inert rows.
+
+    ``staleness`` (n,) f32 is the async mode's per-packet update age at
+    fold time (DESIGN.md §10), carried as one more column; padding gets
+    staleness 0, inert because its weight is 0 in every weighting mode.
     """
     n = int(slots.shape[0])
     W = int(payloads.shape[1])
@@ -147,6 +159,8 @@ def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
                              np.zeros((1, B, W), pk_dtype), 0, 0,
                              np.full((1,), -1, np.int64),
                              None if scales is None
+                             else np.zeros((1, B), np.float32),
+                             None if staleness is None
                              else np.zeros((1, B), np.float32))
     if ring_assign == "slot":
         worker = slots.astype(np.int64) % n_workers
@@ -185,15 +199,19 @@ def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
     if scales is not None:
         sc = np.zeros((n_rows, B), np.float32)
         sc[row, col] = scales
+    st = None
+    if staleness is not None:
+        st = np.zeros((n_rows, B), np.float32)
+        st[row, col] = staleness
     row_worker = np.full(n_rows, -1, np.int64)
     row_worker[rank] = uniq // (n + 1)            # batch key -> its worker
-    return DrainSchedule(idx, w, pk, int(nb), n, row_worker, sc)
+    return DrainSchedule(idx, w, pk, int(nb), n, row_worker, sc, st)
 
 
 def shard_schedule(sched: DrainSchedule, n_shards: int, *,
                    pad_batches: int = 8
                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
-                              Optional[np.ndarray]]:
+                              Optional[np.ndarray], Optional[np.ndarray]]:
     """Demux a round's drain schedule per shard (DESIGN.md §7).
 
     Shard ``s`` owns the drain batches of worker rings ``w`` with
@@ -205,12 +223,13 @@ def shard_schedule(sched: DrainSchedule, n_shards: int, *,
     to the unsharded engine on integer-valued payloads (both modes are
     additive across batches).
 
-    Returns ``(idx, weights, payloads, scales)`` with a leading
-    ``(n_shards,)`` axis (``scales`` is None on the f32 wire path);
-    shards are padded to a common row count (bucketed to a multiple of
-    ``pad_batches`` so round-to-round jitter reuses one jit trace) with
-    inert rows, and shards with no assigned ring (e.g.
-    ``n_shards > n_workers``) are entirely inert.
+    Returns ``(idx, weights, payloads, scales, staleness)`` with a
+    leading ``(n_shards,)`` axis (``scales`` is None on the f32 wire
+    path, ``staleness`` on synchronous rounds); shards are padded to a
+    common row count (bucketed to a multiple of ``pad_batches`` so
+    round-to-round jitter reuses one jit trace) with inert rows, and
+    shards with no assigned ring (e.g. ``n_shards > n_workers``) are
+    entirely inert.
     """
     assert sched.workers is not None, "schedule predates worker tracking"
     B = sched.idx.shape[1]
@@ -227,13 +246,17 @@ def shard_schedule(sched: DrainSchedule, n_shards: int, *,
     pk = np.zeros((n_shards, rows, B, W), sched.payloads.dtype)
     sc = (None if sched.scales is None
           else np.zeros((n_shards, rows, B), np.float32))
+    st = (None if sched.staleness is None
+          else np.zeros((n_shards, rows, B), np.float32))
     for s, p in enumerate(per_shard):
         idx[s, :len(p)] = sched.idx[p]
         w[s, :len(p)] = sched.weights[p]
         pk[s, :len(p)] = sched.payloads[p]
         if sc is not None:
             sc[s, :len(p)] = sched.scales[p]
-    return idx, w, pk, sc
+        if st is not None:
+            st[s, :len(p)] = sched.staleness[p]
+    return idx, w, pk, sc, st
 
 
 def approx_lost_updates(sched: DrainSchedule, n_shards: int = 1
@@ -493,7 +516,7 @@ def dispatch_round(cfg: EngineConfig, sched: DrainSchedule, total, counts,
                       sched.scales)
     mesh = None
     if cfg.shards > 1:
-        idx, w, pk, sc = shard_schedule(sched, cfg.shards)
+        idx, w, pk, sc, _ = shard_schedule(sched, cfg.shards)
         ctx = worker_ctx(cfg.shards)
         mesh = None if ctx is None else ctx.mesh
     return _round_device(
@@ -574,3 +597,349 @@ def run_compiled_rounds(cfg: EngineConfig, rounds: Iterable,
         pending.new_global.block_until_ready()
         results.append(pending)
     return results
+
+
+# ---------------------------------------------------------------------------
+# Async buffered mode (FedBuff) — compiled path (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AsyncSchedule:
+    """Stacked per-window drain schedule for one async demux call.
+
+    Window ``w`` holds the packets of the updates folded between emit
+    boundaries ``w-1`` and ``w``; every window is independently
+    ring-demuxed (``build_drain_schedule`` — rings and the rr pointer
+    reset at each emit, exactly like the eager twin) and the per-window
+    schedules are padded to a common row count ``R`` and stacked so the
+    whole call scans as one ``lax.scan`` over windows.  ``emit[w]``
+    marks windows that close a full buffer (the divide fires and the
+    accumulator resets); a trailing non-emit window carries the
+    residual (< B) folds into the returned ``AsyncState``.
+    """
+    idx: np.ndarray         # (n_windows, R, B) int32 slot rows
+    weights: np.ndarray     # (n_windows, R, B) f32 base FedAvg weights
+    staleness: np.ndarray   # (n_windows, R, B) f32 update age at fold
+    payloads: np.ndarray    # (n_windows, R, B, W) f32 | int8 (q8 wire)
+    emit: np.ndarray        # (n_windows,) bool — divide + reset fires
+    n_windows: int
+    n_emits: int
+    pending_after: int      # updates folded past the last emit
+    scales: Optional[np.ndarray] = None    # (n_windows, R, B) f32 (q8)
+    scheds: List[DrainSchedule] = dataclasses.field(default_factory=list)
+
+
+def demux_events_async(cfg: EngineConfig, events: Iterable,
+                       weights: Optional[np.ndarray] = None, *,
+                       base_version: int = 0, base_pending: int = 0
+                       ) -> Tuple[AsyncSchedule, AsyncStats,
+                                  List[UpdateRecord]]:
+    """Bulk async RX: one pass over ``(Packet, payload)`` events with
+    the session grammar of ``server.AsyncServerEngine.rx``, then one
+    ring demux per emit window -> (schedule, stats, update log).
+
+    Sessions (START ... DATA ... END) interleave freely and repeat per
+    client; DATA is accepted iff its client's session is open and the
+    slot is unseen *in that session*; an accepted END folds the
+    session's packets into the current window with staleness
+    ``(base_version + emits_so_far) - version_at_send`` (clamped >= 0,
+    version-at-send from the session's START tag).  Every
+    ``cfg.buffer_size`` folds close a window with ``emit=True``;
+    ``base_pending`` updates carried from a previous call count toward
+    the first window's budget.  Sessions still open at stream end are
+    in-flight: buffered this call, neither folded nor carried.
+    """
+    if cfg.buffer_size is None:
+        raise ValueError("async demux needs cfg.buffer_size")
+    K = cfg.n_clients
+    wts = (np.ones(K, np.float32) if weights is None
+           else np.asarray(weights, np.float32))
+    stats = AsyncStats()
+    updates: List[UpdateRecord] = []
+    up = [False] * K
+    sess = [-1] * K
+    ver = [0] * K
+    seen: List[set] = [set() for _ in range(K)]
+    buf: List[list] = [[] for _ in range(K)]
+    windows: List[list] = []
+    emit_flags: List[bool] = []
+    win: List[tuple] = []
+    pending = base_pending
+    emits = 0
+    data_k, start_k, end_k = Kind.DATA, Kind.START, Kind.END
+    for packet, payload in events:
+        kind = packet.kind
+        c = packet.client
+        if kind is data_k:
+            if not up[c]:
+                stats.phase_dropped += 1
+                continue
+            slot = packet.index
+            if slot in seen[c]:
+                stats.duplicates_dropped += 1
+                continue
+            seen[c].add(slot)
+            buf[c].append((slot, payload, packet.wire_dtype != "f32",
+                           packet.scale))
+            stats.data_enqueued += 1
+        elif kind is start_k:
+            stats.control_replies += 1
+            if not up[c]:
+                up[c] = True
+                sess[c] += 1
+                ver[c] = int(packet.version)
+                seen[c] = set()
+                buf[c] = []
+        elif kind is end_k:
+            stats.control_replies += 1
+            if not up[c]:
+                continue                      # dup / late END: grace-acked
+            up[c] = False
+            fold_version = base_version + emits
+            staleness = max(0, fold_version - ver[c])
+            updates.append(UpdateRecord(c, sess[c], ver[c], fold_version,
+                                        staleness, len(buf[c]), emits))
+            stats.updates_accepted += 1
+            h = stats.staleness_hist
+            h[staleness] = h.get(staleness, 0) + 1
+            base_w = float(wts[c])
+            for slot, pay, q8, sc in buf[c]:
+                win.append((slot, base_w, staleness, pay, q8, sc))
+            buf[c] = []
+            pending += 1
+            if pending >= cfg.buffer_size:
+                windows.append(win)
+                emit_flags.append(True)
+                win = []
+                pending = 0
+                emits += 1
+    if win:           # residual folds ride a trailing non-emit window
+        windows.append(win)
+        emit_flags.append(False)
+    for c in range(K):
+        if up[c]:
+            stats.updates_in_flight += 1
+            stats.data_in_flight += len(buf[c])
+    stats.emits = emits
+    # wire tri-state decided over ALL folded packets, so every window's
+    # payload block shares one dtype (same rule as the sync demux §9)
+    n_pkts = sum(len(w) for w in windows)
+    n_q8 = sum(e[4] for w in windows for e in w)
+    homogeneous_q8 = n_pkts > 0 and n_q8 == n_pkts
+
+    def _window_sched(entries: list) -> DrainSchedule:
+        n = len(entries)
+        slots = np.asarray([e[0] for e in entries], np.int32)
+        w_col = np.asarray([e[1] for e in entries], np.float32)
+        st_col = np.asarray([e[2] for e in entries], np.float32)
+        sc_col = None
+        if homogeneous_q8:
+            pay = (np.asarray([e[3] for e in entries], np.int8) if n
+                   else np.zeros((0, cfg.payload), np.int8))
+            sc_col = np.asarray([e[5] for e in entries], np.float32)
+        elif n_q8 == 0:
+            pay = (np.asarray([e[3] for e in entries], np.float32) if n
+                   else np.zeros((0, cfg.payload), np.float32))
+        else:     # mixed wire: host-decode the q8 rows (DESIGN.md §9)
+            pay = (np.stack([
+                np.asarray(p, np.int8).astype(np.float32) * np.float32(s)
+                if q else np.asarray(p, np.float32)
+                for _, _, _, p, q, s in entries]) if n
+                else np.zeros((0, cfg.payload), np.float32))
+        return build_drain_schedule(
+            slots, w_col, pay, n_workers=cfg.n_workers,
+            ring_capacity=cfg.ring_capacity, ring_assign=cfg.ring_assign,
+            scales=sc_col, staleness=st_col)
+
+    scheds = [_window_sched(w) for w in windows]
+    stats.batches_drained = sum(s.n_batches for s in scheds)
+    n_windows = len(scheds)
+    if n_windows == 0:
+        asched = AsyncSchedule(
+            np.zeros((0, 1, 1), np.int32), np.zeros((0, 1, 1), np.float32),
+            np.zeros((0, 1, 1), np.float32),
+            np.zeros((0, 1, 1, cfg.payload), np.float32),
+            np.zeros((0,), bool), 0, 0, pending, None, [])
+        return asched, stats, updates
+    B = scheds[0].idx.shape[1]
+    W = scheds[0].payloads.shape[2]
+    R = max(s.idx.shape[0] for s in scheds)
+    idx = np.full((n_windows, R, B), -1, np.int32)
+    w_all = np.zeros((n_windows, R, B), np.float32)
+    st_all = np.zeros((n_windows, R, B), np.float32)
+    pk_all = np.zeros((n_windows, R, B, W), scheds[0].payloads.dtype)
+    sc_all = (np.zeros((n_windows, R, B), np.float32) if homogeneous_q8
+              else None)
+    for i, s in enumerate(scheds):
+        r = s.idx.shape[0]
+        idx[i, :r] = s.idx
+        w_all[i, :r] = s.weights
+        st_all[i, :r] = s.staleness
+        pk_all[i, :r] = s.payloads
+        if sc_all is not None:
+            sc_all[i, :r] = s.scales
+    asched = AsyncSchedule(idx, w_all, st_all, pk_all,
+                           np.asarray(emit_flags, bool), n_windows, emits,
+                           pending, sc_all, scheds)
+    return asched, stats, updates
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "payload", "n_params",
+                                    "use_pallas", "block_slots",
+                                    "block_pkts", "interpret",
+                                    "stale_mode", "stale_alpha",
+                                    "norm_clip", "shards", "mesh"),
+                   donate_argnums=(0, 1))
+def _async_device(total, counts, g, sched_idx, sched_w, sched_st, sched_pk,
+                  sched_scales, emit, *, mode: str, payload: int,
+                  n_params: int, use_pallas: bool, block_slots: int,
+                  block_pkts: int, interpret: bool, stale_mode: str,
+                  stale_alpha: float, norm_clip: float, shards: int = 1,
+                  mesh=None):
+    """One jitted dispatch for a whole async demux call (DESIGN.md §10).
+
+    ``lax.scan`` over emit windows with the donated ``(total, counts)``
+    accumulators and the live global carried in place.  Each window
+    step: the staleness weighting (``staleness_weights`` — applied
+    in-body, so the q8 wire's norm screening sees the dequantized rows
+    without ever materializing them) rescales the window's base
+    weights, the window's drain rows fold through the same scan body as
+    a synchronous round, and — where ``emit`` is set — the END divide +
+    per-slot fallback publishes a new global and zeroes the
+    accumulators for the next buffer.  Non-emit windows (the residual
+    tail) fold and carry.  Per-window outputs: the live global after
+    the window and the pre-reset per-slot counts.
+    """
+    S = counts.shape[0]
+    acc, cnt = total, counts[:, None]
+    pad = (-S) % block_slots if use_pallas else 0
+    if pad:
+        acc = jnp.pad(acc, ((0, pad), (0, 0)))
+        cnt = jnp.pad(cnt, ((0, pad), (0, 0)))
+    q8 = sched_scales is not None
+
+    def step(carry, xs):
+        acc, cnt, g = carry
+        if q8:
+            widx, ww, wst, wsc, wpk, em = xs
+        else:
+            widx, ww, wst, wpk, em = xs
+            wsc = None
+        eff = staleness_weights(ww, wst, rows=wpk, scales=wsc,
+                                mode=stale_mode, alpha=stale_alpha,
+                                norm_clip=norm_clip)
+        if shards > 1:
+            acc, cnt = packet_scatter_accum_sharded(
+                widx, eff, wpk, acc, cnt, sched_scales=wsc, mesh=mesh,
+                exact=(mode == "exact"), use_pallas=use_pallas,
+                block_slots=block_slots, block_pkts=block_pkts,
+                interpret=interpret)
+        else:
+            acc, cnt = packet_scatter_accum_scan(
+                widx, eff, wpk, acc, cnt, sched_scales=wsc,
+                exact=(mode == "exact"), use_pallas=use_pallas,
+                block_slots=block_slots, block_pkts=block_pkts,
+                interpret=interpret)
+        counts_live = cnt[:S, 0]
+        # the emit divide — the exact op sequence of the synchronous END
+        avg = acc[:S] / jnp.maximum(counts_live, 1e-12)[:, None]
+        avg = jnp.where(counts_live[:, None] > 0, avg, 0.0)
+        agg_flat = depacketize(avg, n_params)
+        have = expand_packet_mask(counts_live > 0, payload, n_params)
+        cand = jnp.where(have, agg_flat, g)
+        new_g = jnp.where(em, cand, g)
+        acc = jnp.where(em, jnp.zeros_like(acc), acc)
+        cnt = jnp.where(em, jnp.zeros_like(cnt), cnt)
+        return (acc, cnt, new_g), (new_g, counts_live)
+
+    xs = ((sched_idx, sched_w, sched_st, sched_scales, sched_pk, emit)
+          if q8 else (sched_idx, sched_w, sched_st, sched_pk, emit))
+    (acc, cnt, g), (gs, cs) = jax.lax.scan(step, (acc, cnt, g), xs)
+    return acc[:S], cnt[:S, 0], g, gs, cs
+
+
+def dispatch_async(cfg: EngineConfig, asched: AsyncSchedule, total, counts,
+                   prev_global):
+    """Dispatch one async demux call -> (total', counts', final_global,
+    per-window globals (n_windows, P), per-window counts (n_windows, N)).
+
+    ``total``/``counts`` are donated.  ``cfg.shards > 1`` demuxes every
+    window's schedule per shard (ring ownership, ``shard_schedule``)
+    and routes each window through the sharded partial-sum fold — over
+    the ``'worker'`` mesh when the platform has the devices, else the
+    bitwise vmap emulation.
+    """
+    idx, w, st, pk, sc = (asched.idx, asched.weights, asched.staleness,
+                          asched.payloads, asched.scales)
+    mesh = None
+    if cfg.shards > 1:
+        per_win = [shard_schedule(s, cfg.shards) for s in asched.scheds]
+        R = max(p[0].shape[1] for p in per_win)
+        nW, nS = asched.n_windows, cfg.shards
+        B = asched.idx.shape[2]
+        W = asched.payloads.shape[3]
+        idx = np.full((nW, nS, R, B), -1, np.int32)
+        w = np.zeros((nW, nS, R, B), np.float32)
+        st = np.zeros((nW, nS, R, B), np.float32)
+        pk = np.zeros((nW, nS, R, B, W), asched.payloads.dtype)
+        sc = (None if asched.scales is None
+              else np.zeros((nW, nS, R, B), np.float32))
+        for i, (pi, pw, ppk, psc, pst) in enumerate(per_win):
+            r = pi.shape[1]
+            idx[i, :, :r] = pi
+            w[i, :, :r] = pw
+            st[i, :, :r] = pst
+            pk[i, :, :r] = ppk
+            if sc is not None:
+                sc[i, :, :r] = psc
+        ctx = worker_ctx(cfg.shards)
+        mesh = None if ctx is None else ctx.mesh
+    return _async_device(
+        jnp.asarray(total, jnp.float32), jnp.asarray(counts, jnp.float32),
+        jnp.asarray(prev_global, jnp.float32),
+        jnp.asarray(idx), jnp.asarray(w), jnp.asarray(st), jnp.asarray(pk),
+        None if sc is None else jnp.asarray(sc),
+        jnp.asarray(asched.emit),
+        mode=cfg.mode, payload=cfg.payload, n_params=cfg.n_params,
+        use_pallas=_use_pallas(cfg), block_slots=8,
+        block_pkts=min(BLOCK_PKTS, idx.shape[-1]),
+        interpret=_interpret(), stale_mode=cfg.staleness_mode,
+        stale_alpha=float(cfg.staleness_alpha),
+        norm_clip=float(cfg.norm_clip), shards=cfg.shards, mesh=mesh)
+
+
+def run_compiled_async(cfg: EngineConfig, events: Iterable, prev_global,
+                       *, weights=None,
+                       state: Optional[AsyncState] = None) -> AsyncResult:
+    """Compiled counterpart of ``server.run_async_engine``: one host
+    demux pass over the stream, then exactly one device dispatch for
+    every window's fold and every emit's divide (DESIGN.md §10).
+
+    ``state`` carries the residual accumulator, version and pending
+    count from a previous call; its buffers are copied before the
+    donated dispatch, so the caller's state stays readable.
+    """
+    if state is None:
+        state = AsyncState.init(cfg, prev_global)
+    asched, stats, updates = demux_events_async(
+        cfg, events, weights, base_version=state.version,
+        base_pending=state.pending)
+    g0 = jnp.asarray(state.global_, jnp.float32)
+    if asched.n_windows == 0:
+        new_state = AsyncState(jnp.asarray(state.total, jnp.float32),
+                               jnp.asarray(state.counts, jnp.float32),
+                               g0, state.version, asched.pending_after)
+        P = cfg.n_params
+        return AsyncResult(jnp.zeros((0, P), jnp.float32),
+                           jnp.zeros((0, cfg.n_slots), jnp.float32),
+                           new_state, stats, updates)
+    total = jnp.array(state.total, jnp.float32, copy=True)
+    counts = jnp.array(state.counts, jnp.float32, copy=True)
+    total, counts, g, gs, cs = dispatch_async(cfg, asched, total, counts,
+                                              g0)
+    em = np.nonzero(asched.emit)[0]
+    new_state = AsyncState(total, counts, g,
+                           state.version + asched.n_emits,
+                           asched.pending_after)
+    return AsyncResult(gs[em], cs[em], new_state, stats, updates)

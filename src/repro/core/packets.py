@@ -33,6 +33,7 @@ PAYLOAD_BYTES = MTU - IP_HEADER - UDP_HEADER - INDEX_BYTES   # 1468
 PAYLOAD_F32 = PAYLOAD_BYTES // 4                             # 367
 SCALE_BYTES = 4                     # per-packet f32 symmetric scale (q8)
 PAYLOAD_Q8 = PAYLOAD_BYTES - SCALE_BYTES                     # 1464
+VERSION_BYTES = 4                   # async global-version tag (DESIGN.md §10)
 ETH_OVERHEAD = 14 + 4 + 8 + 12      # eth hdr + FCS + preamble + IFG
 WIRE_PACKET_BYTES = MTU + ETH_OVERHEAD
 Q8_LEVELS = 127                     # symmetric int8: [-127, 127]
@@ -190,26 +191,34 @@ def straggler_mask(rng, n_clients: int, dropout_rate: float) -> jnp.ndarray:
     return keep.astype(jnp.float32)
 
 
-def payload_wire_bytes(payload: int, wire_dtype: str = "f32") -> int:
+def payload_wire_bytes(payload: int, wire_dtype: str = "f32",
+                       versioned: bool = False) -> int:
     """UDP payload bytes carrying ``payload`` weights at ``wire_dtype``.
 
     f32: 4 B per weight.  q8: 1 B per weight plus the 4 B scale header.
+    ``versioned`` adds the 4 B global-version tag the async buffered
+    mode stamps on every DATA packet (DESIGN.md §10) so staleness is
+    measurable on the wire.
     """
     if wire_dtype == "f32":
-        return 4 * payload
-    if wire_dtype == "q8":
-        return payload + SCALE_BYTES
-    raise ValueError(f"unknown wire_dtype {wire_dtype!r}")
+        base = 4 * payload
+    elif wire_dtype == "q8":
+        base = payload + SCALE_BYTES
+    else:
+        raise ValueError(f"unknown wire_dtype {wire_dtype!r}")
+    return base + (VERSION_BYTES if versioned else 0)
 
 
-def packet_wire_bytes(payload: int, wire_dtype: str = "f32") -> int:
+def packet_wire_bytes(payload: int, wire_dtype: str = "f32",
+                      versioned: bool = False) -> int:
     """Bytes ONE packet occupies on the wire, all framing included."""
     return (ETH_OVERHEAD + IP_HEADER + UDP_HEADER + INDEX_BYTES
-            + payload_wire_bytes(payload, wire_dtype))
+            + payload_wire_bytes(payload, wire_dtype, versioned))
 
 
 def packet_bytes_on_wire(n_params: int, payload: int = PAYLOAD_F32,
-                         wire_dtype: str = "f32") -> int:
+                         wire_dtype: str = "f32",
+                         versioned: bool = False) -> int:
     """Total bytes on the 25GbE wire for one client's parameter upload."""
     n_pkts = PacketizedShape(n_params, payload).n_packets
-    return n_pkts * packet_wire_bytes(payload, wire_dtype)
+    return n_pkts * packet_wire_bytes(payload, wire_dtype, versioned)

@@ -47,6 +47,13 @@ class Packet:
     # one socket and framing/retransmission behave identically.
     wire_dtype: str = "f32"  # "f32" | "q8" payload encoding
     scale: float = 1.0       # q8 per-packet symmetric dequant scale
+    # Async buffered mode (DESIGN.md §10): the global-version tag.  The
+    # server stamps downlink packets with the version of the global they
+    # carry; a client stamps its whole uplink session with the version
+    # it trained on, so the server can measure staleness on the wire
+    # (version-at-fold minus version-at-send) without tracking per-client
+    # history.  Synchronous rounds leave it at 0 and never read it.
+    version: int = 0
 
 
 class ClientPhase(enum.Enum):

@@ -40,7 +40,8 @@ import numpy as np
 from repro.core import engine_compiled as ec
 from repro.core.packets import packetize
 from repro.core.protocol import Kind
-from repro.core.server import EngineConfig, QuorumError, RoundResult
+from repro.core.server import (AsyncResult, AsyncState, EngineConfig,
+                               QuorumError, RoundResult)
 
 # round_deadline stand-in for "close at finalize": larger than any event
 # stream, so nothing is late in-stream but stragglers still time out at
@@ -300,3 +301,146 @@ def run_churn_rounds(cfg: EngineConfig, churn: ChurnConfig,
         results.append(res)
         flats, g = res.new_client_flats, res.new_global
     return ChurnHistory(results, logs)
+
+
+# ---------------------------------------------------------------------------
+# Async buffered driver (FedBuff waves) — DESIGN.md §10
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AsyncWaveLog:
+    """Host-side bookkeeping for one async wave (one demux call)."""
+    selected: np.ndarray           # (K,) bool — uploaded this wave
+    open_sessions: np.ndarray      # (K,) bool — STARTed, never ENDed
+    versions: np.ndarray           # (K,) version-at-send per client
+    n_events: int                  # uplink stream length
+
+
+@dataclasses.dataclass
+class AsyncHistory:
+    results: List[AsyncResult]     # one AsyncResult per wave
+    logs: List[AsyncWaveLog]
+    state: AsyncState              # carried accumulator after the run
+
+    @property
+    def final_global(self) -> jnp.ndarray:
+        return self.state.global_
+
+    @property
+    def emitted_globals(self) -> jnp.ndarray:
+        gs = [r.globals_ for r in self.results if r.globals_.shape[0]]
+        if not gs:
+            return jnp.zeros((0, self.state.global_.shape[0]), jnp.float32)
+        return jnp.concatenate(gs)
+
+
+def make_async_stream(rng: np.random.Generator, client_pk: jnp.ndarray,
+                      selected: np.ndarray, versions: np.ndarray, *,
+                      open_sessions: Optional[np.ndarray] = None,
+                      loss_rate: float = 0.0, dup_rate: float = 0.0,
+                      scales: Optional[jnp.ndarray] = None
+                      ) -> Tuple[list, np.ndarray]:
+    """One async wave's uplink: interleaved version-stamped sessions.
+
+    The same lossy/duplicated/shuffled stream as
+    ``server.make_uplink_stream`` with every packet of client ``c``'s
+    session stamped ``versions[c]`` (the global version the client
+    trained on), restricted to ``selected`` clients.  Clients flagged
+    in ``open_sessions`` send their START and DATA but never END — the
+    async analogue of a straggler: the session stays open (in-flight)
+    and its packets never fold (DESIGN.md §10).
+
+    Returns ``(events, up_mask)``; up_mask marks the DATA that rides
+    the stream for selected clients (open sessions included, since
+    their packets do reach the server — they just never fold).
+    """
+    from repro.core.server import make_uplink_stream
+
+    K = client_pk.shape[0]
+    selected = np.asarray(selected, bool)
+    open_ = (np.zeros(K, bool) if open_sessions is None
+             else np.asarray(open_sessions, bool) & selected)
+    events, up = make_uplink_stream(rng, client_pk, loss_rate=loss_rate,
+                                    dup_rate=dup_rate, scales=scales,
+                                    versions=np.asarray(versions, np.int64))
+    up = np.asarray(up).copy()
+    up[~selected] = 0.0
+    out = []
+    for packet, payload in events:
+        c = packet.client
+        if not selected[c]:
+            continue
+        if packet.kind is Kind.END and open_[c]:
+            continue                       # session left open: no END
+        out.append((packet, payload))
+    return out, up
+
+
+def run_async_rounds(cfg: EngineConfig, churn: ChurnConfig,
+                     client_flats: jnp.ndarray, prev_global: jnp.ndarray,
+                     n_waves: int, *, rng: np.random.Generator,
+                     weights: Optional[jnp.ndarray] = None,
+                     train_fn: Optional[Callable] = None,
+                     slow_clients: Optional[np.ndarray] = None
+                     ) -> AsyncHistory:
+    """Drive ``n_waves`` async uplink waves through the buffered engine.
+
+    The barrier-free counterpart of ``run_churn_rounds``: each wave,
+    the active clients sampled at ``churn.participation`` upload one
+    session stamped with the version of the global they *hold*; the
+    engine folds sessions continuously and emits every
+    ``cfg.buffer_size`` updates (``AsyncState`` carries the residual
+    buffer across waves, so emit boundaries ignore wave boundaries
+    entirely — there is no round barrier to align with).
+    ``churn.straggle_rate`` draws sessions that stay open (no END):
+    their packets ride the wire but never fold.
+
+    Staleness comes from the download model: after a wave, every
+    finishing client refreshes its held global to the newest version —
+    except ``slow_clients`` (K,) bool, which never refresh and keep
+    training from the global they started with, so their updates age
+    by one version per emit (the EXPERIMENTS.md §Async-staleness
+    sweep's knob).  ``train_fn(held_flats, wave) -> (K, P)`` runs the
+    local updates from each client's *held* copy; without it the
+    payloads are the static ``client_flats`` (throughput mode).
+    """
+    if not cfg.compile:
+        raise ValueError("run_async_rounds drives the compiled engine; "
+                         "pass EngineConfig(compile=True, ...)")
+    if cfg.buffer_size is None:
+        raise ValueError("run_async_rounds needs cfg.buffer_size")
+    K = cfg.n_clients
+    slow = (np.zeros(K, bool) if slow_clients is None
+            else np.asarray(slow_clients, bool))
+    pack = jax.jit(jax.vmap(lambda f: packetize(f, cfg.payload)))
+    state = AsyncState.init(cfg, prev_global)
+    held_ver = np.zeros(K, np.int64)
+    held = jnp.broadcast_to(jnp.asarray(prev_global, jnp.float32),
+                            (K, prev_global.shape[0]))
+    active = np.ones(K, bool)
+    results: List[AsyncResult] = []
+    logs: List[AsyncWaveLog] = []
+    static_pk = None if train_fn is not None else pack(client_flats)
+    for t in range(n_waves):
+        active = _step_membership(rng, active, churn)
+        sel = active & (rng.random(K) < churn.participation)
+        open_ = sel & (rng.random(K) < churn.straggle_rate)
+        pk = (static_pk if train_fn is None
+              else pack(train_fn(held, t)))
+        events, _ = make_async_stream(
+            rng, pk, sel, held_ver, open_sessions=open_,
+            loss_rate=churn.loss_rate, dup_rate=churn.dup_rate)
+        logs.append(AsyncWaveLog(sel, open_, held_ver.copy(), len(events)))
+        res = ec.run_compiled_async(cfg, events, prev_global,
+                                    weights=weights, state=state)
+        state = res.state
+        results.append(res)
+        # download: finishers refresh to the newest global — slow
+        # clients never do, so their version-at-send ages with every
+        # emit (the staleness the weighting has to absorb)
+        refresh = sel & ~open_ & ~slow
+        if refresh.any():
+            r = jnp.asarray(refresh)
+            held = jnp.where(r[:, None], state.global_[None, :], held)
+            held_ver[refresh] = state.version
+    return AsyncHistory(results, logs, state)

@@ -73,6 +73,18 @@ class EngineConfig:
     # parallelism is min(shards, n_workers, available devices); any
     # shard count is bitwise identical on integer payloads.
     shards: int = 1
+    # async buffered mode (DESIGN.md §10): with ``buffer_size = B`` the
+    # engine stops framing rounds at END/deadline — accepted client
+    # updates fold continuously into the donated accumulators and a new
+    # global is emitted every B accepted updates.  Staleness
+    # (version-at-fold − version-at-send, from the wire version tag) is
+    # weighted by ``staleness_mode``: const (FedBuff unweighted), poly
+    # ((1+s)^-alpha decay), or norm (poly × FedNS-style norm screening
+    # with threshold ``norm_clip``).  None: synchronous rounds.
+    buffer_size: Optional[int] = None
+    staleness_mode: str = "const"      # const | poly | norm
+    staleness_alpha: float = 0.5       # poly/norm decay exponent
+    norm_clip: float = 1.0             # norm-mode screening threshold
 
     def __post_init__(self):
         if self.shards < 1:
@@ -89,6 +101,25 @@ class EngineConfig:
                 "shards > 1 requires compile=True: sharding demuxes the "
                 "compiled drain schedule over the worker mesh "
                 "(DESIGN.md §7)")
+        if self.staleness_mode not in ("const", "poly", "norm"):
+            raise ValueError(
+                f"staleness_mode must be const|poly|norm, got "
+                f"{self.staleness_mode!r}")
+        if self.staleness_alpha < 0:
+            raise ValueError(
+                f"staleness_alpha must be >= 0, got {self.staleness_alpha}")
+        if self.norm_clip <= 0:
+            raise ValueError(
+                f"norm_clip must be > 0, got {self.norm_clip}")
+        if self.buffer_size is not None:
+            if self.buffer_size < 1:
+                raise ValueError(
+                    f"buffer_size must be >= 1, got {self.buffer_size}")
+            if self.round_deadline is not None or self.min_clients:
+                raise ValueError(
+                    "async buffered mode has no round barrier: "
+                    "round_deadline / min_clients do not apply "
+                    "(DESIGN.md §10)")
 
     @property
     def n_slots(self) -> int:
@@ -391,13 +422,312 @@ class ServerEngine:
 
 
 # ---------------------------------------------------------------------------
+# Async buffered mode (FedBuff) — eager twin (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AsyncStats:
+    """Accounting for one async demux call (conservation invariants:
+    ``data_enqueued + duplicates_dropped + phase_dropped`` equals the
+    wire DATA count, and ``data_enqueued - data_in_flight`` equals the
+    packets actually folded)."""
+    data_enqueued: int = 0        # unique DATA accepted into open sessions
+    duplicates_dropped: int = 0   # same (client, session, slot) again
+    phase_dropped: int = 0        # DATA outside an open session
+    control_replies: int = 0      # START_ACK / END_ACK emitted
+    batches_drained: int = 0      # scatter-accumulate rows folded
+    updates_accepted: int = 0     # ENDs that folded a session's update
+    emits: int = 0                # globals published (every B updates)
+    data_in_flight: int = 0       # accepted DATA in sessions still open
+    updates_in_flight: int = 0    # sessions still open at stream end
+    staleness_hist: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateRecord:
+    """One folded client update — the async audit-log row.  Weights are
+    reproducible from this log: the update's packets folded with
+    ``staleness_weights(base_w, staleness, ...)``."""
+    client: int
+    session: int          # per-client session ordinal (0-based)
+    version_sent: int     # global version stamped on the session's START
+    fold_version: int     # server version when the update folded
+    staleness: int        # max(0, fold_version - version_sent)
+    n_packets: int        # deduplicated DATA rows folded
+    window: int           # fold window ordinal within the call
+
+
+@dataclasses.dataclass
+class AsyncState:
+    """Carried accumulator between async demux calls: the residual
+    (< buffer_size) updates stay folded in ``total``/``counts`` and the
+    next call's first emit completes the buffer."""
+    total: jnp.ndarray    # (N, W) residual accumulator
+    counts: jnp.ndarray   # (N,) residual weighted counts
+    global_: jnp.ndarray  # (P,) latest published global
+    version: int          # emits so far (the wire version tag source)
+    pending: int          # updates folded since the last emit (< B)
+
+    @classmethod
+    def init(cls, cfg: EngineConfig,
+             prev_global: jnp.ndarray) -> "AsyncState":
+        return cls(total=jnp.zeros((cfg.n_slots, cfg.payload), jnp.float32),
+                   counts=jnp.zeros((cfg.n_slots,), jnp.float32),
+                   global_=jnp.asarray(prev_global, jnp.float32),
+                   version=0, pending=0)
+
+
+@dataclasses.dataclass
+class AsyncResult:
+    globals_: jnp.ndarray      # (E, P) emitted globals, in emit order
+    emit_counts: jnp.ndarray   # (E, N) per-slot weighted counts per emit
+    state: AsyncState          # carried accumulator / version / pending
+    stats: AsyncStats
+    updates: List[UpdateRecord]
+
+
+class AsyncServerEngine:
+    """Eager async buffered server (DESIGN.md §10) — the oracle twin of
+    ``engine_compiled.run_compiled_async``.
+
+    No round barrier: each client runs its own upload *session*
+    (START ... DATA ... END, the START stamped with the global version
+    the client trained on), sessions interleave freely, and the server
+    folds a session's deduplicated packets at its END.  Every
+    ``cfg.buffer_size`` folded updates the engine *emits*: the
+    count-normalized divide with per-slot fallback to the latest global
+    (the synchronous END dataflow, verbatim), then the accumulator
+    resets and the version increments.  Staleness weighting
+    (``kernels.packet_scatter.staleness_weights``) scales each update's
+    packet weights by its age at fold time.
+
+    Operationally the fold is batched per emit window — every window's
+    packets stream through the same ring demux as a synchronous round
+    (rr pointer and rings reset at each emit) — so the compiled
+    schedule replays the eager batching exactly, which is what makes
+    the differential harness bitwise (DESIGN.md §10).
+    """
+
+    def __init__(self, cfg: EngineConfig, prev_global: jnp.ndarray,
+                 weights: Optional[jnp.ndarray] = None,
+                 state: Optional[AsyncState] = None):
+        if cfg.buffer_size is None:
+            raise ValueError("AsyncServerEngine needs cfg.buffer_size")
+        self.cfg = cfg
+        self.weights = (np.ones(cfg.n_clients, np.float32) if weights is None
+                        else np.asarray(weights, np.float32))
+        if state is None:
+            state = AsyncState.init(cfg, prev_global)
+        self.agg = StreamingAggregator(cfg.n_slots, cfg.payload,
+                                       use_kernel=cfg.use_kernel)
+        # copy the carried accumulators: the drain path donates its
+        # buffers, and the caller's AsyncState must stay readable
+        self.agg.total = jnp.array(state.total, jnp.float32, copy=True)
+        self.agg.counts = jnp.array(state.counts, jnp.float32, copy=True)
+        self.global_ = jnp.asarray(state.global_, jnp.float32)
+        self.version = int(state.version)
+        self.pending = int(state.pending)
+        K = cfg.n_clients
+        self._up = [False] * K                 # session open?
+        self._sess = [-1] * K                  # session ordinal
+        self._ver = [0] * K                    # version-at-send
+        self._seen: List[set] = [set() for _ in range(K)]
+        self._buf: List[list] = [[] for _ in range(K)]
+        # current window: (slot, base_w, staleness, payload, q8, scale)
+        self._win: List[tuple] = []
+        self.globals_: List[jnp.ndarray] = []
+        self.emit_counts: List[jnp.ndarray] = []
+        self.updates: List[UpdateRecord] = []
+        self.stats = AsyncStats()
+
+    # -- RX: session grammar --------------------------------------------------
+    def rx(self, packet: Packet, payload=None) -> List[Packet]:
+        c = packet.client
+        if packet.kind == Kind.START:
+            self.stats.control_replies += 1
+            if not self._up[c]:
+                self._up[c] = True
+                self._sess[c] += 1
+                self._ver[c] = int(packet.version)
+                self._seen[c] = set()
+                self._buf[c] = []
+            # duplicate START mid-session: re-acked, no session reset
+            return [Packet(Kind.START_ACK, c)]
+        if packet.kind == Kind.END:
+            self.stats.control_replies += 1
+            if self._up[c]:
+                self._fold_update(c)
+                self._up[c] = False
+            # END outside a session (dup / late): grace re-ack
+            return [Packet(Kind.END_ACK, c)]
+        if packet.kind != Kind.DATA:
+            return []
+        if not self._up[c]:
+            self.stats.phase_dropped += 1
+            return []
+        slot = packet.index
+        if slot in self._seen[c]:
+            self.stats.duplicates_dropped += 1
+            return []
+        assert payload is not None, "DATA packet without payload"
+        self._seen[c].add(slot)
+        self._buf[c].append((slot, payload, packet.wire_dtype != "f32",
+                             packet.scale))
+        self.stats.data_enqueued += 1
+        return []
+
+    def _fold_update(self, c: int) -> None:
+        staleness = max(0, self.version - self._ver[c])
+        window = self.stats.emits
+        self.updates.append(UpdateRecord(
+            c, self._sess[c], self._ver[c], self.version, staleness,
+            len(self._buf[c]), window))
+        self.stats.updates_accepted += 1
+        h = self.stats.staleness_hist
+        h[staleness] = h.get(staleness, 0) + 1
+        base_w = float(self.weights[c])
+        for slot, pay, q8, sc in self._buf[c]:
+            self._win.append((slot, base_w, staleness, pay, q8, sc))
+        self._buf[c] = []
+        self.pending += 1
+        if self.pending >= self.cfg.buffer_size:
+            self._emit()
+
+    # -- fold: one emit window through the ring demux -------------------------
+    def _fold_window(self) -> None:
+        if not self._win:
+            return
+        from repro.kernels.packet_scatter import staleness_weights
+        slots = np.asarray([e[0] for e in self._win], np.int64)
+        base_w = np.asarray([e[1] for e in self._win], np.float32)
+        stal = np.asarray([e[2] for e in self._win], np.float32)
+        q8 = [e[4] for e in self._win]
+        n_q8 = sum(q8)
+        # same tri-state as the compiled demux (DESIGN.md §9): the norm
+        # weighting must see exactly the rows the accumulator sees
+        if n_q8 == 0:
+            rows = np.asarray([e[3] for e in self._win], np.float32)
+            h_rows, h_scales = rows, None
+        elif n_q8 == len(self._win):
+            h_rows = np.asarray([e[3] for e in self._win], np.int8)
+            h_scales = np.asarray([e[5] for e in self._win], np.float32)
+            rows = h_rows.astype(np.float32) * h_scales[:, None]
+        else:
+            rows = np.stack([
+                np.asarray(p, np.int8).astype(np.float32) * np.float32(s)
+                if q else np.asarray(p, np.float32)
+                for _, _, _, p, q, s in self._win])
+            h_rows, h_scales = rows, None
+        eff = np.asarray(staleness_weights(
+            jnp.asarray(base_w), jnp.asarray(stal),
+            rows=jnp.asarray(h_rows),
+            scales=None if h_scales is None else jnp.asarray(h_scales),
+            mode=self.cfg.staleness_mode, alpha=self.cfg.staleness_alpha,
+            norm_clip=self.cfg.norm_clip))
+        # fresh ring demux per window: rings and the rr pointer reset at
+        # every emit, so each window batches exactly like one sync round
+        rings: List[list] = [[] for _ in range(self.cfg.n_workers)]
+        rr = 0
+        for i in range(len(self._win)):
+            if self.cfg.ring_assign == "slot":
+                worker = int(slots[i]) % self.cfg.n_workers
+            else:
+                worker = rr
+                rr = (rr + 1) % self.cfg.n_workers
+            ring = rings[worker]
+            ring.append(i)
+            if len(ring) >= self.cfg.ring_capacity:
+                self._drain_rows(ring, slots, eff, rows)
+                rings[worker] = []
+        for worker in range(self.cfg.n_workers):
+            self._drain_rows(rings[worker], slots, eff, rows)
+        self._win = []
+
+    def _drain_rows(self, members: List[int], slots, eff, rows) -> None:
+        if not members:
+            return
+        m = np.asarray(members, np.int64)
+        self.agg.scatter_add(jnp.asarray(rows[m]),
+                             jnp.asarray(slots[m].astype(np.int32)),
+                             weights=jnp.asarray(eff[m]),
+                             mode=self.cfg.mode)
+        self.stats.batches_drained += 1
+
+    # -- emit: divide + fallback + reset + version++ --------------------------
+    def _emit(self) -> None:
+        self._fold_window()
+        counts = self.agg.counts
+        avg = self.agg.finalize()                        # (N, W)
+        agg_flat = depacketize(avg, self.cfg.n_params)   # (P,)
+        have = expand_packet_mask(counts > 0, self.cfg.payload,
+                                  self.cfg.n_params)
+        g = jnp.where(have, agg_flat, self.global_)
+        self.globals_.append(g)
+        self.emit_counts.append(counts)
+        self.global_ = g
+        self.agg.reset()
+        self.version += 1
+        self.pending = 0
+        self.stats.emits += 1
+
+    # -- stream end -----------------------------------------------------------
+    def finish(self) -> AsyncResult:
+        """Fold the residual (< B) updates into the carried accumulator
+        — no emit — and account the sessions still open (in-flight:
+        buffered this call, not folded, not carried)."""
+        self._fold_window()
+        for c in range(self.cfg.n_clients):
+            if self._up[c]:
+                self.stats.updates_in_flight += 1
+                self.stats.data_in_flight += len(self._buf[c])
+        P = self.cfg.n_params
+        E = len(self.globals_)
+        globals_ = (jnp.stack(self.globals_) if E
+                    else jnp.zeros((0, P), jnp.float32))
+        emit_counts = (jnp.stack(self.emit_counts) if E
+                       else jnp.zeros((0, self.cfg.n_slots), jnp.float32))
+        state = AsyncState(self.agg.total, self.agg.counts, self.global_,
+                           self.version, self.pending)
+        return AsyncResult(globals_, emit_counts, state, self.stats,
+                           list(self.updates))
+
+
+def run_async_engine(cfg: EngineConfig, events: Iterable,
+                     prev_global: jnp.ndarray,
+                     weights: Optional[jnp.ndarray] = None,
+                     state: Optional[AsyncState] = None) -> AsyncResult:
+    """Drive one async demux call over an event stream (DESIGN.md §10).
+
+    With ``cfg.compile`` the stream routes through the compiled bulk
+    path (``engine_compiled.run_compiled_async``): one host demux pass
+    builds the stacked per-window drain schedule and the whole call —
+    every window's fold, every emit's divide — runs as one jitted
+    ``lax.scan``.  Outputs are bitwise identical to this eager engine
+    for exactly-representable payload sums (the differential harness,
+    tests/test_engine_async.py).
+    """
+    if cfg.buffer_size is None:
+        raise ValueError("async engine needs cfg.buffer_size")
+    if cfg.compile:
+        from repro.core.engine_compiled import run_compiled_async
+        return run_compiled_async(cfg, events, prev_global,
+                                  weights=weights, state=state)
+    engine = AsyncServerEngine(cfg, prev_global, weights=weights,
+                               state=state)
+    for packet, payload in events:
+        engine.rx(packet, payload)
+    return engine.finish()
+
+
+# ---------------------------------------------------------------------------
 # Stream generation: lossy / out-of-order / duplicated uplink traffic
 # ---------------------------------------------------------------------------
 
 def make_uplink_stream(rng: np.random.Generator, client_pk: jnp.ndarray,
                        *, loss_rate: float = 0.0, dup_rate: float = 0.0,
                        shuffle: bool = True,
-                       scales: Optional[jnp.ndarray] = None
+                       scales: Optional[jnp.ndarray] = None,
+                       versions: Optional[np.ndarray] = None
                        ) -> Tuple[list, jnp.ndarray]:
     """Build one round's interleaved uplink from packetized client state.
 
@@ -424,9 +754,16 @@ def make_uplink_stream(rng: np.random.Generator, client_pk: jnp.ndarray,
     numpy (two Bernoulli matrices + one permutation), so generating a
     large-K stream is event-list construction, not RNG calls in a
     per-(client, slot) double loop.
+
+    ``versions`` (K,) int stamps every packet of client ``c``'s session
+    with the global-version tag ``versions[c]`` (DESIGN.md §10): the
+    async server reads version-at-send from the START and measures
+    staleness at fold time.  Synchronous rounds leave it at 0.
     """
     K, N, _ = client_pk.shape
     pk_host = np.asarray(client_pk)
+    ver = (np.zeros(K, np.int64) if versions is None
+           else np.asarray(versions, np.int64))
     keep = (rng.random((K, N)) >= loss_rate if loss_rate > 0.0
             else np.ones((K, N), bool))
     dup_draw = (rng.random((K, N)) < dup_rate if dup_rate > 0.0
@@ -439,16 +776,20 @@ def make_uplink_stream(rng: np.random.Generator, client_pk: jnp.ndarray,
     if shuffle:
         perm = rng.permutation(cl.size)
         cl, sl = cl[perm], sl[perm]
-    events = [(Packet(Kind.START, c), None) for c in range(K)]
+    events = [(Packet(Kind.START, c, version=int(ver[c])), None)
+              for c in range(K)]
     if scales is None:
-        events += [(Packet(Kind.DATA, int(c), int(s)), pk_host[c, s])
+        events += [(Packet(Kind.DATA, int(c), int(s),
+                           version=int(ver[c])), pk_host[c, s])
                    for c, s in zip(cl.tolist(), sl.tolist())]
     else:
         sc_host = np.asarray(scales, np.float32)
         events += [(Packet(Kind.DATA, int(c), int(s), wire_dtype="q8",
-                           scale=float(sc_host[c, s])), pk_host[c, s])
+                           scale=float(sc_host[c, s]),
+                           version=int(ver[c])), pk_host[c, s])
                    for c, s in zip(cl.tolist(), sl.tolist())]
-    events += [(Packet(Kind.END, c), None) for c in range(K)]
+    events += [(Packet(Kind.END, c, version=int(ver[c])), None)
+               for c in range(K)]
     return events, jnp.asarray(keep.astype(np.float32))
 
 

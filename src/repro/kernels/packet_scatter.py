@@ -277,6 +277,51 @@ def packet_scatter_accum_q8_pallas(packets: jnp.ndarray,
       counts.astype(jnp.float32))
 
 
+def staleness_weights(weights: jnp.ndarray, staleness: jnp.ndarray,
+                      rows: jnp.ndarray | None = None, *,
+                      mode: str = "const", alpha: float = 0.5,
+                      norm_clip: float = 1.0,
+                      scales: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Per-packet effective FedAvg weight under async staleness
+    (DESIGN.md §10).
+
+    weights (...,) f32 base per-arrival weights; staleness (...,) f32
+    the update's ``version-at-fold − version-at-send`` (>= 0).  Modes:
+
+    - ``const``: ``w`` — FedBuff's unweighted buffer (staleness ignored).
+    - ``poly``:  ``w · (1 + s)^(-alpha)`` — polynomial decay, the
+      staleness correction of the FedBuff paper.
+    - ``norm``:  poly × ``clip / max(clip, ‖row‖₂)`` — FedNS-style norm
+      screening: a stale client whose update also grew large is damped
+      harder (its drift dominates), while small stale updates pass.
+      Needs ``rows`` (..., W); on the q8 wire pass ``scales`` (...,) so
+      the norm is taken over the *dequantized* payload the accumulator
+      actually sees.
+
+    Shape-polymorphic and elementwise (the norm reduces axis -1 only),
+    so the eager engine (per-window stacked arrays) and the compiled
+    scan body ((R, B) schedule slices) compute identical f32 ops — the
+    differential harness's bitwise claim covers the weighting too.
+    Inert schedule padding (weight 0) stays inert in every mode.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    if mode == "const":
+        return w
+    s = jnp.asarray(staleness, jnp.float32)
+    fac = (1.0 + s) ** jnp.float32(-alpha)
+    if mode == "poly":
+        return w * fac
+    if mode == "norm":
+        assert rows is not None, "norm weighting needs payload rows"
+        r = rows.astype(jnp.float32)
+        if scales is not None:
+            r = r * jnp.asarray(scales, jnp.float32)[..., None]
+        nrm = jnp.sqrt(jnp.sum(r * r, axis=-1))
+        clip = jnp.float32(norm_clip)
+        return w * fac * (clip / jnp.maximum(clip, nrm))
+    raise ValueError(f"unknown staleness mode {mode!r}")
+
+
 def packet_scatter_accum_batch_jnp(packets: jnp.ndarray, idx: jnp.ndarray,
                                    weights: jnp.ndarray, acc: jnp.ndarray,
                                    counts: jnp.ndarray, *,

@@ -1,7 +1,14 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any other import (jax locks the
-# device count at first init).  Everything below is normal code.
+if __name__ == "__main__":
+    # CLI runs need 512 virtual host devices, and the flag MUST be set
+    # before any other import (jax locks the device count at first
+    # init).  ``python -m repro.launch.dryrun`` executes this module
+    # with __name__ == "__main__" before anything imports jax, so the
+    # guard holds for the CLI — while a plain ``import
+    # repro.launch.dryrun`` (tests importing the HLO parser) no longer
+    # forces the device count on the whole process
+    # (tests/test_dryrun_parse.py asserts both import orderings).
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 

@@ -70,3 +70,64 @@ def test_single_depth_default():
     # without depth_trips, multipliers stop at the known depth (deeper
     # loops count once more — conservative, not multiplied again)
     assert out["all-gather"]["count"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Env hygiene: importing this module must NOT force the device count
+# ---------------------------------------------------------------------------
+# The dryrun CLI needs 512 virtual host devices and sets XLA_FLAGS at
+# module scope — but only under ``__name__ == "__main__"``.  A plain
+# import (this test file, anything reusing the HLO parser) must leave
+# the process's device count alone, in either import order relative to
+# jax; each ordering runs in a fresh subprocess because jax locks the
+# device count at first init.
+
+import os
+import subprocess
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_snippet(code: str) -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_import_dryrun_then_jax_keeps_one_device():
+    _run_snippet(
+        "import repro.launch.dryrun\n"
+        "import os, jax\n"
+        "assert 'XLA_FLAGS' not in os.environ, os.environ['XLA_FLAGS']\n"
+        "assert jax.device_count() == 1, jax.device_count()\n")
+
+
+def test_import_jax_then_dryrun_keeps_one_device():
+    _run_snippet(
+        "import jax\n"
+        "assert jax.device_count() == 1, jax.device_count()\n"
+        "import os\n"
+        "import repro.launch.dryrun\n"
+        "assert 'XLA_FLAGS' not in os.environ, os.environ['XLA_FLAGS']\n"
+        "assert jax.device_count() == 1, jax.device_count()\n")
+
+
+def test_dryrun_cli_still_forces_512_devices():
+    # ``python -m repro.launch.dryrun`` executes the module with
+    # __name__ == "__main__" before jax is imported, so the CLI keeps
+    # its 512 virtual devices; runpy reproduces that entry path
+    _run_snippet(
+        "import runpy, sys, os\n"
+        "sys.argv = ['dryrun', '--help']\n"
+        "try:\n"
+        "    runpy.run_module('repro.launch.dryrun', run_name='__main__')\n"
+        "except SystemExit:\n"
+        "    pass\n"
+        "assert 'device_count=512' in os.environ.get('XLA_FLAGS', '')\n"
+        "import jax\n"
+        "assert jax.device_count() == 512, jax.device_count()\n")

@@ -1,0 +1,477 @@
+"""Differential property-test harness for async buffered mode (DESIGN.md §10).
+
+Async mode has no bitwise round-oracle — there is no closed-form "right
+answer" for an arbitrary interleaving of sessions, losses, duplicates
+and emits — so the correctness story is the harness itself:
+
+1. **Differential**: the eager ``AsyncServerEngine`` (per-packet Python,
+   StreamingAggregator drains) and the compiled ``run_compiled_async``
+   (one host demux + one jitted lax.scan over emit windows) must agree
+   *bitwise* at every emitted global, on the carried accumulator state,
+   and on every stats counter — across arbitrary loss × dup × ooo ×
+   churn streams, buffer sizes, wire dtypes and shard counts.
+2. **Conservation**: every wire DATA packet is accounted exactly once
+   (accepted + duplicate + phase-dropped), every accepted update folds
+   at exactly one window, and the staleness histogram is reproducible
+   from the version tags replayed from the stream.
+3. **Degeneration**: with ``buffer_size = K``, zero churn and all
+   clients at version 0, one emit reproduces the synchronous
+   deadline-closed round bitwise (the PR 5 oracle); ``buffer_size = 1``
+   reduces to a serial per-update numpy oracle.
+
+Payloads are integer-valued so unweighted fold sums are exactly
+representable in f32 (the established bitwise methodology, DESIGN.md
+§3).  Poly weighting stays a bitwise claim even with non-dyadic
+(1+s)^-alpha factors because both implementations share one jnp
+weighting helper and replay the same ring batching — identical op
+sequence, identical rounding.  Norm weighting also holds bitwise for
+the same reason, but the test asserts allclose as the documented
+contract (its row norms give the implementations the most room to
+diverge if the shared-helper invariant is ever broken).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from _hypothesis_shim import given, settings, st
+from repro.core import engine_compiled as ec
+from repro.core.packets import packetize
+from repro.core.protocol import Kind, Packet
+from repro.core.rounds import make_async_stream, run_async_rounds, ChurnConfig
+from repro.core.server import (AsyncServerEngine, EngineConfig,
+                               make_uplink_stream, run_async_engine,
+                               run_engine_round)
+from repro.kernels.packet_scatter import staleness_weights
+
+K, P, W = 6, 200, 16
+BASE = dict(n_clients=K, n_params=P, payload=W, n_workers=3,
+            ring_capacity=4)
+
+
+def _flats(rng):
+    return jnp.asarray(rng.integers(-8, 9, (K, P)).astype(np.float32))
+
+
+def _packed(rng):
+    return jnp.stack([packetize(f, W) for f in _flats(rng)])
+
+
+def _q8_wire(rng):
+    """Integer int8 payloads with power-of-two scales: dequantized rows
+    are dyadic, so fold sums stay exactly representable."""
+    n_slots = -(-P // W)
+    q = jnp.asarray(rng.integers(-127, 128, (K, n_slots, W)), jnp.int8)
+    sc = jnp.asarray(2.0 ** rng.integers(-3, 1, (K, n_slots)), jnp.float32)
+    return q, sc
+
+
+def _waves(seed, *, n_waves=3, q8=False, churn=True, versions=None):
+    """Multi-wave session stream: per-wave participation churn, losses,
+    duplicates, reordering, per-client version tags."""
+    rng = np.random.default_rng(seed)
+    events = []
+    for t in range(n_waves):
+        ver = versions if versions is not None else rng.integers(0, 3, K)
+        sel = (rng.random(K) < 0.8) if churn else np.ones(K, bool)
+        open_ = (rng.random(K) < 0.15) if churn else np.zeros(K, bool)
+        if q8:
+            pk, sc = _q8_wire(rng)
+        else:
+            pk, sc = _packed(rng), None
+        ev, _ = make_async_stream(rng, pk, sel, ver, open_sessions=open_,
+                                  loss_rate=0.15, dup_rate=0.1, scales=sc)
+        events += ev
+    return events
+
+
+def _pair(B, *, mode="const", alpha=0.5, clip=1.0, shards=1, **kw):
+    eager = EngineConfig(**BASE, buffer_size=B, staleness_mode=mode,
+                         staleness_alpha=alpha, norm_clip=clip, **kw)
+    compiled = EngineConfig(**BASE, buffer_size=B, staleness_mode=mode,
+                            staleness_alpha=alpha, norm_clip=clip,
+                            compile=True, shards=shards, **kw)
+    return eager, compiled
+
+
+def _assert_bitwise(re_, rc, *, stats=True):
+    assert re_.globals_.shape == rc.globals_.shape
+    assert bool(jnp.all(re_.globals_ == rc.globals_))
+    assert bool(jnp.all(re_.emit_counts == rc.emit_counts))
+    assert bool(jnp.all(re_.state.global_ == rc.state.global_))
+    assert bool(jnp.all(re_.state.total == rc.state.total))
+    assert bool(jnp.all(re_.state.counts == rc.state.counts))
+    assert re_.state.version == rc.state.version
+    assert re_.state.pending == rc.state.pending
+    assert re_.updates == rc.updates
+    if stats:
+        assert re_.stats == rc.stats
+
+
+# ---------------------------------------------------------------------------
+# 1. Differential: eager == compiled, property-based
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B", [1, 4, 16])
+@pytest.mark.parametrize("q8", [False, True], ids=["f32", "q8"])
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_differential_bitwise(B, q8, seed):
+    """Arbitrary loss×dup×ooo×churn streams: every emitted global, the
+    carried state, the update log and every stats counter agree bitwise
+    between the eager fold and the compiled scan fold."""
+    events = _waves(seed, q8=q8)
+    rng = np.random.default_rng(seed + 1)
+    g0 = jnp.asarray(rng.integers(-8, 9, P).astype(np.float32))
+    ce, cc = _pair(B)
+    re_ = run_async_engine(ce, events, g0)
+    rc = run_async_engine(cc, events, g0)
+    _assert_bitwise(re_, rc)
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4, 8])
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_differential_bitwise_sharded(shards, seed):
+    """Shard matrix at B=16: any shard count folds bitwise identically
+    (per-window partial sums regroup only exactly-representable adds)."""
+    events = _waves(seed)
+    g0 = jnp.zeros(P, jnp.float32)
+    ce, cc = _pair(16, shards=shards)
+    re_ = run_async_engine(ce, events, g0)
+    rc = run_async_engine(cc, events, g0)
+    _assert_bitwise(re_, rc)
+
+
+def test_differential_bitwise_b64():
+    """B=64 needs more updates than one stream of 6 clients carries:
+    12 complete waves (zero churn) give 72 folds — one emit, residual 8."""
+    events = _waves(7, n_waves=12, churn=False)
+    g0 = jnp.zeros(P, jnp.float32)
+    ce, cc = _pair(64)
+    re_ = run_async_engine(ce, events, g0)
+    rc = run_async_engine(cc, events, g0)
+    assert re_.stats.updates_accepted == 72
+    assert re_.stats.emits == 1 and re_.state.pending == 8
+    _assert_bitwise(re_, rc)
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_differential_poly_bitwise(seed):
+    """Poly staleness weighting applied inside the compiled scan body is
+    bitwise the eager per-window weighting.  The claim is
+    implementation-equivalence, not representability: both sides compute
+    (1+s)^-alpha with the same shared jnp helper on the same f32 inputs
+    and fold through the same batching, so the op sequences are
+    identical even where the weighted products round.  B=1 ages every
+    later update (staleness = emits so far), so the weights actually
+    vary across the stream."""
+    rng = np.random.default_rng(seed)
+    events = []
+    for _ in range(3):
+        pk = _packed(rng)
+        ev, _ = make_async_stream(rng, pk, np.ones(K, bool),
+                                  np.zeros(K, np.int64),
+                                  loss_rate=0.1, dup_rate=0.1)
+        events += ev
+    g0 = jnp.zeros(P, jnp.float32)
+    ce, cc = _pair(1, mode="poly", alpha=1.0)
+    re_ = run_async_engine(ce, events, g0)
+    rc = run_async_engine(cc, events, g0)
+    assert max(u.staleness for u in re_.updates) > 0
+    _assert_bitwise(re_, rc)
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_differential_norm_allclose(seed):
+    """FedNS-style norm weighting: row norms (sqrt of a sum of squares)
+    are not exactly representable, so the differential claim relaxes to
+    allclose — still one shared jnp helper on both sides."""
+    events = _waves(seed, q8=True)
+    g0 = jnp.zeros(P, jnp.float32)
+    ce, cc = _pair(4, mode="norm", alpha=1.0, clip=8.0)
+    re_ = run_async_engine(ce, events, g0)
+    rc = run_async_engine(cc, events, g0)
+    assert re_.globals_.shape == rc.globals_.shape
+    np.testing.assert_allclose(np.asarray(re_.globals_),
+                               np.asarray(rc.globals_), rtol=1e-6,
+                               atol=1e-6)
+    assert re_.updates == rc.updates
+
+
+def test_state_carry_chains_bitwise():
+    """One call over wave1+wave2 == two chained calls with the carried
+    AsyncState: emit boundaries ignore call boundaries entirely."""
+    ev1 = _waves(21, n_waves=2)
+    ev2 = _waves(22, n_waves=1)
+    g0 = jnp.zeros(P, jnp.float32)
+    for cfg in _pair(5):
+        whole = run_async_engine(cfg, ev1 + ev2, g0)
+        p1 = run_async_engine(cfg, ev1, g0)
+        p2 = run_async_engine(cfg, ev2, g0, state=p1.state)
+        assert whole.stats.emits == p1.stats.emits + p2.stats.emits
+        both = jnp.concatenate([p1.globals_, p2.globals_])
+        assert bool(jnp.all(whole.globals_ == both))
+        assert bool(jnp.all(whole.state.global_ == p2.state.global_))
+        assert bool(jnp.all(whole.state.total == p2.state.total))
+        assert whole.state.version == p2.state.version
+        assert whole.state.pending == p2.state.pending
+
+
+# ---------------------------------------------------------------------------
+# 2. Conservation / accounting
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_conservation_every_data_packet_accounted(seed):
+    """accepted + duplicates + phase-dropped == wire DATA, and the
+    folded packets are exactly the accepted minus the in-flight."""
+    events = _waves(seed)
+    n_data = sum(1 for p, _ in events if p.kind is Kind.DATA)
+    n_ctrl = sum(1 for p, _ in events if p.kind is not Kind.DATA)
+    g0 = jnp.zeros(P, jnp.float32)
+    for cfg in _pair(4):
+        r = run_async_engine(cfg, events, g0)
+        s = r.stats
+        assert (s.data_enqueued + s.duplicates_dropped
+                + s.phase_dropped) == n_data
+        assert s.control_replies == n_ctrl
+        folded = sum(u.n_packets for u in r.updates)
+        assert folded == s.data_enqueued - s.data_in_flight
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_per_emit_fold_counts_sum_to_accepted_updates(seed):
+    """Every accepted update folds at exactly one window; emit windows
+    hold exactly B updates and the residual window holds ``pending``."""
+    events = _waves(seed)
+    B = 4
+    g0 = jnp.zeros(P, jnp.float32)
+    for cfg in _pair(B):
+        r = run_async_engine(cfg, events, g0)
+        per_window = {}
+        for u in r.updates:
+            per_window[u.window] = per_window.get(u.window, 0) + 1
+        assert sum(per_window.values()) == r.stats.updates_accepted
+        for w in range(r.stats.emits):
+            assert per_window.get(w, 0) == B
+        assert per_window.get(r.stats.emits, 0) == r.state.pending
+        # in const mode (weights 1) the per-emit fold counts equal the
+        # folded packets of that window
+        for e in range(r.stats.emits):
+            n_pkts = sum(u.n_packets for u in r.updates if u.window == e)
+            assert float(r.emit_counts[e].sum()) == float(n_pkts)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_staleness_histogram_matches_stream_replay(seed):
+    """The stats histogram is reproducible from the wire version tags:
+    an independent replay of the session grammar over the raw stream
+    yields the same (staleness -> count) map and the same per-update
+    tags, and every logged weight is recomputable from the log."""
+    events = _waves(seed)
+    B = 4
+    g0 = jnp.zeros(P, jnp.float32)
+    _, cc = _pair(B)
+    r = run_async_engine(cc, events, g0)
+    # independent replay: minimal session bookkeeping, no engine code
+    # (dedup is irrelevant to the histogram — only session opens/closes
+    # and emit boundaries matter)
+    up, ver = [False] * K, [0] * K
+    hist = {}
+    emits, pending = 0, 0
+    for p, _ in events:
+        c = p.client
+        if p.kind is Kind.START:
+            if not up[c]:
+                up[c], ver[c] = True, p.version
+        elif p.kind is Kind.END and up[c]:
+            up[c] = False
+            s = max(0, emits - ver[c])
+            hist[s] = hist.get(s, 0) + 1
+            pending += 1
+            if pending == B:
+                pending, emits = 0, emits + 1
+    assert r.stats.staleness_hist == hist
+    # the log reproduces the weights: staleness recomputed from the
+    # logged versions matches the logged staleness tag
+    for u in r.updates:
+        assert u.staleness == max(0, u.fold_version - u.version_sent)
+
+
+# ---------------------------------------------------------------------------
+# 3. Degeneration: ties to the synchronous oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("compile_", [False, True])
+def test_buffer_k_degenerates_to_sync_round(compile_):
+    """buffer_size=K, zero churn, all clients at version 0: one emit,
+    bitwise the synchronous deadline-closed round (the PR 5 oracle) —
+    same global, same counts."""
+    rng = np.random.default_rng(3)
+    flats = _flats(rng)
+    pk = jnp.stack([packetize(f, W) for f in flats])
+    g0 = jnp.asarray(np.random.default_rng(4)
+                     .integers(-8, 9, P).astype(np.float32))
+    events, _ = make_uplink_stream(np.random.default_rng(5), pk,
+                                   loss_rate=0.1, dup_rate=0.1)
+    sync_cfg = EngineConfig(**BASE, compile=True,
+                            round_deadline=2 ** 62)
+    sync = run_engine_round(sync_cfg, flats, g0, events)
+    acfg = EngineConfig(**BASE, buffer_size=K, compile=compile_)
+    r = run_async_engine(acfg, events, g0)
+    assert r.stats.emits == 1 and r.state.pending == 0
+    assert bool(jnp.all(r.globals_[0] == sync.new_global))
+    assert bool(jnp.all(r.emit_counts[0] == sync.counts))
+    assert bool(jnp.all(r.state.global_ == sync.new_global))
+    # the reset accumulator carries nothing
+    assert float(jnp.abs(r.state.total).max()) == 0.0
+
+
+def test_buffer_one_serial_numpy_oracle():
+    """buffer_size=1: every update emits alone.  With unit weights and
+    exact mode each emitted global is, slot by slot, either the single
+    client's packet value or the previous global — a pure numpy replay."""
+    rng = np.random.default_rng(11)
+    flats = np.asarray(_flats(rng))
+    pk = jnp.stack([packetize(jnp.asarray(f), W) for f in flats])
+    events, up = make_uplink_stream(np.random.default_rng(12), pk,
+                                    loss_rate=0.2, shuffle=True)
+    g0 = np.zeros(P, np.float32)
+    for cfg in _pair(1):
+        r = run_async_engine(cfg, events, jnp.asarray(g0))
+        assert r.stats.emits == K
+        g = g0.copy()
+        up_host = np.asarray(up)
+        # emits happen in END order — make_uplink_stream ENDs clients
+        # in index order
+        for e, u in enumerate(r.updates):
+            c = u.client
+            elem = np.repeat(up_host[c], W)[:P].astype(bool)
+            g = np.where(elem, flats[c], g)
+            np.testing.assert_array_equal(np.asarray(r.globals_[e]), g)
+
+
+# ---------------------------------------------------------------------------
+# 4. Session grammar + config validation + weighting unit tests
+# ---------------------------------------------------------------------------
+
+def test_session_grammar_dedup_and_phase_rules():
+    """Duplicate START keeps the session (no reset); DATA outside a
+    session is phase-dropped; per-session dedup forgets earlier
+    sessions; END outside a session is grace-acked only."""
+    row = np.ones(W, np.float32)
+    cfg, _ = _pair(10)
+    g0 = jnp.zeros(P, jnp.float32)
+    eng = AsyncServerEngine(cfg, g0)
+    assert eng.rx(Packet(Kind.DATA, 0, 0), row) == []      # before START
+    assert eng.stats.phase_dropped == 1
+    eng.rx(Packet(Kind.START, 0, version=2))
+    eng.rx(Packet(Kind.DATA, 0, 0), row)
+    eng.rx(Packet(Kind.START, 0, version=9))               # dup START
+    eng.rx(Packet(Kind.DATA, 0, 0), row)                   # dup DATA
+    assert eng.stats.duplicates_dropped == 1
+    eng.rx(Packet(Kind.END, 0))
+    assert eng.updates[-1].version_sent == 2               # no reset
+    assert eng.updates[-1].n_packets == 1
+    eng.rx(Packet(Kind.END, 0))                            # dup END
+    assert eng.stats.updates_accepted == 1
+    # second session of the same client: dedup set is fresh
+    eng.rx(Packet(Kind.START, 0, version=3))
+    eng.rx(Packet(Kind.DATA, 0, 0), row)
+    eng.rx(Packet(Kind.END, 0))
+    assert eng.stats.updates_accepted == 2
+    assert eng.updates[-1].session == 1
+    r = eng.finish()
+    assert r.stats.control_replies == 6
+
+
+def test_engine_config_async_validation():
+    with pytest.raises(ValueError):
+        EngineConfig(**BASE, buffer_size=0)
+    with pytest.raises(ValueError):
+        EngineConfig(**BASE, buffer_size=4, round_deadline=100)
+    with pytest.raises(ValueError):
+        EngineConfig(**BASE, buffer_size=4, min_clients=2)
+    with pytest.raises(ValueError):
+        EngineConfig(**BASE, staleness_mode="linear")
+    with pytest.raises(ValueError):
+        EngineConfig(**BASE, staleness_alpha=-1.0)
+    with pytest.raises(ValueError):
+        EngineConfig(**BASE, norm_clip=0.0)
+    with pytest.raises(ValueError):
+        run_async_engine(EngineConfig(**BASE), [], jnp.zeros(P))
+
+
+def test_staleness_weights_modes():
+    w = jnp.ones(4, jnp.float32)
+    s = jnp.asarray([0.0, 1.0, 3.0, 7.0])
+    rows = jnp.ones((4, 8), jnp.float32) * 2.0
+    np.testing.assert_array_equal(
+        np.asarray(staleness_weights(w, s, mode="const")), np.ones(4))
+    np.testing.assert_array_equal(
+        np.asarray(staleness_weights(w, s, mode="poly", alpha=1.0)),
+        [1.0, 0.5, 0.25, 0.125])
+    # norm: ||row|| = sqrt(8)*2 ≈ 5.657; clip=2 damps by 2/5.657
+    out = staleness_weights(w, s, rows=rows, mode="norm", alpha=0.0,
+                            norm_clip=2.0)
+    np.testing.assert_allclose(np.asarray(out),
+                               2.0 / (2.0 * np.sqrt(8.0)), rtol=1e-6)
+    # q8: the norm sees the dequantized rows
+    q = jnp.ones((4, 8), jnp.int8) * 4
+    sc = jnp.full((4,), 0.5, jnp.float32)
+    out_q = staleness_weights(w, s, rows=q, scales=sc, mode="norm",
+                              alpha=0.0, norm_clip=2.0)
+    np.testing.assert_allclose(np.asarray(out_q),
+                               2.0 / (2.0 * np.sqrt(8.0)), rtol=1e-6)
+    with pytest.raises(ValueError):
+        staleness_weights(w, s, mode="bogus")
+
+
+# ---------------------------------------------------------------------------
+# 5. Driver: waves, in-flight sessions, staleness growth
+# ---------------------------------------------------------------------------
+
+def test_open_sessions_stay_in_flight():
+    rng = np.random.default_rng(31)
+    pk = _packed(rng)
+    open_ = np.zeros(K, bool)
+    open_[2] = True
+    events, _ = make_async_stream(np.random.default_rng(32), pk,
+                                  np.ones(K, bool), np.zeros(K, np.int64),
+                                  open_sessions=open_)
+    assert not any(p.kind is Kind.END and p.client == 2
+                   for p, _ in events)
+    g0 = jnp.zeros(P, jnp.float32)
+    for cfg in _pair(K):
+        r = run_async_engine(cfg, events, g0)
+        assert r.stats.updates_in_flight == 1
+        assert r.stats.updates_accepted == K - 1
+        assert r.stats.data_in_flight > 0
+        assert not any(u.client == 2 for u in r.updates)
+
+
+def test_run_async_rounds_staleness_grows_for_slow_clients():
+    """Slow clients never refresh: their version-at-send stays 0 while
+    the server version climbs, so their logged staleness grows."""
+    rng = np.random.default_rng(41)
+    flats = _flats(rng)
+    cfg = EngineConfig(**BASE, buffer_size=3, compile=True)
+    churn = ChurnConfig(participation=1.0)
+    slow = np.zeros(K, bool)
+    slow[0] = True
+    hist = run_async_rounds(cfg, churn, flats, jnp.zeros(P, jnp.float32),
+                            4, rng=np.random.default_rng(42),
+                            slow_clients=slow)
+    assert hist.state.version > 0
+    slow_stal = [u.staleness for r in hist.results for u in r.updates
+                 if u.client == 0]
+    fast_stal = [u.staleness for r in hist.results for u in r.updates
+                 if u.client == 1]
+    assert max(slow_stal) > max(fast_stal)
+    assert hist.emitted_globals.shape[0] == hist.state.version

@@ -265,7 +265,7 @@ def test_q8_schedule_stays_int8_end_to_end():
         eng.rx(pkt, pay)
     assert all(eng._pend_q8)
     # sharding carries the scale column alongside the weights
-    idx, w, pk, scs = ec.shard_schedule(sched, 4)
+    idx, w, pk, scs, _ = ec.shard_schedule(sched, 4)
     assert pk.dtype == np.int8 and scs is not None
     assert scs.shape == w.shape
     # and the f32 path still reports no scales

@@ -151,7 +151,7 @@ def test_shard_schedule_is_a_partition(shards):
     """Every live batch lands exactly once, on the shard that owns its
     worker ring; padding rows/shards are inert."""
     sched = _demuxed_schedule()
-    idx, w, pk, _ = ec.shard_schedule(sched, shards)
+    idx, w, pk, _, _ = ec.shard_schedule(sched, shards)
     assert idx.shape[0] == shards
     # live (slot, weight) entries are conserved: multiset of scheduled
     # arrivals is identical before and after the demux
@@ -181,7 +181,7 @@ def test_shard_schedule_more_shards_than_workers():
     """shards > n_workers leaves the excess shards inert (the effective
     parallelism floor documented on EngineConfig.shards)."""
     sched = _demuxed_schedule(n_workers=2)
-    idx, w, pk, _ = ec.shard_schedule(sched, 8)
+    idx, w, pk, _, _ = ec.shard_schedule(sched, 8)
     for s in range(2, 8):
         assert (idx[s] == -1).all() and (w[s] == 0).all()
 
@@ -190,7 +190,7 @@ def test_shard_schedule_empty_round():
     sched = ec.build_drain_schedule(
         np.zeros(0, np.int32), np.zeros(0, np.float32),
         np.zeros((0, 16), np.float32), n_workers=3, ring_capacity=4)
-    idx, w, pk, _ = ec.shard_schedule(sched, 4)
+    idx, w, pk, _, _ = ec.shard_schedule(sched, 4)
     assert (idx == -1).all() and (w == 0).all() and (pk == 0).all()
 
 

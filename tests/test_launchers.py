@@ -12,8 +12,10 @@ def _run(args, timeout=900):
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
     env["JAX_PLATFORMS"] = "cpu"
-    # importing repro.launch.dryrun anywhere in the pytest process sets
-    # XLA_FLAGS=...device_count=512; launcher subprocesses must see 1 device
+    # importing repro.launch.dryrun no longer mutates XLA_FLAGS (the
+    # 512-device forcing is __main__-guarded now), but the pytest
+    # process may still inherit one from CI; launcher subprocesses must
+    # see 1 device
     env.pop("XLA_FLAGS", None)
     return subprocess.run([sys.executable, "-m"] + args, env=env,
                           capture_output=True, text=True, timeout=timeout)

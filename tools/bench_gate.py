@@ -16,7 +16,8 @@ is gated on both throughput axes the moment its rows land in a
 baseline.
 
 Matching is strict: rows pair up only when every config key — k, mode,
-engine, shards, n_params, payload, ring_capacity — is identical, so a
+engine, shards, n_params, payload, ring_capacity, buffer_size — is
+identical, so a
 quick-mode run never gets compared against a full-size baseline; rows
 present on one side only are reported and skipped.  Speedups are fine;
 only drops gate.
@@ -61,8 +62,10 @@ BASELINE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
 DEFAULT_FILES = ("BENCH_engine.json", "BENCH_shard.json",
                  "BENCH_rounds.json")
 # config keys that must match exactly for two rows to be comparable
+# (absent keys compare as None, so rows without e.g. shards or
+# buffer_size still pair up across schema growth)
 KEY_FIELDS = ("k", "mode", "engine", "shards", "n_params", "payload",
-              "ring_capacity")
+              "ring_capacity", "buffer_size")
 
 
 def _row_key(row: dict):
