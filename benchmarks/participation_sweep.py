@@ -22,15 +22,31 @@ families land in ``BENCH_rounds.json``:
   unweighted (``const``) staleness damage, and ``poly``
   staleness-weighted — with ``stale_recovered`` measuring how much of
   the const drop the weighting wins back (acceptance: ≥ 0.5).
+- ``kind="attack"``: the Byzantine attack sweep (EXPERIMENTS.md
+  §Attack-sweep).  Two sub-families share the schema:
+  ``family="model_error"`` (quick, no training) drives static client
+  states through attacked churn rounds and measures the served global's
+  relative error against the honest mean — per attacker model × robust
+  ``agg_mode``, with ``attack_recovered`` = the fraction of the
+  mean-mode error the robust finalize wins back (acceptance ≥ 0.5,
+  carried as an in-file ``accept`` bound bench_gate checks);
+  ``family="cnn_accuracy"`` (full only) repeats the measurement with
+  the reduced paper CNN trained end-to-end under a boosted-scale
+  poisoner, recovering test accuracy instead of parameter error.
 - ``kind="throughput"``: the churn driver itself (overlapped
   ``run_compiled_rounds`` path: per-round stream generation + demux +
   one compiled dispatch per round) in pkts/s.  The row carries the
   bench_gate config keys (``engine="compiled_churn"``), so
   ``tools/bench_gate.py`` holds it against
-  ``benchmarks/baselines/BENCH_rounds.json`` in CI.
+  ``benchmarks/baselines/BENCH_rounds.json`` in CI.  A second row
+  repeats the measurement with ``agg_mode="trimmed_mean"`` (the robust
+  table fold + fused rank-select finalize) and reports
+  ``slowdown_vs_exact`` measured against the mean row **in the same
+  run** — acceptance ≤ 2.5x, also an in-file ``accept`` bound.
 
-``--quick`` keeps only the throughput row (the CI smoke): the accuracy
-sweep trains 4 CNN runs and is a local/full artifact.
+``--quick`` keeps the throughput pair and the model-error attack rows
+(the CI smoke): the CNN families train many runs and are local/full
+artifacts.
 
 Usage:
     python benchmarks/participation_sweep.py [--quick]
@@ -251,16 +267,149 @@ def async_accuracy_rows(seed: int = 0):
     return out
 
 
-def throughput_row(quick: bool = False):
+# --- attack sweep (EXPERIMENTS.md §Attack-sweep) --------------------------
+ATTACK_F = 2                 # Byzantine clients (the first ids)
+ATTACK_BOOST_CNN = 10.0      # scale-attack boost for the CNN family
+ATTACK_BOOST_QUICK = 1e3     # model-error family: make mean's break huge
+ATTACK_BETA = 0.25           # trim depth floor(0.25 m) >= f for m >= 8
+ATTACK_TAU = 50.0            # norm_clip ball sized to the honest rows
+ATTACK_ROUNDS_QUICK = 2
+ATTACK_RECOVER_MIN = 0.5     # acceptance: robust wins back >= half
+ATTACK_SLOWDOWN_MAX = 2.5    # acceptance: robust round <= 2.5x mean's
+
+
+def _attack_cfg(K, P, agg):
+    from repro.core.server import EngineConfig
+    return EngineConfig(n_clients=K, n_params=P, payload=64,
+                        ring_capacity=2, compile=True, agg_mode=agg,
+                        trim_beta=ATTACK_BETA, clip_tau=ATTACK_TAU)
+
+
+def attack_model_error_rows(seed: int = 0):
+    """Quick attack family: static integer client states through
+    attacked churn rounds, no training.  The honest target is the mean
+    of the clients' TRUE states (what an unattacked mean round serves);
+    ``attack_recovered`` is the fraction of mean-mode error the robust
+    finalize removes: (err_mean - err_robust) / (err_mean - err_clean).
+
+    ``norm_clip`` only appears under the magnitude attack — a sign-flip
+    preserves norms, so clipping cannot (and is not expected to) help.
+    The honest states are positive-valued so a sign-flip is a genuine
+    coordinate-wise outlier (on zero-symmetric data a flipped update is
+    distributed like an honest one and NO aggregator can tell them
+    apart — rank trimming included).
+    """
+    from repro.core.rounds import (AttackConfig, ChurnConfig,
+                                   run_churn_rounds)
+
+    K, P = 10, 4096
+    rng = np.random.default_rng(seed)
+    flats = jnp.asarray(rng.integers(1, 9, (K, P)).astype(np.float32))
+    target = np.asarray(flats).mean(axis=0)
+    tnorm = np.linalg.norm(target)
+    churn = ChurnConfig(participation=1.0, loss_rate=LOSS_RATE,
+                        dup_rate=DUP_RATE)
+
+    def err(agg, attack):
+        hist = run_churn_rounds(
+            _attack_cfg(K, P, agg), churn, flats,
+            jnp.zeros((P,), jnp.float32), ATTACK_ROUNDS_QUICK,
+            rng=np.random.default_rng(seed + 1), attack=attack)
+        g = np.asarray(hist.final_global)
+        return float(np.linalg.norm(g - target) / tnorm)
+
+    out = []
+    sweep = (("scale", ("trimmed_mean", "median", "norm_clip")),
+             ("sign_flip", ("trimmed_mean", "median")))
+    clean = {agg: err(agg, None)
+             for agg in ("mean", "trimmed_mean", "median", "norm_clip")}
+    for model, aggs in sweep:
+        att = AttackConfig(model=model, n_attackers=ATTACK_F,
+                           boost=ATTACK_BOOST_QUICK)
+        err_mean = err("mean", att)
+        for agg in aggs:
+            e = err(agg, att)
+            # fraction of the attack-induced EXCESS error removed: each
+            # estimator has its own clean noise floor (a median of 10
+            # is noisier than their mean with zero attackers), so the
+            # recovery is measured above that floor, not above mean's
+            rec = (err_mean - e) / (err_mean - clean[agg])
+            out.append({
+                "kind": "attack", "family": "model_error",
+                "attack": model, "agg_mode": agg,
+                "n_attackers": ATTACK_F, "k": K, "n_params": P,
+                "boost": (ATTACK_BOOST_QUICK if model == "scale"
+                          else None),
+                "trim_beta": ATTACK_BETA, "clip_tau": ATTACK_TAU,
+                "rounds": ATTACK_ROUNDS_QUICK,
+                "err_clean_mean": clean["mean"],
+                "err_clean_robust": clean[agg],
+                "err_attacked_mean": err_mean,
+                "err_robust": e, "attack_recovered": rec,
+                "accept": {"metric": "attack_recovered",
+                           "min": ATTACK_RECOVER_MIN},
+            })
+            print(f"attack {model:9s} {agg:12s}: err {err_mean:8.3f} -> "
+                  f"{e:7.3f} (floor {clean[agg]:.3f}, "
+                  f"recovered {rec:.2f})")
+    return out
+
+
+def attack_accuracy_rows(rounds: int = ACC_ROUNDS, seed: int = 0):
+    """Full attack family: the reduced paper CNN trained end-to-end
+    with a boosted-scale poisoner on the wire; ``attack_recovered``
+    recovers *test accuracy* instead of parameter error."""
+    from repro.core.rounds import (AttackConfig, ChurnConfig,
+                                   run_churn_rounds)
+
+    flat0, train_all, test_acc, K = _cnn_problem(seed, rounds)
+    P = flat0.shape[0]
+    churn = ChurnConfig(participation=1.0, loss_rate=LOSS_RATE,
+                        dup_rate=DUP_RATE, down_loss_rate=LOSS_RATE)
+    att = AttackConfig(model="scale", n_attackers=ATTACK_F,
+                       boost=ATTACK_BOOST_CNN)
+
+    def run(agg, attack):
+        hist = run_churn_rounds(
+            _attack_cfg(K, P, agg), churn,
+            jnp.tile(flat0[None], (K, 1)), flat0, rounds,
+            rng=np.random.default_rng(seed + 1),
+            train_fn=lambda flats, r: train_all(flats, r), attack=attack)
+        return test_acc(hist.final_global)
+
+    acc_clean, _ = run("mean", None)
+    acc_att, _ = run("mean", att)
+    drop = acc_clean - acc_att
+    out = []
+    for agg in ("trimmed_mean", "median"):
+        acc, loss = run(agg, att)
+        rec = (acc - acc_att) / drop if drop > 1e-3 else None
+        out.append({
+            "kind": "attack", "family": "cnn_accuracy",
+            "attack": "scale", "agg_mode": agg,
+            "n_attackers": ATTACK_F, "boost": ATTACK_BOOST_CNN,
+            "trim_beta": ATTACK_BETA, "rounds": rounds,
+            "final_acc": acc, "final_loss": loss,
+            "acc_clean_mean": acc_clean, "acc_attacked_mean": acc_att,
+            "attack_recovered": rec,
+            "accept": {"metric": "attack_recovered",
+                       "min": ATTACK_RECOVER_MIN},
+        })
+        print(f"attack cnn scale x{ATTACK_BOOST_CNN:.0f} {agg:12s}: "
+              f"acc {acc_att:.3f} -> {acc:.3f} (clean {acc_clean:.3f}, "
+              f"recovered {'n/a' if rec is None else f'{rec:.2f}'})")
+    return out
+
+
+def throughput_rows(quick: bool = False):
     """The churn driver (stream gen + demux + compiled dispatch per
-    round, overlapped) — the bench_gate-gated row."""
+    round, overlapped) — the bench_gate-gated rows: the exact-mean row,
+    then the robust trimmed-mean row with ``slowdown_vs_exact``
+    measured against it in the same run (acceptance ≤ 2.5x)."""
     from repro.core.rounds import ChurnConfig, run_churn_rounds
     from repro.core.server import EngineConfig
 
     n_params = TP_PARAMS_QUICK if quick else TP_PARAMS_FULL
-    cfg = EngineConfig(n_clients=TP_K, n_params=n_params,
-                       payload=TP_PAYLOAD, ring_capacity=TP_RING,
-                       compile=True)
     churn = ChurnConfig(participation=0.9, straggle_rate=0.1,
                         loss_rate=0.01, dup_rate=0.02)
     rng = np.random.default_rng(0)
@@ -268,42 +417,66 @@ def throughput_row(quick: bool = False):
                         .astype(np.float32))
     prev = jnp.zeros((n_params,), jnp.float32)
 
-    def one():
-        t0 = time.perf_counter()
-        hist = run_churn_rounds(cfg, churn, flats, prev, TP_ROUNDS,
-                                rng=np.random.default_rng(1))
-        dt = (time.perf_counter() - t0) / TP_ROUNDS
-        pkts = sum(r.stats.data_enqueued for r in hist.results) / TP_ROUNDS
-        return dt, pkts
+    def measure(agg):
+        cfg = EngineConfig(n_clients=TP_K, n_params=n_params,
+                           payload=TP_PAYLOAD, ring_capacity=TP_RING,
+                           compile=True, agg_mode=agg,
+                           trim_beta=ATTACK_BETA)
 
-    one()                                       # warmup: jit trace
-    dt, pkts = min((one() for _ in range(3)), key=lambda x: x[0])
-    row = {
-        "kind": "throughput", "k": TP_K, "mode": "exact",
-        "engine": "compiled_churn", "n_params": n_params,
-        "payload": TP_PAYLOAD, "ring_capacity": TP_RING,
-        "rounds": TP_ROUNDS, "participation": churn.participation,
-        "straggle_rate": churn.straggle_rate,
-        "packets": pkts, "round_s": dt, "pkts_per_s": pkts / dt,
-        "interpret": jax.default_backend() != "tpu",
-    }
-    print(f"churn driver K={TP_K} {dt*1e3:8.2f} ms/round "
-          f"{row['pkts_per_s']/1e3:8.1f} kpkt/s "
-          f"({row['participation']:.0%} participation, "
-          f"{row['straggle_rate']:.0%} straggle)")
-    return row
+        def one():
+            t0 = time.perf_counter()
+            hist = run_churn_rounds(cfg, churn, flats, prev, TP_ROUNDS,
+                                    rng=np.random.default_rng(1))
+            dt = (time.perf_counter() - t0) / TP_ROUNDS
+            pkts = (sum(r.stats.data_enqueued for r in hist.results)
+                    / TP_ROUNDS)
+            return dt, pkts
+
+        one()                                   # warmup: jit trace
+        return min((one() for _ in range(3)), key=lambda x: x[0])
+
+    rows = []
+    for agg in ("mean", "trimmed_mean"):
+        dt, pkts = measure(agg)
+        row = {
+            "kind": "throughput", "k": TP_K, "mode": "exact",
+            "engine": "compiled_churn", "n_params": n_params,
+            "payload": TP_PAYLOAD, "ring_capacity": TP_RING,
+            "rounds": TP_ROUNDS, "participation": churn.participation,
+            "straggle_rate": churn.straggle_rate,
+            "packets": pkts, "round_s": dt, "pkts_per_s": pkts / dt,
+            "interpret": jax.default_backend() != "tpu",
+        }
+        if agg == "trimmed_mean":
+            row["agg_mode"] = agg
+            row["trim_beta"] = ATTACK_BETA
+            row["slowdown_vs_exact"] = dt / rows[0]["round_s"]
+            row["accept"] = {"metric": "slowdown_vs_exact",
+                             "max": ATTACK_SLOWDOWN_MAX}
+        rows.append(row)
+        tag = f" [{agg}]" if agg != "mean" else ""
+        print(f"churn driver K={TP_K}{tag} {dt*1e3:8.2f} ms/round "
+              f"{row['pkts_per_s']/1e3:8.1f} kpkt/s "
+              f"({row['participation']:.0%} participation, "
+              f"{row['straggle_rate']:.0%} straggle)")
+    print(f"robust trimmed-mean round: "
+          f"{rows[1]['slowdown_vs_exact']:.2f}x the exact-mean round")
+    return rows
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="throughput row only (CI smoke; skips the CNN "
-                         "accuracy sweep)")
+                    help="throughput pair + model-error attack rows "
+                         "only (CI smoke; skips the CNN sweeps)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    rows = [] if args.quick else accuracy_rows() + async_accuracy_rows()
-    rows.append(throughput_row(quick=args.quick))
+    rows = ([] if args.quick
+            else accuracy_rows() + async_accuracy_rows()
+            + attack_accuracy_rows())
+    rows += attack_model_error_rows()
+    rows += throughput_rows(quick=args.quick)
     result = {
         "bench": "participation_rounds",
         "backend": jax.default_backend(),

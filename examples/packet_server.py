@@ -37,6 +37,16 @@ payload bytes on the wire, the dequantize fused into the compiled
 drain scan — and verifies the q8 round is *bitwise identical* to
 decoding the wire bytes on the host and running the f32 engine.
 
+``--attack MODEL --agg MODE`` runs the Byzantine demo (DESIGN.md §11):
+the same lossy round with MODEL poisoners on the wire (``sign_flip``,
+``scale``, ``nan``) served twice — once through the plain mean, once
+through the robust finalize (``trimmed_mean`` / ``median`` /
+``norm_clip``) — printing each global's error against the honest mean,
+and verifying the robust round is *bitwise identical* between the
+eager table engine and the compiled combined-index fold.  NaN
+poisoners exercise the malformed wire guard instead: the packets are
+dropped and counted before any accumulator sees them.
+
 ``--async [B]`` kills the round barrier entirely (DESIGN.md §10):
 client sessions interleave freely across waves, the server folds each
 update at its END and emits a new staleness-weighted global every B
@@ -46,6 +56,7 @@ global (composable with ``--shards``).
 
 Run:  PYTHONPATH=src python examples/packet_server.py [--compile]
         [--shards N] [--deadline [N]] [--churn] [--int8] [--async [B]]
+        [--attack MODEL] [--agg MODE]
 """
 import argparse
 
@@ -172,6 +183,54 @@ def int8_demo(args):
         assert same, "q8 round diverged from its host-decoded twin"
 
 
+def attack_demo(args):
+    """Byzantine-robust aggregation demo (DESIGN.md §11): the same
+    poisoned round served through the plain mean and through the robust
+    finalize, with the eager-vs-compiled bitwise check on both."""
+    from repro.core.rounds import AttackConfig, apply_attack
+
+    K, P, W = 10, 4096, 64
+    f = 2                                  # Byzantine clients
+    rng = np.random.default_rng(0)
+    # positive-valued honest updates: a sign-flip is then a genuine
+    # coordinate-wise outlier (on zero-symmetric data a flipped update
+    # is distributed like an honest one and nothing can tell them apart)
+    flats = jnp.asarray(rng.integers(1, 9, (K, P)).astype(np.float32))
+    prev = jnp.zeros((P,), jnp.float32)
+    pk = jax.vmap(lambda fl: packetize(fl, W))(flats)
+    att = AttackConfig(model=args.attack, n_attackers=f, boost=1e3,
+                       nan_rate=0.25)
+    pk_att = apply_attack(rng, pk, att)
+    events, _ = make_uplink_stream(rng, pk_att, loss_rate=0.0468,
+                                   dup_rate=0.05)
+    honest = np.asarray(flats).mean(axis=0)
+    hnorm = np.linalg.norm(honest)
+    print(f"\n== Byzantine round: {f}/{K} x {args.attack} attackers, "
+          f"agg_mode={args.agg} (DESIGN.md §11) ==")
+    for agg in ("mean", args.agg):
+        kw = dict(n_clients=K, n_params=P, payload=W, ring_capacity=64,
+                  agg_mode=agg, trim_beta=0.25, clip_tau=50.0)
+        re_ = run_engine_round(EngineConfig(**kw), flats, prev, events)
+        rc = run_engine_round(EngineConfig(**kw, compile=True,
+                                           shards=args.shards),
+                              flats, prev, events)
+        same = (np.array_equal(np.asarray(re_.new_global),
+                               np.asarray(rc.new_global))
+                and np.array_equal(np.asarray(re_.counts),
+                                   np.asarray(rc.counts))
+                and re_.stats == rc.stats)
+        err = float(np.linalg.norm(np.asarray(rc.new_global) - honest)
+                    / hnorm)
+        s = rc.stats
+        extra = (f", {s.malformed_dropped} malformed dropped at the "
+                 f"wire" if s.malformed_dropped else "")
+        print(f"  {agg:12s}: global error vs honest mean = {err:9.3f}"
+              f"{extra}; eager == compiled bitwise: {same}")
+        assert same, f"{agg} round diverged between eager and compiled"
+        assert np.isfinite(np.asarray(rc.new_global)).all(), \
+            "non-finite global escaped the wire guard"
+
+
 def async_demo(args):
     """Async buffered mode (DESIGN.md §10): no round barrier — sessions
     interleave across waves, the server emits a new global every B
@@ -253,9 +312,22 @@ def main():
                     help="async buffered-aggregation demo: emit a new "
                          "global every B folded updates, staleness-"
                          "weighted, no round barrier (DESIGN.md §10)")
+    ap.add_argument("--attack", choices=["sign_flip", "scale", "nan"],
+                    default=None, metavar="MODEL",
+                    help="Byzantine demo: poison 2/10 clients with "
+                         "MODEL and serve the round with and without "
+                         "the robust finalize (DESIGN.md §11)")
+    ap.add_argument("--agg", choices=["trimmed_mean", "median",
+                                      "norm_clip"],
+                    default="trimmed_mean", metavar="MODE",
+                    help="robust agg_mode for the --attack demo "
+                         "(default: trimmed_mean)")
     args = ap.parse_args()
     if args.shards > 1:
         args.compile = True
+    if args.attack is not None:
+        attack_demo(args)
+        return
     if args.async_b is not None:
         async_demo(args)
         return

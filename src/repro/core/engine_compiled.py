@@ -66,10 +66,13 @@ from repro.core.protocol import Kind
 from repro.core.server import (AsyncResult, AsyncState, AsyncStats,
                                EngineConfig, EngineStats, QuorumError,
                                RoundResult, UpdateRecord,  # noqa: F401
-                               check_quorum)
-from repro.kernels.packet_scatter import (BLOCK_PKTS,
+                               check_quorum, payload_malformed)
+from repro.kernels.packet_scatter import (BLOCK_PKTS, norm_clip_weights,
                                           packet_scatter_accum_scan,
                                           packet_scatter_accum_sharded,
+                                          packet_table_scatter,
+                                          robust_finalize_jnp,
+                                          robust_finalize_pallas,
                                           staleness_weights)
 from repro.runtime.sharding import worker_ctx
 
@@ -119,6 +122,11 @@ class DrainSchedule:
                                            # update age at fold time
                                            # (DESIGN.md §10); None on
                                            # synchronous rounds
+    clients: Optional[np.ndarray] = None   # (n_rows, B) int32 sender per
+                                           # packet (-1 inert) — the
+                                           # robust table modes' combined
+                                           # index needs it (DESIGN.md
+                                           # §11); None when untracked
 
 
 def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
@@ -127,7 +135,8 @@ def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
                          block_pkts: int = BLOCK_PKTS,
                          pad_batches: int = 8,
                          scales: Optional[np.ndarray] = None,
-                         staleness: Optional[np.ndarray] = None
+                         staleness: Optional[np.ndarray] = None,
+                         clients: Optional[np.ndarray] = None
                          ) -> DrainSchedule:
     """Vectorized replay of the eager engine's ring demux.
 
@@ -161,7 +170,9 @@ def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
                              None if scales is None
                              else np.zeros((1, B), np.float32),
                              None if staleness is None
-                             else np.zeros((1, B), np.float32))
+                             else np.zeros((1, B), np.float32),
+                             None if clients is None
+                             else np.full((1, B), -1, np.int32))
     if ring_assign == "slot":
         worker = slots.astype(np.int64) % n_workers
     else:
@@ -203,9 +214,13 @@ def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
     if staleness is not None:
         st = np.zeros((n_rows, B), np.float32)
         st[row, col] = staleness
+    cl = None
+    if clients is not None:
+        cl = np.full((n_rows, B), -1, np.int32)
+        cl[row, col] = clients
     row_worker = np.full(n_rows, -1, np.int64)
     row_worker[rank] = uniq // (n + 1)            # batch key -> its worker
-    return DrainSchedule(idx, w, pk, int(nb), n, row_worker, sc, st)
+    return DrainSchedule(idx, w, pk, int(nb), n, row_worker, sc, st, cl)
 
 
 def shard_schedule(sched: DrainSchedule, n_shards: int, *,
@@ -377,7 +392,7 @@ def demux_events(cfg: EngineConfig, events: Iterable,
             np.zeros(0, np.int32), np.zeros(0, np.float32),
             np.zeros((0, cfg.payload), np.float32),
             n_workers=cfg.n_workers, ring_capacity=cfg.ring_capacity,
-            ring_assign=cfg.ring_assign)
+            ring_assign=cfg.ring_assign, clients=np.zeros(0, np.int32))
         return sched, stats, up
     dc = np.asarray(d_c, np.int64)
     ds = np.asarray(d_s, np.int64)
@@ -386,10 +401,33 @@ def demux_events(cfg: EngineConfig, events: Iterable,
     # before the FSM gate); pre-deadline DATA outside its client's
     # START..END frame is phase-dropped as before
     pre = dp < cut
-    frame_ok = (dp > first_start[dc]) & (dp < first_end[dc])
-    phase_ok = pre & frame_ok
     stats.late_dropped = int(np.sum(~pre))
-    stats.phase_dropped = int(np.sum(pre & ~frame_ok))
+    # wire hardening (DESIGN.md §11): non-finite f32 payloads and
+    # zero/negative/non-finite q8 scales are dropped between the
+    # deadline gate and the FSM gate, before the dedup set — same
+    # bucket order as the eager rx, so a clean retransmission of a
+    # poisoned slot is still accepted.  Vectorized: one payload stack
+    # per round, not one isfinite call per packet
+    nd = len(d_c)
+    bad = np.zeros(nd, bool)
+    q8_arr = np.asarray(d_q8, bool)
+    sc_arr = np.asarray(d_sc, np.float32)
+    if q8_arr.any():
+        qi = np.nonzero(q8_arr)[0]
+        bad[qi] = ~(np.isfinite(sc_arr[qi]) & (sc_arr[qi] > 0))
+    pos_in_f32 = np.full(nd, -1, np.int64)
+    f32_stack = None
+    fi = np.nonzero(~q8_arr & np.asarray(
+        [p is not None for p in d_pay], bool))[0]
+    if len(fi):
+        f32_stack = np.asarray([d_pay[i] for i in fi], np.float32)
+        bad[fi] = ~np.isfinite(f32_stack).all(axis=1)
+        pos_in_f32[fi] = np.arange(len(fi))
+    stats.malformed_dropped = int(np.sum(pre & bad))
+    gate = pre & ~bad
+    frame_ok = (dp > first_start[dc]) & (dp < first_end[dc])
+    phase_ok = gate & frame_ok
+    stats.phase_dropped = int(np.sum(gate & ~frame_ok))
     ok_rows = np.nonzero(phase_ok)[0]
     keys = dc[ok_rows] * n_slots + ds[ok_rows]
     _, first_idx = np.unique(keys, return_index=True)
@@ -402,7 +440,9 @@ def demux_events(cfg: EngineConfig, events: Iterable,
     n_q8 = sum(d_q8[i] for i in acc_rows)
     scales_col = None
     if n_q8 == 0:
-        pay = (np.asarray([d_pay[i] for i in acc_rows], np.float32)
+        # the malformed pass already stacked every candidate f32 row —
+        # reuse that stack instead of a second copy
+        pay = (f32_stack[pos_in_f32[acc_rows]]
                if len(acc_rows) else np.zeros((0, cfg.payload), np.float32))
     elif n_q8 == len(acc_rows):
         # homogeneous q8 round: the schedule stays int8 end to end and
@@ -423,7 +463,7 @@ def demux_events(cfg: EngineConfig, events: Iterable,
         ds[acc_rows].astype(np.int32), wts[dc[acc_rows]],
         pay, n_workers=cfg.n_workers,
         ring_capacity=cfg.ring_capacity, ring_assign=cfg.ring_assign,
-        scales=scales_col)
+        scales=scales_col, clients=dc[acc_rows].astype(np.int32))
     stats.batches_drained = sched.n_batches
     return sched, stats, up
 
@@ -436,13 +476,15 @@ def demux_events(cfg: EngineConfig, events: Iterable,
                    static_argnames=("mode", "payload", "n_params",
                                     "use_pallas", "block_slots",
                                     "block_pkts", "mix_alpha", "interpret",
+                                    "agg_clip", "clip_tau",
                                     "shards", "mesh"),
                    donate_argnums=(0, 1))
 def _round_device(total, counts, sched_idx, sched_w, sched_pk, sched_scales,
                   prev_global, client_flats, down_mask, *, mode: str,
                   payload: int, n_params: int, use_pallas: bool,
                   block_slots: int, block_pkts: int, mix_alpha: float,
-                  interpret: bool, shards: int = 1, mesh=None):
+                  interpret: bool, agg_clip: bool = False,
+                  clip_tau: float = 1.0, shards: int = 1, mesh=None):
     """The whole round as one compiled dataflow.
 
     total (S, W) / counts (S,) are donated and carried through the drain
@@ -468,6 +510,12 @@ def _round_device(total, counts, sched_idx, sched_w, sched_pk, sched_scales,
     if pad:
         acc = jnp.pad(acc, ((0, pad), (0, 0)))
         cnt = jnp.pad(cnt, ((0, pad), (0, 0)))
+    if agg_clip:
+        # norm_clip mode (§11): bound each packet's influence before the
+        # fold — elementwise per packet, so the schedule's grouping (and
+        # any shard split) cannot change the numerics vs the eager drain
+        sched_w = norm_clip_weights(sched_w, sched_pk, tau=clip_tau,
+                                    scales=sched_scales)
     if shards > 1:
         acc, cnt = packet_scatter_accum_sharded(
             sched_idx, sched_w, sched_pk, acc, cnt,
@@ -497,6 +545,109 @@ def _round_device(total, counts, sched_idx, sched_w, sched_pk, sched_scales,
     return total, counts, new_global, new_flats
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("payload", "n_params", "n_slots",
+                                    "n_clients", "use_pallas",
+                                    "block_slots", "block_pkts",
+                                    "mix_alpha", "interpret", "median",
+                                    "beta", "shards", "mesh"))
+def _robust_round_device(sched_idx, sched_w, sched_pk, sched_scales,
+                         prev_global, client_flats, down_mask, *,
+                         payload: int, n_params: int, n_slots: int,
+                         n_clients: int, use_pallas: bool,
+                         block_slots: int, block_pkts: int,
+                         mix_alpha: float, interpret: bool, median: bool,
+                         beta: float, shards: int = 1, mesh=None):
+    """Robust table round (trimmed-mean / median, DESIGN.md §11) as one
+    compiled dataflow.
+
+    The schedule arrives with the *combined index* ``slot·K + client``
+    and presence weight 1.0 per accepted packet, so the unchanged
+    scatter kernels fold it into an ``(S·K, W)`` accumulator that IS
+    the per-slot client table: each (slot, client) row is written
+    exactly once (dedup upstream), so ``0 + 1.0·row`` reproduces the
+    eager engine's direct table assignment bitwise (q8 rows dequantize
+    in-body as ever).  The fold always runs exact — approx mode's
+    last-writer-wins window cannot race rows that never collide.  The
+    reshaped table feeds the fused rank-select finalize; the per-slot
+    contributor count ``m`` replaces the mean path's ``counts`` (same
+    fallback semantics), and the TX downlink fuses in as usual.
+
+    No donation: the carried ``(S, W)`` accumulators are the wrong
+    shape for the table; the returned ``total`` is the table's per-slot
+    sum ``Σ_c`` so the engine's carry keeps its meaning.
+    """
+    S, K = n_slots, n_clients
+    SK = S * K
+    # jnp single-shard path: the unique combined indices let the whole
+    # schedule fold as ONE flat scatter (packet_table_scatter) instead
+    # of the batch scan — the scan's per-batch (S·K, B) one-hot routing
+    # is quadratic in the table height.  +1 dustbin row for the idx=-1
+    # padding; pallas keeps the blocked grid (its production body).
+    flat_fold = shards == 1 and not use_pallas
+    pad = (-SK) % block_slots if use_pallas else 1
+    acc = jnp.zeros((SK + pad, payload), jnp.float32)
+    cnt = jnp.zeros((SK + pad, 1), jnp.float32)
+    if flat_fold:
+        acc, cnt = packet_table_scatter(sched_idx, sched_w, sched_pk,
+                                        acc, cnt,
+                                        sched_scales=sched_scales)
+    elif shards > 1:
+        acc, cnt = packet_scatter_accum_sharded(
+            sched_idx, sched_w, sched_pk, acc, cnt,
+            sched_scales=sched_scales, mesh=mesh, exact=True,
+            use_pallas=use_pallas, block_slots=block_slots,
+            block_pkts=block_pkts, interpret=interpret)
+    else:
+        acc, cnt = packet_scatter_accum_scan(
+            sched_idx, sched_w, sched_pk, acc, cnt,
+            sched_scales=sched_scales, exact=True,
+            use_pallas=use_pallas, block_slots=block_slots,
+            block_pkts=block_pkts, interpret=interpret)
+    table = acc[:SK].reshape(S, K, payload)
+    pres = cnt[:SK, 0].reshape(S, K)
+    if use_pallas:
+        spad = (-S) % block_slots
+        agg, m = robust_finalize_pallas(
+            jnp.pad(table, ((0, spad), (0, 0), (0, 0))),
+            jnp.pad(pres, ((0, spad), (0, 0))),
+            median=median, beta=beta, block_slots=block_slots,
+            interpret=interpret)
+        agg, m = agg[:S], m[:S]
+    else:
+        agg, m = robust_finalize_jnp(table, pres, median=median, beta=beta)
+    total = jnp.sum(table, axis=1)                        # (S, W)
+    agg_flat = depacketize(agg, n_params)
+    have = expand_packet_mask(m > 0, payload, n_params)
+    new_global = jnp.where(have, agg_flat, prev_global)
+    new_flats = None
+    if client_flats is not None:
+        down_elem = expand_packet_mask(down_mask, payload, n_params)
+        new_flats = jnp.where(down_elem > 0, new_global[None, :],
+                              client_flats)
+        if mix_alpha > 0:
+            new_flats = mix_alpha * client_flats + (1 - mix_alpha) * new_flats
+    return total, m, new_global, new_flats
+
+
+def _combined_table_sched(sched: DrainSchedule,
+                          n_clients: int) -> DrainSchedule:
+    """Rewrite a drain schedule for the robust table fold (§11): slot
+    index -> combined ``slot·K + client`` index, per-arrival FedAvg
+    weight -> presence weight 1.0 (rank statistics are unweighted).
+    Batch composition — and hence shard ownership — is untouched, so
+    ``shard_schedule`` applies downstream unchanged."""
+    assert sched.clients is not None, \
+        "robust table modes need a client-tracked schedule"
+    valid = sched.idx >= 0
+    idx2 = np.where(valid,
+                    sched.idx.astype(np.int64) * n_clients
+                    + sched.clients.astype(np.int64),
+                    -1).astype(np.int32)
+    return dataclasses.replace(sched, idx=idx2,
+                               weights=valid.astype(np.float32))
+
+
 def dispatch_round(cfg: EngineConfig, sched: DrainSchedule, total, counts,
                    prev_global, client_flats=None, down_mask=None,
                    mix_alpha: float = 0.0):
@@ -512,6 +663,9 @@ def dispatch_round(cfg: EngineConfig, sched: DrainSchedule, total, counts,
     """
     if cfg.mode not in ("exact", "approx"):
         raise ValueError(cfg.mode)
+    robust_table = cfg.agg_mode in ("trimmed_mean", "median")
+    if robust_table:
+        sched = _combined_table_sched(sched, cfg.n_clients)
     idx, w, pk, sc = (sched.idx, sched.weights, sched.payloads,
                       sched.scales)
     mesh = None
@@ -519,6 +673,20 @@ def dispatch_round(cfg: EngineConfig, sched: DrainSchedule, total, counts,
         idx, w, pk, sc, _ = shard_schedule(sched, cfg.shards)
         ctx = worker_ctx(cfg.shards)
         mesh = None if ctx is None else ctx.mesh
+    if robust_table:
+        return _robust_round_device(
+            jnp.asarray(idx), jnp.asarray(w), jnp.asarray(pk),
+            None if sc is None else jnp.asarray(sc),
+            jnp.asarray(prev_global),
+            None if client_flats is None else jnp.asarray(client_flats),
+            None if down_mask is None else jnp.asarray(down_mask),
+            payload=cfg.payload, n_params=cfg.n_params,
+            n_slots=cfg.n_slots, n_clients=cfg.n_clients,
+            use_pallas=_use_pallas(cfg), block_slots=8,
+            block_pkts=min(BLOCK_PKTS, idx.shape[-1]),
+            mix_alpha=float(mix_alpha), interpret=_interpret(),
+            median=(cfg.agg_mode == "median"), beta=float(cfg.trim_beta),
+            shards=cfg.shards, mesh=mesh)
     return _round_device(
         jnp.asarray(total, jnp.float32), jnp.asarray(counts, jnp.float32),
         jnp.asarray(idx), jnp.asarray(w), jnp.asarray(pk),
@@ -530,7 +698,8 @@ def dispatch_round(cfg: EngineConfig, sched: DrainSchedule, total, counts,
         use_pallas=_use_pallas(cfg), block_slots=8,
         block_pkts=min(BLOCK_PKTS, idx.shape[-1]),
         mix_alpha=float(mix_alpha), interpret=_interpret(),
-        shards=cfg.shards, mesh=mesh)
+        agg_clip=(cfg.agg_mode == "norm_clip"),
+        clip_tau=float(cfg.clip_tau), shards=cfg.shards, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -671,6 +840,10 @@ def demux_events_async(cfg: EngineConfig, events: Iterable,
         kind = packet.kind
         c = packet.client
         if kind is data_k:
+            if payload_malformed(payload, packet.wire_dtype != "f32",
+                                 packet.scale):
+                stats.malformed_dropped += 1
+                continue
             if not up[c]:
                 stats.phase_dropped += 1
                 continue
@@ -789,14 +962,16 @@ def demux_events_async(cfg: EngineConfig, events: Iterable,
                                     "use_pallas", "block_slots",
                                     "block_pkts", "interpret",
                                     "stale_mode", "stale_alpha",
-                                    "norm_clip", "shards", "mesh"),
+                                    "norm_clip", "agg_clip", "clip_tau",
+                                    "shards", "mesh"),
                    donate_argnums=(0, 1))
 def _async_device(total, counts, g, sched_idx, sched_w, sched_st, sched_pk,
                   sched_scales, emit, *, mode: str, payload: int,
                   n_params: int, use_pallas: bool, block_slots: int,
                   block_pkts: int, interpret: bool, stale_mode: str,
-                  stale_alpha: float, norm_clip: float, shards: int = 1,
-                  mesh=None):
+                  stale_alpha: float, norm_clip: float,
+                  agg_clip: bool = False, clip_tau: float = 1.0,
+                  shards: int = 1, mesh=None):
     """One jitted dispatch for a whole async demux call (DESIGN.md §10).
 
     ``lax.scan`` over emit windows with the donated ``(total, counts)``
@@ -829,6 +1004,10 @@ def _async_device(total, counts, g, sched_idx, sched_w, sched_st, sched_pk,
         eff = staleness_weights(ww, wst, rows=wpk, scales=wsc,
                                 mode=stale_mode, alpha=stale_alpha,
                                 norm_clip=norm_clip)
+        if agg_clip:
+            # agg_mode="norm_clip" composes *after* the staleness
+            # weighting, matching the eager _fold_window (§11)
+            eff = norm_clip_weights(eff, wpk, tau=clip_tau, scales=wsc)
         if shards > 1:
             acc, cnt = packet_scatter_accum_sharded(
                 widx, eff, wpk, acc, cnt, sched_scales=wsc, mesh=mesh,
@@ -906,7 +1085,9 @@ def dispatch_async(cfg: EngineConfig, asched: AsyncSchedule, total, counts,
         block_pkts=min(BLOCK_PKTS, idx.shape[-1]),
         interpret=_interpret(), stale_mode=cfg.staleness_mode,
         stale_alpha=float(cfg.staleness_alpha),
-        norm_clip=float(cfg.norm_clip), shards=cfg.shards, mesh=mesh)
+        norm_clip=float(cfg.norm_clip),
+        agg_clip=(cfg.agg_mode == "norm_clip"),
+        clip_tau=float(cfg.clip_tau), shards=cfg.shards, mesh=mesh)
 
 
 def run_compiled_async(cfg: EngineConfig, events: Iterable, prev_global,

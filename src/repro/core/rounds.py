@@ -68,6 +68,76 @@ class ChurnConfig:
                 raise ValueError(f"{f} must be in [0, 1], got {v}")
 
 
+@dataclasses.dataclass(frozen=True)
+class AttackConfig:
+    """Byzantine attacker models for the churn driver (DESIGN.md §11).
+
+    Attackers are the first ``n_attackers`` client ids — a fixed,
+    documented convention so a sweep's honest/attacker split is
+    reproducible from the config alone.  Models:
+
+    - ``sign_flip``: the attacker uploads the negated update (the
+      classic gradient-reversal poisoner).
+    - ``scale``: the attacker boosts its update by ``boost`` (the
+      model-replacement / boosted-update attack).
+    - ``nan``: the attacker injects NaNs into random payload elements
+      at ``nan_rate`` — the wire-poisoning fault the malformed-packet
+      filter (``EngineStats.malformed_dropped``) must absorb.
+    - ``label_flip``: a *data* attack — the wire payload is whatever
+      the attacker trained on flipped labels, so ``apply_attack`` is
+      the identity and the sweep's ``train_fn`` implements it.
+    """
+    model: str = "none"        # none|sign_flip|scale|label_flip|nan
+    n_attackers: int = 0       # attackers are client ids [0, n_attackers)
+    boost: float = 10.0        # scale-attack multiplier
+    nan_rate: float = 0.25     # per-element NaN injection probability
+
+    def __post_init__(self):
+        if self.model not in ("none", "sign_flip", "scale", "label_flip",
+                              "nan"):
+            raise ValueError(
+                f"attack model must be none|sign_flip|scale|label_flip|"
+                f"nan, got {self.model!r}")
+        if self.n_attackers < 0:
+            raise ValueError(f"n_attackers must be >= 0, "
+                             f"got {self.n_attackers}")
+        if not 0.0 <= self.nan_rate <= 1.0:
+            raise ValueError(f"nan_rate must be in [0, 1], "
+                             f"got {self.nan_rate}")
+
+    def mask(self, n_clients: int) -> np.ndarray:
+        """(K,) bool attacker mask."""
+        m = np.zeros(n_clients, bool)
+        m[:min(self.n_attackers, n_clients)] = True
+        return m
+
+
+def apply_attack(rng: np.random.Generator, client_pk: jnp.ndarray,
+                 attack: Optional[AttackConfig]) -> jnp.ndarray:
+    """Apply a wire-level attacker model to packetized uplink state.
+
+    client_pk (K, N, W) f32 -> (K, N, W) with the attacker rows
+    poisoned per ``attack.model``.  ``label_flip`` (a data attack) and
+    ``none`` are the identity; only the ``nan`` model consumes ``rng``,
+    so enabling a deterministic attacker does not perturb the driver's
+    churn/loss draws.
+    """
+    if (attack is None or attack.n_attackers == 0
+            or attack.model in ("none", "label_flip")):
+        return client_pk
+    pk = np.asarray(client_pk, np.float32).copy()
+    att = attack.mask(pk.shape[0])
+    if attack.model == "sign_flip":
+        pk[att] = -pk[att]
+    elif attack.model == "scale":
+        pk[att] = np.float32(attack.boost) * pk[att]
+    else:                                  # nan injector
+        sub = pk[att]
+        sub[rng.random(sub.shape) < attack.nan_rate] = np.nan
+        pk[att] = sub
+    return jnp.asarray(pk)
+
+
 @dataclasses.dataclass
 class RoundLog:
     """Host-side bookkeeping for one driven round."""
@@ -222,7 +292,8 @@ def run_churn_rounds(cfg: EngineConfig, churn: ChurnConfig,
                      n_rounds: int, *, rng: np.random.Generator,
                      weights: Optional[jnp.ndarray] = None,
                      train_fn: Optional[Callable] = None,
-                     mix_alpha: float = 0.0) -> ChurnHistory:
+                     mix_alpha: float = 0.0,
+                     attack: Optional[AttackConfig] = None) -> ChurnHistory:
     """Drive ``n_rounds`` deadline-closed FedAvg rounds with churn.
 
     ``cfg`` must have ``compile=True`` (each round is one compiled
@@ -258,7 +329,7 @@ def run_churn_rounds(cfg: EngineConfig, churn: ChurnConfig,
         sel = active & (rng.random(K) < churn.participation)
         strag = sel & (rng.random(K) < churn.straggle_rate)
         events, _ = make_partial_round_events(
-            rng, pk, sel, strag,
+            rng, apply_attack(rng, pk, attack), sel, strag,
             loss_rate=churn.loss_rate, dup_rate=churn.dup_rate)
         # downlink only reaches clients that finished the round; lost
         # downlink packets keep the client's local value (paper §3.1)

@@ -85,6 +85,21 @@ class EngineConfig:
     staleness_mode: str = "const"      # const | poly | norm
     staleness_alpha: float = 0.5       # poly/norm decay exponent
     norm_clip: float = 1.0             # norm-mode screening threshold
+    # Byzantine-robust finalize (DESIGN.md §11): how the accumulated
+    # per-slot statistics become the new global at END.  ``mean`` is the
+    # paper's count-normalized divide (bitwise the pre-§11 engine);
+    # ``trimmed_mean`` / ``median`` fold the round into a per-slot
+    # (K, W) client table and take coordinate-wise order statistics
+    # over the contributors (breakdown points floor(beta·m) and
+    # ceil(m/2)-1 respectively); ``norm_clip`` keeps the cheap
+    # (total, counts) path and rescales every packet's weight by
+    # ``clip_tau / max(clip_tau, ‖row‖₂)``, bounding any one client's
+    # influence.  In async buffered mode ``norm_clip`` composes with
+    # ``staleness_mode`` (the clip applies on top of the staleness
+    # decay); the table modes need the synchronous round barrier.
+    agg_mode: str = "mean"             # mean|trimmed_mean|median|norm_clip
+    trim_beta: float = 0.1             # trimmed_mean: fraction per side
+    clip_tau: float = 1.0              # norm_clip influence bound
 
     def __post_init__(self):
         if self.shards < 1:
@@ -111,6 +126,19 @@ class EngineConfig:
         if self.norm_clip <= 0:
             raise ValueError(
                 f"norm_clip must be > 0, got {self.norm_clip}")
+        if self.agg_mode not in ("mean", "trimmed_mean", "median",
+                                 "norm_clip"):
+            raise ValueError(
+                f"agg_mode must be mean|trimmed_mean|median|norm_clip, "
+                f"got {self.agg_mode!r}")
+        if not 0.0 <= self.trim_beta < 0.5:
+            raise ValueError(
+                f"trim_beta must be in [0, 0.5) (trimming half the "
+                f"contributors from each side leaves nothing), got "
+                f"{self.trim_beta}")
+        if self.clip_tau <= 0:
+            raise ValueError(
+                f"clip_tau must be > 0, got {self.clip_tau}")
         if self.buffer_size is not None:
             if self.buffer_size < 1:
                 raise ValueError(
@@ -120,6 +148,11 @@ class EngineConfig:
                     "async buffered mode has no round barrier: "
                     "round_deadline / min_clients do not apply "
                     "(DESIGN.md §10)")
+            if self.agg_mode in ("trimmed_mean", "median"):
+                raise ValueError(
+                    "trimmed_mean/median need the synchronous round's "
+                    "per-slot client table; async buffered mode "
+                    "supports agg_mode mean|norm_clip (DESIGN.md §11)")
 
     @property
     def n_slots(self) -> int:
@@ -135,6 +168,27 @@ class EngineStats:
     control_replies: int = 0           # START_ACK / END_ACK emitted
     stragglers_timed_out: int = 0      # clients short of END at round close
     late_dropped: int = 0              # DATA arriving past the deadline
+    malformed_dropped: int = 0         # non-finite payload / bad q8 scale
+
+
+def payload_malformed(payload, wire_q8: bool, scale: float) -> bool:
+    """Wire-boundary hardening (DESIGN.md §11): is this DATA packet
+    poison?  An f32 payload with any non-finite element (NaN/Inf), or a
+    q8 packet whose dequant scale is zero, negative, or non-finite
+    (int8 payload bytes are finite by construction), would permanently
+    corrupt the donated accumulators — one NaN survives every
+    subsequent add and divide.  Both RX paths (eager per-packet, bulk
+    demux) drop such packets *before* the dedup set records the slot,
+    so a clean retransmission of the same (client, slot) is still
+    accepted; drops are counted in ``EngineStats.malformed_dropped``.
+    A DATA packet legally carrying no payload (it will be phase- or
+    late-dropped) is not malformed.
+    """
+    if wire_q8:
+        return not (np.isfinite(scale) and scale > 0)
+    if payload is None:
+        return False
+    return not bool(np.all(np.isfinite(np.asarray(payload, np.float32))))
 
 
 class QuorumError(RuntimeError):
@@ -194,6 +248,19 @@ class ServerEngine:
         self._pend_payloads: List[np.ndarray] = []
         self._pend_q8: List[bool] = []       # wire_dtype per arrival
         self._pend_scales: List[float] = []  # q8 dequant scale (DESIGN.md §9)
+        self._pend_clients: List[int] = []   # robust table row (DESIGN.md §11)
+        # robust table modes (DESIGN.md §11): the eager engine keeps the
+        # per-slot client table directly — one deduplicated decoded row
+        # per (client, slot) — next to the ring pipeline (which still
+        # runs for stats parity with the compiled schedule)
+        if cfg.agg_mode in ("trimmed_mean", "median") and not cfg.compile:
+            self._tab = np.zeros((cfg.n_clients, cfg.n_slots, cfg.payload),
+                                 np.float32)
+            self._tab_mask = np.zeros((cfg.n_clients, cfg.n_slots),
+                                      np.float32)
+        else:
+            self._tab = None
+            self._tab_mask = None
         self._events_seen = 0
         self._deadline_fired = False
         self.stats = EngineStats()
@@ -225,6 +292,12 @@ class ServerEngine:
         if self._deadline_fired:
             self.stats.late_dropped += 1
             return []
+        if payload_malformed(payload, packet.wire_dtype != "f32",
+                             packet.scale):
+            # dropped before the FSM and the dedup set see it, so a
+            # clean retransmission of the same slot is still accepted
+            self.stats.malformed_dropped += 1
+            return []
         c, slot = packet.client, packet.index
         if self.fsm.phase[c] != ServerPhase.RECV_PARAMS:
             # DATA outside the START..END framing — distinct from a
@@ -245,6 +318,7 @@ class ServerEngine:
             self._pend_payloads.append(payload)
             self._pend_q8.append(packet.wire_dtype != "f32")
             self._pend_scales.append(packet.scale)
+            self._pend_clients.append(c)
             self.stats.data_enqueued += 1
             return []
         if self.cfg.ring_assign == "slot":
@@ -259,6 +333,9 @@ class ServerEngine:
                    * np.float32(packet.scale))
         else:
             row = np.asarray(payload, np.float32)
+        if self._tab is not None:         # robust table modes (§11)
+            self._tab[c, slot] = row
+            self._tab_mask[c, slot] = 1.0
         ring = self._rings[worker]
         ring.append((slot, float(self.weights[c]), row))
         self.stats.data_enqueued += 1
@@ -275,6 +352,11 @@ class ServerEngine:
         idx = jnp.asarray(np.array([s for s, _, _ in ring], np.int32))
         w = jnp.asarray(np.array([wt for _, wt, _ in ring], np.float32))
         payloads = jnp.asarray(np.stack([p for _, _, p in ring]))
+        if self.cfg.agg_mode == "norm_clip":
+            # per-packet influence bound: eff_w = w * tau/max(tau, ||row||)
+            # (elementwise per packet, so grouping-independent — §11)
+            from repro.kernels.packet_scatter import norm_clip_weights
+            w = norm_clip_weights(w, payloads, tau=self.cfg.clip_tau)
         self.agg.scatter_add(payloads, idx, weights=w, mode=self.cfg.mode)
         self.stats.batches_drained += 1
 
@@ -322,6 +404,22 @@ class ServerEngine:
             new_global, counts, _ = self._finalize_compiled(prev_global)
             return new_global, counts
         self.flush()
+        if self._tab is not None:
+            # robust table modes: per-slot (K, W) client table, fused
+            # trimmed-mean/median finalize (DESIGN.md §11).  Client
+            # weights are ignored — rank statistics are unweighted.
+            from repro.kernels.packet_scatter import robust_finalize_jnp
+            table = jnp.asarray(self._tab.swapaxes(0, 1))   # (N, K, W)
+            pres = jnp.asarray(self._tab_mask.T)            # (N, K)
+            self._tab[...] = 0.0
+            self._tab_mask[...] = 0.0
+            agg, m = robust_finalize_jnp(
+                table, pres, median=(self.cfg.agg_mode == "median"),
+                beta=self.cfg.trim_beta)
+            agg_flat = depacketize(agg, self.cfg.n_params)
+            have = expand_packet_mask(m > 0, self.cfg.payload,
+                                      self.cfg.n_params)
+            return jnp.where(have, agg_flat, prev_global), m
         avg = self.agg.finalize()                        # (N, W)
         agg_flat = depacketize(avg, self.cfg.n_params)   # (P,)
         have = expand_packet_mask(self.agg.counts > 0, self.cfg.payload,
@@ -378,9 +476,10 @@ class ServerEngine:
             pay,
             n_workers=self.cfg.n_workers,
             ring_capacity=self.cfg.ring_capacity,
-            ring_assign=self.cfg.ring_assign, scales=scales)
+            ring_assign=self.cfg.ring_assign, scales=scales,
+            clients=np.asarray(self._pend_clients, np.int32))
         self._pend_slots, self._pend_weights, self._pend_payloads = [], [], []
-        self._pend_q8, self._pend_scales = [], []
+        self._pend_q8, self._pend_scales, self._pend_clients = [], [], []
         total, counts, new_global, new_flats = ec.dispatch_round(
             self.cfg, sched, self.agg.total, self.agg.counts, prev_global,
             client_flats=client_flats, down_mask=down_mask,
@@ -434,6 +533,7 @@ class AsyncStats:
     data_enqueued: int = 0        # unique DATA accepted into open sessions
     duplicates_dropped: int = 0   # same (client, session, slot) again
     phase_dropped: int = 0        # DATA outside an open session
+    malformed_dropped: int = 0    # non-finite payload / bad q8 scale
     control_replies: int = 0      # START_ACK / END_ACK emitted
     batches_drained: int = 0      # scatter-accumulate rows folded
     updates_accepted: int = 0     # ENDs that folded a session's update
@@ -562,6 +662,10 @@ class AsyncServerEngine:
             return [Packet(Kind.END_ACK, c)]
         if packet.kind != Kind.DATA:
             return []
+        if payload_malformed(payload, packet.wire_dtype != "f32",
+                             packet.scale):
+            self.stats.malformed_dropped += 1
+            return []
         if not self._up[c]:
             self.stats.phase_dropped += 1
             return []
@@ -624,6 +728,13 @@ class AsyncServerEngine:
             scales=None if h_scales is None else jnp.asarray(h_scales),
             mode=self.cfg.staleness_mode, alpha=self.cfg.staleness_alpha,
             norm_clip=self.cfg.norm_clip))
+        if self.cfg.agg_mode == "norm_clip":
+            # composes *after* staleness weighting, in both engines (§11)
+            from repro.kernels.packet_scatter import norm_clip_weights
+            eff = np.asarray(norm_clip_weights(
+                jnp.asarray(eff), jnp.asarray(h_rows),
+                scales=None if h_scales is None else jnp.asarray(h_scales),
+                tau=self.cfg.clip_tau))
         # fresh ring demux per window: rings and the rr pointer reset at
         # every emit, so each window batches exactly like one sync round
         rings: List[list] = [[] for _ in range(self.cfg.n_workers)]

@@ -322,6 +322,158 @@ def staleness_weights(weights: jnp.ndarray, staleness: jnp.ndarray,
     raise ValueError(f"unknown staleness mode {mode!r}")
 
 
+def norm_clip_weights(weights: jnp.ndarray, rows: jnp.ndarray, *,
+                      tau: float,
+                      scales: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Per-packet norm-clipped FedAvg weight (DESIGN.md §11).
+
+    weights (...,) f32 base per-arrival weights; rows (..., W) payload
+    rows.  Each packet's contribution is scaled by
+    ``tau / max(tau, ‖row‖₂)`` — the FedNS-style influence bound: a row
+    inside the ball passes untouched (the factor is exactly 1.0), a
+    boosted row is shrunk back to norm ``tau``, so one scaled-update
+    attacker moves the per-slot aggregate by at most ``tau`` times its
+    weight share.  On the q8 wire pass ``scales`` (...,) so the norm is
+    taken over the *dequantized* payload the accumulator actually sees.
+
+    Elementwise per packet (the norm reduces axis -1 only), so the
+    eager engine (per-drain batches) and the compiled scan (whole
+    schedule slices) compute identical f32 ops — the differential
+    harness's bitwise claim covers the clipping.  Inert schedule
+    padding (weight 0) stays inert.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    r = rows.astype(jnp.float32)
+    if scales is not None:
+        r = r * jnp.asarray(scales, jnp.float32)[..., None]
+    nrm = jnp.sqrt(jnp.sum(r * r, axis=-1))
+    t = jnp.float32(tau)
+    return w * (t / jnp.maximum(t, nrm))
+
+
+def _robust_trim(m: jnp.ndarray, *, median: bool, beta: float
+                 ) -> jnp.ndarray:
+    """Per-slot trim depth t from the contributor count m (DESIGN.md
+    §11): trimmed-mean drops ``floor(beta·m)`` ranks from each end;
+    the coordinate-wise median is the degenerate trim that keeps only
+    the middle rank (odd m) or middle pair (even m),
+    ``t = floor((m-1)/2)``."""
+    m = m.astype(jnp.float32)
+    if median:
+        t = jnp.floor((m - 1.0) * jnp.float32(0.5))
+    else:
+        t = jnp.floor(m * jnp.float32(beta))
+    return jnp.maximum(t, 0.0)
+
+
+def robust_finalize_jnp(table: jnp.ndarray, pres: jnp.ndarray, *,
+                        median: bool = False, beta: float = 0.1
+                        ) -> tuple:
+    """Trimmed-mean / coordinate-wise-median finalize over the per-slot
+    client table (DESIGN.md §11) — the jnp twin of
+    ``robust_finalize_pallas``.
+
+    table (S, K, W) f32: row (s, c) is client c's deduplicated payload
+    for slot s (zeros where absent); pres (S, K) f32 > 0 marks present
+    contributions.  Per slot and per coordinate the present values are
+    rank-ordered (absent entries ride to the top past a +max sentinel),
+    the lowest and highest ``t`` ranks are dropped
+    (``t = floor(beta·m)``, or the median's middle-keep), and the
+    survivors average.  Returns ``(agg (S, W), m (S,))`` with ``agg``
+    zero where no contributor delivered (``m = 0``) — the caller's
+    per-slot fallback mask, exactly like the mean path's counts.
+    """
+    K = table.shape[1]
+    p = pres > 0
+    m = jnp.sum(p.astype(jnp.float32), axis=1)            # (S,)
+    big = jnp.float32(jnp.finfo(jnp.float32).max)
+    vm = jnp.where(p[:, :, None], table, big)
+    vs = jnp.sort(vm, axis=1)                             # absent last
+    t = _robust_trim(m, median=median, beta=beta)
+    ranks = jnp.arange(K, dtype=jnp.float32)[None, :, None]
+    keep = ((ranks >= t[:, None, None])
+            & (ranks < (m - t)[:, None, None]))           # (S, K, W)
+    kept = jnp.sum(keep.astype(jnp.float32), axis=1)      # (S, W)
+    ssum = jnp.sum(jnp.where(keep, vs, 0.0), axis=1)
+    agg = ssum / jnp.maximum(kept, 1e-12)
+    agg = jnp.where(kept > 0, agg, 0.0)
+    return agg, m
+
+
+def _robust_finalize_kernel(tab_ref, pres_ref, agg_ref, m_ref, *,
+                            median: bool, beta: float):
+    """Grid-step body of the fused robust finalize (one slot block).
+
+    Rank selection without a sort: element (s, k, w)'s rank is the
+    number of present values below it (ties broken by client order), a
+    K-step ``fori_loop`` of (BS, K, W) compares on the VPU — Mosaic has
+    no in-kernel sort, and the rank pass selects the identical value
+    multiset, so for exactly-representable sums the result is bitwise
+    equal to the sorted jnp twin (the same caveat as the scatter
+    kernels vs their twins).
+    """
+    v = tab_ref[...]                                      # (BS, K, W)
+    pres = pres_ref[...] > 0                              # (BS, K)
+    K = v.shape[1]
+    p3 = pres[:, :, None]
+    m = jnp.sum(pres.astype(jnp.float32), axis=1)         # (BS,)
+    big = jnp.float32(jnp.finfo(jnp.float32).max)
+    vm = jnp.where(p3, v, big)
+    kiota = jax.lax.broadcasted_iota(jnp.int32, vm.shape, 1)
+
+    def rank_step(j, rank):
+        vj = jax.lax.dynamic_slice_in_dim(vm, j, 1, axis=1)  # (BS,1,W)
+        below = (vj < vm) | ((vj == vm) & (j < kiota))
+        return rank + below.astype(jnp.float32)
+
+    rank = jax.lax.fori_loop(0, K, rank_step,
+                             jnp.zeros(vm.shape, jnp.float32))
+    t = _robust_trim(m, median=median, beta=beta)[:, None, None]
+    keep = (rank >= t) & (rank < m[:, None, None] - t) & p3
+    kept = jnp.sum(keep.astype(jnp.float32), axis=1)      # (BS, W)
+    ssum = jnp.sum(jnp.where(keep, v, 0.0), axis=1)
+    agg = ssum / jnp.maximum(kept, 1e-12)
+    agg_ref[...] = jnp.where(kept > 0, agg, 0.0)
+    m_ref[...] = m[:, None]
+
+
+def robust_finalize_pallas(table: jnp.ndarray, pres: jnp.ndarray, *,
+                           median: bool = False, beta: float = 0.1,
+                           block_slots: int = 8,
+                           interpret: bool = False) -> tuple:
+    """Fused trimmed-mean / median finalize kernel (DESIGN.md §11).
+
+    table (S, K, W) f32 per-slot client table; pres (S, K) f32
+    presence.  S must be a multiple of ``block_slots`` (callers pad
+    with inert zero slots).  Grid over slot blocks; each step holds its
+    (BS, K, W) table block in VMEM, rank-selects the trimmed band per
+    coordinate and averages it — no (S, K, W) intermediate ever leaves
+    VMEM.  Returns ``(agg (S, W), m (S,))`` like the jnp twin.
+    """
+    S, K, W = table.shape
+    assert S % block_slots == 0, (S, block_slots)
+    kernel = functools.partial(_robust_finalize_kernel, median=median,
+                               beta=beta)
+    agg, m = pl.pallas_call(
+        kernel,
+        grid=(S // block_slots,),
+        in_specs=[
+            pl.BlockSpec((block_slots, K, W), lambda s: (s, 0, 0)),
+            pl.BlockSpec((block_slots, K), lambda s: (s, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_slots, W), lambda s: (s, 0)),
+            pl.BlockSpec((block_slots, 1), lambda s: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, W), jnp.float32),
+            jax.ShapeDtypeStruct((S, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(table.astype(jnp.float32), pres.astype(jnp.float32))
+    return agg, m[:, 0]
+
+
 def packet_scatter_accum_batch_jnp(packets: jnp.ndarray, idx: jnp.ndarray,
                                    weights: jnp.ndarray, acc: jnp.ndarray,
                                    counts: jnp.ndarray, *,
@@ -380,6 +532,40 @@ def packet_scatter_accum_batch_q8_jnp(packets: jnp.ndarray,
     pkt = packets.astype(jnp.float32) * scales.astype(jnp.float32)[:, None]
     return packet_scatter_accum_batch_jnp(pkt, idx, weights, acc, counts,
                                           exact=exact)
+
+
+def packet_table_scatter(sched_idx: jnp.ndarray, sched_w: jnp.ndarray,
+                         sched_pk: jnp.ndarray, acc: jnp.ndarray,
+                         cnt: jnp.ndarray, *,
+                         sched_scales: jnp.ndarray | None = None):
+    """One-shot fold of a *unique-index* drain schedule (the robust
+    table fold, DESIGN.md §11).
+
+    The combined ``slot·K + client`` indices hit each accumulator row
+    at most once (dedup upstream), so the whole schedule folds as ONE
+    flat scatter-add — no batch scan, no (S, N) one-hot routing matrix.
+    That matters here: the table accumulator has ``S·K`` rows, and the
+    per-batch one-hot twin the mean path uses would pay an
+    ``O(S·K · B)`` routing product per drained batch.  Bitwise equal to
+    running the batches through ``packet_scatter_accum_scan``: every
+    real row lands as ``0 + 1.0·payload`` either way.
+
+    Padding entries carry ``idx < 0``; ``.at[]`` would WRAP a negative
+    index to the end of the buffer, so they are routed to the buffer's
+    last row — the caller passes one extra dustbin row and slices it
+    off (their weight is 0.0, so the dustbin only ever accumulates
+    zeros anyway).
+    """
+    W = acc.shape[1]
+    idx = sched_idx.reshape(-1).astype(jnp.int32)
+    w = sched_w.reshape(-1).astype(jnp.float32)
+    pk = sched_pk.reshape(-1, W).astype(jnp.float32)
+    if sched_scales is not None:
+        pk = pk * sched_scales.reshape(-1).astype(jnp.float32)[:, None]
+    dust = jnp.where(idx >= 0, idx, jnp.int32(acc.shape[0] - 1))
+    acc = acc.at[dust].add(w[:, None] * pk)
+    cnt = cnt.at[dust, 0].add(w)
+    return acc, cnt
 
 
 def packet_scatter_accum_scan(sched_idx: jnp.ndarray, sched_w: jnp.ndarray,

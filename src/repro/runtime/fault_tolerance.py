@@ -3,12 +3,19 @@
 The paper's count-normalized aggregation is itself the failure-tolerance
 mechanism: a client (pod) that misses the round deadline simply has
 mask 0 and the divisor adjusts — no retransmission, no blocking.  This
-module provides the host-side machinery around it:
+module provides the host-side machinery around it, with the *same*
+round-close semantics as the packet engine (DESIGN.md §8): a round
+closes at its deadline (never early on a quorum — closing early would
+time out stragglers that the engine would still accept), and the
+``min_clients`` quorum is a *guard* checked at the close, delegated to
+``core.server.check_quorum`` so both layers raise the same
+``QuorumError`` in the same words.
 
-- ``DeadlineMonitor``: straggler mitigation — the round closes when m of
-  K uploads arrived or the deadline expires; late pods are masked out
-  (the paper's "clients not selected keep their local parameters").
-- ``HeartbeatTracker``: failure detection feeding the alive mask.
+- ``DeadlineMonitor``: wall-clock deadline close + alive mask + the
+  delegated quorum guard.  Time is injectable (``clock=``), so the
+  close logic is unit-testable without sleeping.
+- ``HeartbeatTracker``: failure detection feeding the alive mask, same
+  injectable clock.
 - ``RoundRobustState``: checkpoint/restart bookkeeping — every round
   boundary is a consistent cut (parameters are replicated post-
   aggregation), so restart = restore latest round checkpoint; pods that
@@ -18,39 +25,64 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List
 
 import numpy as np
+
+from repro.core.server import check_quorum
 
 
 @dataclasses.dataclass
 class DeadlineMonitor:
-    """Close the round at quorum or deadline, whichever first."""
+    """Close the round at the deadline; guard the close on min_clients.
+
+    The event-count deadline of ``EngineConfig.round_deadline`` is the
+    in-stream analogue of ``deadline_s`` here: both close the uplink
+    barrier unconditionally at the cut and average what arrived.  The
+    one early close is *all pods arrived* — closing then times nobody
+    out, so it cannot diverge from the engine's semantics.
+    """
     n_pods: int
-    quorum_fraction: float = 0.8
+    min_clients: int = 1
     deadline_s: float = 600.0
+    clock: Callable[[], float] = time.monotonic
 
     def __post_init__(self):
+        if not 0 <= self.min_clients <= self.n_pods:
+            raise ValueError(
+                f"min_clients must be in [0, n_pods={self.n_pods}], "
+                f"got {self.min_clients}")
         self._arrived: Dict[int, float] = {}
-        self._t0 = time.monotonic()
+        self._t0 = self.clock()
 
     def reset(self):
         self._arrived.clear()
-        self._t0 = time.monotonic()
+        self._t0 = self.clock()
 
     def mark_arrived(self, pod: int):
-        self._arrived.setdefault(pod, time.monotonic() - self._t0)
+        self._arrived.setdefault(pod, self.clock() - self._t0)
 
-    @property
-    def quorum(self) -> int:
-        return max(1, int(self.quorum_fraction * self.n_pods))
+    def elapsed(self) -> float:
+        return self.clock() - self._t0
 
     def should_close(self) -> bool:
+        """Deadline expired, or every pod delivered (nobody to wait
+        for).  Never closes early on a partial quorum — that is the
+        engine's straggler-liveness rule (DESIGN.md §8)."""
         if len(self._arrived) >= self.n_pods:
             return True
-        if len(self._arrived) >= self.quorum:
-            return True
-        return (time.monotonic() - self._t0) >= self.deadline_s
+        return self.elapsed() >= self.deadline_s
+
+    def stragglers(self) -> List[int]:
+        """Pods that had not delivered at the close."""
+        return [p for p in range(self.n_pods) if p not in self._arrived]
+
+    def check_quorum(self) -> None:
+        """The engine's quorum guard, verbatim: raises
+        ``core.server.QuorumError`` (same message) when the round
+        closed with fewer than ``min_clients`` participants."""
+        check_quorum(len(self._arrived), self.min_clients,
+                     len(self.stragglers()))
 
     def alive_mask(self) -> np.ndarray:
         mask = np.zeros((self.n_pods,), np.float32)
@@ -63,16 +95,17 @@ class DeadlineMonitor:
 class HeartbeatTracker:
     n_pods: int
     timeout_s: float = 60.0
+    clock: Callable[[], float] = time.monotonic
 
     def __post_init__(self):
-        now = time.monotonic()
+        now = self.clock()
         self._last: List[float] = [now] * self.n_pods
 
     def beat(self, pod: int):
-        self._last[pod] = time.monotonic()
+        self._last[pod] = self.clock()
 
     def dead_pods(self) -> List[int]:
-        now = time.monotonic()
+        now = self.clock()
         return [i for i, t in enumerate(self._last)
                 if now - t > self.timeout_s]
 

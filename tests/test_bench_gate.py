@@ -1,0 +1,83 @@
+"""Regression tests for tools/bench_gate.py (the CI benchmark gate).
+
+The gate is pure stdlib, so these run without jax; they pin the two
+behaviors a bad edit would silently break CI with:
+
+- key sorting must survive rows that mix ``None`` and ``str`` in the
+  same KEY_FIELDS slot (the mean row's ``agg_mode`` is None while the
+  robust row's is a string — tuple sort raised TypeError when both
+  rows tied on every earlier field);
+- the in-file ``accept`` bounds (EXPERIMENTS.md §Attack-sweep) must
+  fail rows outside the band and pass rows inside it.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "tools"))
+import bench_gate  # noqa: E402
+
+
+def _bench(rows, quick=True):
+    return {"quick": quick, "rows": rows}
+
+
+def _row(pkts, agg_mode=None, **extra):
+    row = {"k": 64, "mode": "exact", "engine": "compiled_churn",
+           "n_params": 4096, "payload": 64, "ring_capacity": 64,
+           "pkts_per_s": pkts}
+    if agg_mode is not None:
+        row["agg_mode"] = agg_mode
+    row.update(extra)
+    return row
+
+
+def test_gate_sorts_none_and_str_key_fields(tmp_path):
+    # two rows identical in every key field except agg_mode None vs str:
+    # the sort over matched keys must not raise (None < str TypeError)
+    rows = [_row(100_000.0), _row(50_000.0, agg_mode="trimmed_mean")]
+    fresh = tmp_path / "BENCH_rounds.json"
+    basedir = tmp_path / "baselines"
+    basedir.mkdir()
+    fresh.write_text(json.dumps(_bench(rows)))
+    (basedir / "BENCH_rounds.json").write_text(json.dumps(_bench(rows)))
+    assert bench_gate.gate([str(fresh)], 0.25,
+                           baseline_dir=str(basedir)) == 0
+
+
+def test_gate_flags_regression_per_agg_mode_row(tmp_path):
+    # the robust row regresses 2x while the mean row is unchanged: the
+    # strict key match must charge the failure to the agg_mode row only
+    base = [_row(100_000.0), _row(50_000.0, agg_mode="trimmed_mean")]
+    cur = [_row(100_000.0), _row(25_000.0, agg_mode="trimmed_mean")]
+    fresh = tmp_path / "BENCH_rounds.json"
+    basedir = tmp_path / "baselines"
+    basedir.mkdir()
+    fresh.write_text(json.dumps(_bench(cur)))
+    (basedir / "BENCH_rounds.json").write_text(json.dumps(_bench(base)))
+    assert bench_gate.gate([str(fresh)], 0.25,
+                           baseline_dir=str(basedir)) == 1
+
+
+@pytest.mark.parametrize("value,bound,fails", [
+    (0.7, {"min": 0.5}, 0),       # inside the band
+    (0.3, {"min": 0.5}, 1),       # below min
+    (2.0, {"max": 2.5}, 0),       # inside the band
+    (3.0, {"max": 2.5}, 1),       # above max
+])
+def test_accept_bounds(tmp_path, value, bound, fails):
+    row = _row(1.0, agg_mode="median", attack_recovered=value,
+               accept=dict(bound, metric="attack_recovered"))
+    path = tmp_path / "BENCH_rounds.json"
+    path.write_text(json.dumps(_bench([row])))
+    assert bench_gate.check_accept_bounds(str(path)) == fails
+
+
+def test_accept_bound_on_missing_metric_fails(tmp_path):
+    row = _row(1.0, accept={"metric": "nonexistent", "min": 0.5})
+    path = tmp_path / "BENCH_rounds.json"
+    path.write_text(json.dumps(_bench([row])))
+    assert bench_gate.check_accept_bounds(str(path)) == 1

@@ -4,8 +4,10 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import aggregation as agg
+from repro.core.server import QuorumError
 from repro.core.pipeline import StreamingAggregator, streaming_rounds
 from repro.core.simnet import HwConstants, VARIANTS, paper_ratios, simulate_all
 from repro.models.scan_utils import remat_chunked_scan
@@ -105,20 +107,28 @@ def test_remat_chunked_scan_indivisible_fallback():
 
 # --- fault tolerance ---------------------------------------------------------
 
-def test_deadline_monitor_quorum():
-    m = DeadlineMonitor(n_pods=5, quorum_fraction=0.6, deadline_s=1e9)
+def test_deadline_monitor_no_early_quorum_close():
+    # engine semantics (DESIGN.md §8): a partial quorum does NOT close
+    # the round early — only the deadline (or all pods) does
+    m = DeadlineMonitor(n_pods=5, min_clients=3, deadline_s=1e9)
     assert not m.should_close()
     for pod in (0, 2, 4):
         m.mark_arrived(pod)
-    assert m.should_close()
+    assert not m.should_close()      # 3/5 arrived, deadline far away
     np.testing.assert_array_equal(m.alive_mask(), [1, 0, 1, 0, 1])
+    m.check_quorum()                 # 3 >= min_clients: no raise
+    for pod in (1, 3):
+        m.mark_arrived(pod)
+    assert m.should_close()          # all pods: nobody left to wait for
 
 
 def test_deadline_monitor_deadline():
-    m = DeadlineMonitor(n_pods=3, quorum_fraction=1.0, deadline_s=0.0)
+    m = DeadlineMonitor(n_pods=3, min_clients=3, deadline_s=0.0)
     time.sleep(0.01)
     assert m.should_close()          # deadline expired, nobody arrived
     assert m.alive_mask().sum() == 0
+    with pytest.raises(QuorumError):
+        m.check_quorum()             # 0 < min_clients=3
 
 
 def test_heartbeat_tracker():

@@ -237,7 +237,7 @@ def test_conservation_every_data_packet_accounted(seed):
         r = run_async_engine(cfg, events, g0)
         s = r.stats
         assert (s.data_enqueued + s.duplicates_dropped
-                + s.phase_dropped) == n_data
+                + s.phase_dropped + s.malformed_dropped) == n_data
         assert s.control_replies == n_ctrl
         folded = sum(u.n_packets for u in r.updates)
         assert folded == s.data_enqueued - s.data_in_flight

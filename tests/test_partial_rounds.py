@@ -106,7 +106,7 @@ def test_deadline_stats_conservation(engine):
     got = run_engine_round(cfg, flats, prev, dl_events)
     s = got.stats
     assert (s.data_enqueued + s.duplicates_dropped + s.phase_dropped
-            + s.late_dropped) == n_data
+            + s.late_dropped + s.malformed_dropped) == n_data
     assert s.late_dropped == n_suffix
     assert s.stragglers_timed_out == 1
     base = run_engine_round(

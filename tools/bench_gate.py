@@ -15,9 +15,16 @@ on ``engine`` like any other compiled row, so the quantized wire path
 is gated on both throughput axes the moment its rows land in a
 baseline.
 
+Rows may additionally carry an in-file acceptance band
+(``"accept": {"metric": ..., "min"/"max": ...}``) checked against the
+fresh file alone — the attack-sweep rows (EXPERIMENTS.md §Attack-sweep)
+use it to gate robust-mode accuracy recovery (>= 0.5) and the robust
+compiled round's slowdown vs the exact-mean row (<= 2.5x) without
+needing hardware-comparable baselines.
+
 Matching is strict: rows pair up only when every config key — k, mode,
-engine, shards, n_params, payload, ring_capacity, buffer_size — is
-identical, so a
+engine, shards, n_params, payload, ring_capacity, buffer_size,
+agg_mode — is identical, so a
 quick-mode run never gets compared against a full-size baseline; rows
 present on one side only are reported and skipped.  Speedups are fine;
 only drops gate.
@@ -62,14 +69,20 @@ BASELINE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
 DEFAULT_FILES = ("BENCH_engine.json", "BENCH_shard.json",
                  "BENCH_rounds.json")
 # config keys that must match exactly for two rows to be comparable
-# (absent keys compare as None, so rows without e.g. shards or
-# buffer_size still pair up across schema growth)
+# (absent keys compare as None, so rows without e.g. shards,
+# buffer_size or agg_mode still pair up across schema growth)
 KEY_FIELDS = ("k", "mode", "engine", "shards", "n_params", "payload",
-              "ring_capacity", "buffer_size")
+              "ring_capacity", "buffer_size", "agg_mode")
 
 
 def _row_key(row: dict):
     return tuple(row.get(f) for f in KEY_FIELDS)
+
+
+def _sort_key(key):
+    # keys mix None and str in the same field (e.g. agg_mode is None on
+    # mean rows); None sorts first instead of raising on None < str
+    return tuple((v is not None, str(v)) for v in key)
 
 
 # per-row metrics gated when present on BOTH sides (pkts_per_s always
@@ -92,6 +105,42 @@ def _fmt_key(key) -> str:
                     if v is not None)
 
 
+def check_accept_bounds(path: str) -> int:
+    """Gate rows that carry their OWN acceptance band (EXPERIMENTS.md
+    §Attack-sweep): ``"accept": {"metric": m, "min": lo, "max": hi}``
+    fails the job when ``row[m]`` falls outside [lo, hi].  Unlike the
+    baseline diff this needs no committed counterpart — the bound is a
+    *correctness* envelope (e.g. a robust mode must recover >= 50% of
+    the accuracy a Byzantine attacker destroys, and its compiled round
+    must stay within 2.5x of the exact-mean row measured in the SAME
+    run), so it travels with the row and holds on any hardware."""
+    failures = 0
+    with open(path) as f:
+        bench = json.load(f)
+    name = os.path.basename(path)
+    for row in bench.get("rows", []):
+        acc = row.get("accept")
+        if not acc:
+            continue
+        metric = acc["metric"]
+        val = row.get(metric)
+        if val is None:
+            print(f"bench_gate: FAIL {name} {_fmt_key(_row_key(row))}: "
+                  f"accept bound on missing metric {metric!r}")
+            failures += 1
+            continue
+        lo, hi = acc.get("min"), acc.get("max")
+        bad = (lo is not None and val < lo) or (hi is not None and val > hi)
+        band = (f">= {lo}" if hi is None else
+                f"<= {hi}" if lo is None else f"in [{lo}, {hi}]")
+        verdict = "FAIL" if bad else "ok"
+        print(f"bench_gate: {verdict:4s} {name} "
+              f"{_fmt_key(_row_key(row))}: {metric}={val:.4g} "
+              f"(accept {band})")
+        failures += bad
+    return failures
+
+
 def gate(files, threshold: float, baseline_dir: str = BASELINE_DIR) -> int:
     failures = 0
     for name in files:
@@ -102,6 +151,7 @@ def gate(files, threshold: float, baseline_dir: str = BASELINE_DIR) -> int:
             print(f"bench_gate: SKIP {name} (fresh file absent — "
                   f"benchmark smoke not run)")
             continue
+        failures += check_accept_bounds(fresh_path)
         if not os.path.exists(base_path):
             print(f"bench_gate: FAIL {name}: no committed baseline at "
                   f"{os.path.relpath(base_path, ROOT)} — run with "
@@ -119,11 +169,11 @@ def gate(files, threshold: float, baseline_dir: str = BASELINE_DIR) -> int:
                   f"{'quick' if base_quick else 'full'}-mode — rerun the "
                   f"smoke as CI does to gate)")
             continue
-        matched = sorted(set(fresh) & set(base))
-        for key in sorted(set(base) - set(fresh)):
+        matched = sorted(set(fresh) & set(base), key=_sort_key)
+        for key in sorted(set(base) - set(fresh), key=_sort_key):
             print(f"bench_gate: note {name}: baseline-only row "
                   f"{_fmt_key(key)} (config changed?) — skipped")
-        for key in sorted(set(fresh) - set(base)):
+        for key in sorted(set(fresh) - set(base), key=_sort_key):
             print(f"bench_gate: note {name}: new row {_fmt_key(key)} has "
                   f"no baseline — skipped (refresh with --update-baseline)")
         for key in matched:
