@@ -51,8 +51,15 @@ scan).  Run it with 8 devices, e.g.::
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python benchmarks/engine_throughput.py --shard-sweep
 
+``--host-sweep`` sweeps the hierarchical engine
+(``EngineConfig(hosts=H, shards=S)``, DESIGN.md §12) over the
+(hosts, shards) grid and appends ``engine="compiled_hier"`` rows to the
+same ``BENCH_shard.json`` (combine both flags for the full file;
+schema in EXPERIMENTS.md §Host-sweep).
+
 Usage:
     python benchmarks/engine_throughput.py [--quick] [--shard-sweep]
+                                           [--host-sweep]
                                            [--out BENCH_engine.json]
 """
 from __future__ import annotations
@@ -80,6 +87,9 @@ SHARD_SWEEP = (1, 2, 4, 8)
 SHARD_K = 256               # the worker-scaling point (paper Fig. 6/7)
 SHARD_WORKERS = 8           # rings == BlueField-2 cores; fixed across the
                             # sweep so batching (and bits) never change
+HOST_SWEEP = ((1, 1), (1, 2), (2, 1), (2, 2), (4, 1), (4, 2))
+                            # (hosts, shards) grid for --host-sweep
+                            # (DESIGN.md §12); quick trims hosts to {1,2}
 # Simulated NIC uplink budget for the wire-limited columns.  Chosen so
 # the wire, not the server, is the bottleneck for BOTH formats on every
 # compiled row (f32 admits ~37k pkts/s, q8 ~87k — the compiled engine
@@ -375,6 +385,99 @@ def shard_rows(quick: bool = False):
     return out
 
 
+def host_rows(quick: bool = False):
+    """Hierarchical-engine sweep: (hosts, shards) ∈ HOST_SWEEP at the
+    K=256 scaling point (quick: K=64, hosts ≤ 2, exact only — the CI
+    smoke).  Schema in EXPERIMENTS.md §Host-sweep.
+
+    The timed stage is one hierarchical round dispatch: the per-host
+    arrival partition + per-host ring demux + shard split + the
+    two-level psum fold (DESIGN.md §12).  Unlike ``shard_rows`` the
+    host split is part of the timed stage — a real deployment demuxes
+    per host in parallel on the hosts themselves, so the single-machine
+    row is an upper bound on the partition cost, not an estimate of
+    cross-machine latency (the emulated-multi-process caveat,
+    EXPERIMENTS.md §Host-sweep).
+    """
+    from repro.core import engine_compiled as ec
+    from repro.core.packets import packetize
+    from repro.core.server import EngineConfig, make_uplink_stream
+    from repro.runtime.sharding import host_worker_mesh, worker_mesh
+
+    k = 64 if quick else SHARD_K
+    n_params = 4096 if quick else N_PARAMS
+    modes = ("exact",) if quick else ("exact", "approx")
+    combos = tuple((h, s) for h, s in HOST_SWEEP if not quick or h <= 2)
+    # same burst-timing rationale as shard_rows: quick rounds scan in
+    # single-digit ms where dispatch jitter swamps one-shot samples
+    reps = 8 if quick else 1
+    rng = np.random.default_rng(0)
+    flats = jnp.asarray(rng.normal(size=(k, n_params)).astype(np.float32))
+    prev = jnp.zeros((n_params,), jnp.float32)
+    pk = jax.vmap(lambda f: packetize(f, PAYLOAD))(flats)
+    events, _ = make_uplink_stream(rng, pk, loss_rate=LOSS_RATE,
+                                   dup_rate=DUP_RATE)
+    out = []
+    # one global demux shared by every row: the accepted-arrival stream
+    # is host-count independent; dispatch_round re-partitions it per
+    # (hosts, shards) internally
+    cfg0 = EngineConfig(n_clients=k, n_params=n_params, payload=PAYLOAD,
+                        ring_capacity=RING_CAPACITY,
+                        n_workers=SHARD_WORKERS, compile=True)
+    t0 = time.perf_counter()
+    sched, st, _ = ec.demux_events(cfg0, events)
+    demux_s = time.perf_counter() - t0
+    for mode in modes:
+        base = {}
+        for hosts, shards in combos:
+            cfg = EngineConfig(n_clients=k, n_params=n_params,
+                               payload=PAYLOAD, ring_capacity=RING_CAPACITY,
+                               n_workers=SHARD_WORKERS, mode=mode,
+                               compile=True, hosts=hosts, shards=shards)
+
+            def one():
+                t0 = time.perf_counter()
+                for _ in range(reps):
+                    total = jnp.zeros((cfg.n_slots, PAYLOAD), jnp.float32)
+                    counts = jnp.zeros((cfg.n_slots,), jnp.float32)
+                    _, _, new_global, _ = ec.dispatch_round(
+                        cfg, sched, total, counts, prev)
+                    new_global.block_until_ready()
+                return (time.perf_counter() - t0) / reps
+
+            one()                                     # warmup: jit trace
+            scan_s = min(one() for _ in range(3))
+            if hosts == 1:
+                base[shards] = scan_s
+            row = {
+                "k": k, "mode": mode, "engine": "compiled_hier",
+                "hosts": hosts, "shards": shards,
+                # hosts=1 rows run the flat engine (1-D worker mesh);
+                # hosts>1 rows run the 2-D ('host','worker') mesh.
+                "on_mesh": (host_worker_mesh(hosts, shards) is not None
+                            if hosts > 1 else
+                            worker_mesh(shards) is not None),
+                "n_params": n_params, "payload": PAYLOAD,
+                "ring_capacity": RING_CAPACITY,
+                "n_workers": SHARD_WORKERS,
+                "packets": float(st.data_enqueued),
+                "demux_s": demux_s,
+                "scan_s": scan_s,
+                "round_s": demux_s + scan_s,
+                "pkts_per_s": st.data_enqueued / scan_s,
+                "speedup_vs_host1": base[shards] / scan_s,
+                "interpret": jax.default_backend() != "tpu",
+            }
+            _wire_cols(row)
+            out.append(row)
+            print(f"K={k:4d} {mode:6s}/hosts={hosts} shards={shards} "
+                  f"{'mesh' if row['on_mesh'] else 'emul'} "
+                  f"{scan_s*1e3:9.2f} ms/scan "
+                  f"{row['pkts_per_s']/1e3:9.1f} kpkt/s "
+                  f"({row['speedup_vs_host1']:4.2f}x vs 1 host)")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -382,23 +485,33 @@ def main():
     ap.add_argument("--shard-sweep", action="store_true",
                     help="sweep EngineConfig(shards=N) over the worker "
                          "mesh and write BENCH_shard.json instead")
+    ap.add_argument("--host-sweep", action="store_true",
+                    help="sweep EngineConfig(hosts=H, shards=S) over the "
+                         "(host, worker) mesh; rows join BENCH_shard.json "
+                         "(combine with --shard-sweep for both families)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    if args.shard_sweep:
+    if args.shard_sweep or args.host_sweep:
         out_path = args.out or os.path.join(root, "BENCH_shard.json")
+        rws = []
+        if args.shard_sweep:
+            rws += shard_rows(quick=args.quick)
+        if args.host_sweep:
+            rws += host_rows(quick=args.quick)
         result = {
             "bench": "shard_scaling",
             "backend": jax.default_backend(),
             "n_devices": jax.device_count(),
             "quick": args.quick,
             "shard_sweep": list(SHARD_SWEEP),
+            "host_sweep": list(list(c) for c in HOST_SWEEP),
             "payload": PAYLOAD,
             "ring_capacity": RING_CAPACITY,
             "n_workers": SHARD_WORKERS,
             "loss_rate": LOSS_RATE,
             "dup_rate": DUP_RATE,
-            "rows": shard_rows(quick=args.quick),
+            "rows": rws,
         }
     else:
         out_path = args.out or os.path.join(root, "BENCH_engine.json")

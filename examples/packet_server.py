@@ -20,6 +20,14 @@ identical.  With fewer than N devices a single-device emulation runs;
 to see the real mesh:
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
+``--hosts N`` runs the hierarchical engine (DESIGN.md §12): clients
+are split into N contiguous ownership ranges, each "host" demuxes only
+its own sessions into shard-local partials, and one psum per mesh
+level (worker within a host, then host across hosts) produces the
+global — verified bitwise against both the flat compiled round and the
+eager per-host twin ``run_hier_round``.  Composes with ``--shards``;
+with fewer than N*shards devices a single-device emulation runs.
+
 ``--deadline [N]`` makes client 0 a permanent straggler: its last
 packets and its END trail the round deadline, the server times it out
 and closes on whatever arrived (DESIGN.md §8) — and the demo verifies
@@ -55,8 +63,8 @@ accepted updates — and the demo verifies the compiled one-scan fold is
 global (composable with ``--shards``).
 
 Run:  PYTHONPATH=src python examples/packet_server.py [--compile]
-        [--shards N] [--deadline [N]] [--churn] [--int8] [--async [B]]
-        [--attack MODEL] [--agg MODE]
+        [--shards N] [--hosts N] [--deadline [N]] [--churn] [--int8]
+        [--async [B]] [--attack MODEL] [--agg MODE]
 """
 import argparse
 
@@ -286,6 +294,75 @@ def async_demo(args):
     assert same, "async compiled fold diverged from the eager fold"
 
 
+def hier_demo(args):
+    """Hierarchical aggregation walkthrough (DESIGN.md §12).
+
+    One lossy round is served three ways and the globals compared to
+    the bit:
+
+      flat   — the ordinary compiled engine (hosts=1), the reference;
+      hier   — ``EngineConfig(hosts=H, shards=S)``: the drain schedule
+               is partitioned by client ownership (host h owns the
+               contiguous range [h*K//H, (h+1)*K//H)), each host's
+               slice is demuxed through its *own* rings exactly as a
+               real leaf host would see it, and the compiled scan folds
+               all H*S partials with one psum per mesh level;
+      twin   — ``run_hier_round``: H independent *eager* leaf engines
+               plus an explicit host-level merge, the reference the
+               compiled hier round must match even in approx mode.
+
+    On integer payloads every partial sum is exactly representable, so
+    regrouping the adds by host cannot change a single bit: flat ==
+    hier == twin, at any (hosts, shards).
+    """
+    from repro.core.server import run_hier_round
+    H, S = args.hosts, args.shards
+    K, P, W = 12, 4096, 64
+    rng = np.random.default_rng(0)
+    # integer-valued params: f32 sums are order-independent, so the
+    # three-way comparison below is exact to the bit (DESIGN.md §12)
+    flats = jnp.asarray(rng.integers(-8, 9, (K, P)).astype(np.float32))
+    prev = jnp.zeros((P,), jnp.float32)
+    pk = jax.vmap(lambda f: packetize(f, W))(flats)
+    events, _ = make_uplink_stream(rng, pk, loss_rate=0.0468,
+                                   dup_rate=0.05)
+    n_dev = len(jax.devices())
+    layout = ("2-D ('host','worker') mesh" if n_dev >= H * S
+              else f"single-device emulation ({n_dev} devices < "
+                   f"{H}x{S})")
+    print(f"\n== hierarchical round: hosts={H} x shards={S} "
+          f"[{layout}] (DESIGN.md §12) ==")
+    for h in range(H):
+        lo, hi = (h * K) // H, ((h + 1) * K) // H
+        print(f"  host {h} owns clients [{lo}, {hi})")
+    for mode in ("exact", "approx"):
+        kw = dict(n_clients=K, n_params=P, payload=W, ring_capacity=64,
+                  mode=mode)
+        flat = run_engine_round(EngineConfig(compile=True, **kw),
+                                flats, prev, events)
+        hier = run_engine_round(
+            EngineConfig(compile=True, hosts=H, shards=S, **kw),
+            flats, prev, events)
+        twin = run_hier_round(EngineConfig(compile=True, hosts=H,
+                                           shards=S, **kw),
+                              flats, prev, events)
+        vs_twin = (np.array_equal(np.asarray(hier.new_global),
+                                  np.asarray(twin.new_global))
+                   and np.array_equal(np.asarray(hier.counts),
+                                      np.asarray(twin.counts)))
+        vs_flat = np.array_equal(np.asarray(hier.new_global),
+                                 np.asarray(flat.new_global))
+        s = hier.stats
+        print(f"  {mode:6s}: {s.data_enqueued} pkts over {H} hosts, "
+              f"compiled hier == eager per-host twin: {vs_twin}; "
+              f"== flat compiled round: {vs_flat}")
+        # approx mode re-races per host: only the twin (which re-runs
+        # the same per-host rings) is a bitwise reference there
+        assert vs_twin, "hier round diverged from its eager twin"
+        if mode == "exact":
+            assert vs_flat, "exact hier round diverged from flat"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--compile", action="store_true",
@@ -294,6 +371,10 @@ def main():
     ap.add_argument("--shards", type=int, default=1,
                     help="worker-mesh shards for the compiled round "
                          "(implies --compile; DESIGN.md §7)")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="hierarchical hosts for the compiled round: "
+                         "per-host client ownership + two-level psum "
+                         "(implies --compile; DESIGN.md §12)")
     ap.add_argument("--deadline", type=int, nargs="?", const=-1,
                     default=None, metavar="N",
                     help="deadline-closed partial-round demo: time out "
@@ -323,8 +404,11 @@ def main():
                     help="robust agg_mode for the --attack demo "
                          "(default: trimmed_mean)")
     args = ap.parse_args()
-    if args.shards > 1:
+    if args.shards > 1 or args.hosts > 1:
         args.compile = True
+    if args.hosts > 1:
+        hier_demo(args)
+        return
     if args.attack is not None:
         attack_demo(args)
         return

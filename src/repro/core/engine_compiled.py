@@ -42,6 +42,26 @@ that pipeline and compiles the *execution*:
    divide; a vmap emulation covers platforms with fewer devices,
    bitwise identically.
 
+5. **Hierarchy** (``EngineConfig(hosts=H)``, DESIGN.md §12): the
+   accepted arrivals are partitioned by contiguous client-range
+   ownership (``partition_schedule_by_host``), each leaf host
+   re-demuxes only its own clients' packets with its own rings, the
+   shard split applies within each host, and the fold combines with
+   one psum per level of the 2-D ``('host', 'worker')`` mesh.
+
+Invariants the tests pin (tests/test_engine_compiled.py,
+test_engine_sharded.py, test_engine_hier.py):
+
+- *Bitwise parity*: on integer-valued payloads in exact mode, every
+  ``(hosts, shards)`` factorization — including the nested-vmap
+  emulation — produces bit-identical ``(total, counts, new_global)``
+  to the unsharded compiled round, which is itself bit-identical to
+  the eager ``ServerEngine``.  Approx mode is bitwise vs the engine
+  with the *same* batching (eager per-host twin at ``hosts > 1``).
+- *Conservation*: accepted = enqueued arrivals; per-host
+  ``data_enqueued`` sums to the global count; dedup/phase/malformed
+  drops are disjoint buckets.
+
 Entry points: ``run_compiled_round`` mirrors
 ``server.run_engine_round`` (which routes here when
 ``EngineConfig.compile`` is set); ``ServerEngine`` with
@@ -68,13 +88,14 @@ from repro.core.server import (AsyncResult, AsyncState, AsyncStats,
                                RoundResult, UpdateRecord,  # noqa: F401
                                check_quorum, payload_malformed)
 from repro.kernels.packet_scatter import (BLOCK_PKTS, norm_clip_weights,
+                                          packet_scatter_accum_hier,
                                           packet_scatter_accum_scan,
                                           packet_scatter_accum_sharded,
                                           packet_table_scatter,
                                           robust_finalize_jnp,
                                           robust_finalize_pallas,
                                           staleness_weights)
-from repro.runtime.sharding import worker_ctx
+from repro.runtime.sharding import host_ctx, worker_ctx
 
 
 def _interpret() -> bool:
@@ -127,6 +148,14 @@ class DrainSchedule:
                                            # robust table modes' combined
                                            # index needs it (DESIGN.md
                                            # §11); None when untracked
+    arrivals: Optional[tuple] = None       # the accepted arrival-order
+                                           # columns this schedule was
+                                           # built from: (slots, weights,
+                                           # payloads, scales, staleness,
+                                           # clients) — cheap references,
+                                           # kept so the hierarchical
+                                           # path can re-demux per host
+                                           # (DESIGN.md §12)
 
 
 def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
@@ -162,6 +191,7 @@ def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
     W = int(payloads.shape[1])
     B = ring_capacity + (-ring_capacity) % block_pkts
     pk_dtype = np.float32 if scales is None else np.int8
+    arrivals = (slots, weights, payloads, scales, staleness, clients)
     if n == 0:
         return DrainSchedule(np.full((1, B), -1, np.int32),
                              np.zeros((1, B), np.float32),
@@ -172,7 +202,8 @@ def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
                              None if staleness is None
                              else np.zeros((1, B), np.float32),
                              None if clients is None
-                             else np.full((1, B), -1, np.int32))
+                             else np.full((1, B), -1, np.int32),
+                             arrivals)
     if ring_assign == "slot":
         worker = slots.astype(np.int64) % n_workers
     else:
@@ -220,7 +251,8 @@ def build_drain_schedule(slots: np.ndarray, weights: np.ndarray,
         cl[row, col] = clients
     row_worker = np.full(n_rows, -1, np.int64)
     row_worker[rank] = uniq // (n + 1)            # batch key -> its worker
-    return DrainSchedule(idx, w, pk, int(nb), n, row_worker, sc, st, cl)
+    return DrainSchedule(idx, w, pk, int(nb), n, row_worker, sc, st, cl,
+                         arrivals)
 
 
 def shard_schedule(sched: DrainSchedule, n_shards: int, *,
@@ -271,6 +303,79 @@ def shard_schedule(sched: DrainSchedule, n_shards: int, *,
             sc[s, :len(p)] = sched.scales[p]
         if st is not None:
             st[s, :len(p)] = sched.staleness[p]
+    return idx, w, pk, sc, st
+
+
+def partition_schedule_by_host(sched: DrainSchedule, n_hosts: int,
+                               n_clients: int, *, n_workers: int,
+                               ring_capacity: int, ring_assign: str = "rr"
+                               ) -> List[DrainSchedule]:
+    """Demux a round's arrivals per leaf host (DESIGN.md §12).
+
+    Host ``h`` owns the contiguous client range
+    ``runtime.sharding.client_range(h, n_hosts, n_clients)`` — every
+    accepted arrival belongs to exactly one host and the per-host
+    subsequences concatenate (in client-range order) to a permutation
+    of the full arrival stream: the schedule-partition property
+    (tests/test_engine_hier.py).  Each host then replays the *eager
+    per-host engine's* ring demux over only its own arrivals, in their
+    original relative order, with its own rings and rr pointer — a real
+    leaf host never sees other hosts' packets, so its batch composition
+    must be computed from its filtered stream, not sliced out of the
+    global schedule (under rr demux the two differ).  That is why
+    ``DrainSchedule`` keeps its ``arrivals`` columns.
+
+    Runs *before* any robust-table index rewrite (the rewrite keys on
+    the original slot/client columns) and before ``shard_schedule``
+    (ring→shard ownership applies within each host).
+    """
+    assert sched.arrivals is not None, "schedule predates arrival tracking"
+    slots, weights, payloads, scales, staleness, clients = sched.arrivals
+    assert clients is not None, \
+        "hierarchical demux needs a client-tracked schedule"
+    from repro.runtime.sharding import client_owner
+    owner = client_owner(clients, n_hosts, n_clients)
+    out = []
+    for h in range(n_hosts):
+        m = owner == h
+        out.append(build_drain_schedule(
+            np.asarray(slots)[m], np.asarray(weights)[m],
+            np.asarray(payloads)[m], n_workers=n_workers,
+            ring_capacity=ring_capacity, ring_assign=ring_assign,
+            scales=None if scales is None else np.asarray(scales)[m],
+            staleness=(None if staleness is None
+                       else np.asarray(staleness)[m]),
+            clients=np.asarray(clients)[m]))
+    return out
+
+
+def _stack_host_shards(per_host: List[Tuple]
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                  Optional[np.ndarray],
+                                  Optional[np.ndarray]]:
+    """Stack H per-host ``shard_schedule`` outputs (each (S, R_h, B[, W]))
+    into (H, S, R, B[, W]) arrays padded to the max row count with inert
+    rows — the leaf grid ``packet_scatter_accum_hier`` scans."""
+    H = len(per_host)
+    S, _, B = per_host[0][0].shape
+    W = per_host[0][2].shape[-1]
+    R = max(p[0].shape[1] for p in per_host)
+    idx = np.full((H, S, R, B), -1, np.int32)
+    w = np.zeros((H, S, R, B), np.float32)
+    pk = np.zeros((H, S, R, B, W), per_host[0][2].dtype)
+    sc = (None if per_host[0][3] is None
+          else np.zeros((H, S, R, B), np.float32))
+    st = (None if per_host[0][4] is None
+          else np.zeros((H, S, R, B), np.float32))
+    for h, (hi, hw, hpk, hsc, hst) in enumerate(per_host):
+        r = hi.shape[1]
+        idx[h, :, :r] = hi
+        w[h, :, :r] = hw
+        pk[h, :, :r] = hpk
+        if sc is not None:
+            sc[h, :, :r] = hsc
+        if st is not None:
+            st[h, :, :r] = hst
     return idx, w, pk, sc, st
 
 
@@ -477,14 +582,15 @@ def demux_events(cfg: EngineConfig, events: Iterable,
                                     "use_pallas", "block_slots",
                                     "block_pkts", "mix_alpha", "interpret",
                                     "agg_clip", "clip_tau",
-                                    "shards", "mesh"),
+                                    "shards", "hosts", "mesh"),
                    donate_argnums=(0, 1))
 def _round_device(total, counts, sched_idx, sched_w, sched_pk, sched_scales,
                   prev_global, client_flats, down_mask, *, mode: str,
                   payload: int, n_params: int, use_pallas: bool,
                   block_slots: int, block_pkts: int, mix_alpha: float,
                   interpret: bool, agg_clip: bool = False,
-                  clip_tau: float = 1.0, shards: int = 1, mesh=None):
+                  clip_tau: float = 1.0, shards: int = 1, hosts: int = 1,
+                  mesh=None):
     """The whole round as one compiled dataflow.
 
     total (S, W) / counts (S,) are donated and carried through the drain
@@ -502,7 +608,10 @@ def _round_device(total, counts, sched_idx, sched_w, sched_pk, sched_scales,
     axis and the drain scan runs per shard into shard-local partials
     combined by one psum (DESIGN.md §7) — over the ``'worker'`` device
     mesh when ``mesh`` is given, else emulated on one device; the END
-    divide below is fused after the combine either way.
+    divide below is fused after the combine either way.  With
+    ``hosts > 1`` the arrays carry (hosts, shards, ...) leading axes
+    and the fold runs per leaf with one psum per mesh level — worker
+    within a host, then host across hosts (DESIGN.md §12).
     """
     S = counts.shape[0]
     acc, cnt = total, counts[:, None]
@@ -516,7 +625,14 @@ def _round_device(total, counts, sched_idx, sched_w, sched_pk, sched_scales,
         # any shard split) cannot change the numerics vs the eager drain
         sched_w = norm_clip_weights(sched_w, sched_pk, tau=clip_tau,
                                     scales=sched_scales)
-    if shards > 1:
+    if hosts > 1:
+        acc, cnt = packet_scatter_accum_hier(
+            sched_idx, sched_w, sched_pk, acc, cnt,
+            sched_scales=sched_scales, mesh=mesh,
+            exact=(mode == "exact"), use_pallas=use_pallas,
+            block_slots=block_slots, block_pkts=block_pkts,
+            interpret=interpret)
+    elif shards > 1:
         acc, cnt = packet_scatter_accum_sharded(
             sched_idx, sched_w, sched_pk, acc, cnt,
             sched_scales=sched_scales, mesh=mesh,
@@ -550,14 +666,15 @@ def _round_device(total, counts, sched_idx, sched_w, sched_pk, sched_scales,
                                     "n_clients", "use_pallas",
                                     "block_slots", "block_pkts",
                                     "mix_alpha", "interpret", "median",
-                                    "beta", "shards", "mesh"))
+                                    "beta", "shards", "hosts", "mesh"))
 def _robust_round_device(sched_idx, sched_w, sched_pk, sched_scales,
                          prev_global, client_flats, down_mask, *,
                          payload: int, n_params: int, n_slots: int,
                          n_clients: int, use_pallas: bool,
                          block_slots: int, block_pkts: int,
                          mix_alpha: float, interpret: bool, median: bool,
-                         beta: float, shards: int = 1, mesh=None):
+                         beta: float, shards: int = 1, hosts: int = 1,
+                         mesh=None):
     """Robust table round (trimmed-mean / median, DESIGN.md §11) as one
     compiled dataflow.
 
@@ -584,7 +701,7 @@ def _robust_round_device(sched_idx, sched_w, sched_pk, sched_scales,
     # of the batch scan — the scan's per-batch (S·K, B) one-hot routing
     # is quadratic in the table height.  +1 dustbin row for the idx=-1
     # padding; pallas keeps the blocked grid (its production body).
-    flat_fold = shards == 1 and not use_pallas
+    flat_fold = shards == 1 and hosts == 1 and not use_pallas
     pad = (-SK) % block_slots if use_pallas else 1
     acc = jnp.zeros((SK + pad, payload), jnp.float32)
     cnt = jnp.zeros((SK + pad, 1), jnp.float32)
@@ -592,6 +709,16 @@ def _robust_round_device(sched_idx, sched_w, sched_pk, sched_scales,
         acc, cnt = packet_table_scatter(sched_idx, sched_w, sched_pk,
                                         acc, cnt,
                                         sched_scales=sched_scales)
+    elif hosts > 1:
+        # each (slot, client) row lives on exactly one host (ownership)
+        # and is written exactly once (dedup), so the host-level psum
+        # adds its 0+1.0·row to H-1 zeros: bitwise at any host count on
+        # ANY payloads, not just integer ones (DESIGN.md §12)
+        acc, cnt = packet_scatter_accum_hier(
+            sched_idx, sched_w, sched_pk, acc, cnt,
+            sched_scales=sched_scales, mesh=mesh, exact=True,
+            use_pallas=use_pallas, block_slots=block_slots,
+            block_pkts=block_pkts, interpret=interpret)
     elif shards > 1:
         acc, cnt = packet_scatter_accum_sharded(
             sched_idx, sched_w, sched_pk, acc, cnt,
@@ -659,20 +786,40 @@ def dispatch_round(cfg: EngineConfig, sched: DrainSchedule, total, counts,
     scan through the sharded partial-sum path: over a real ``'worker'``
     mesh when the platform has enough devices
     (``runtime.sharding.worker_mesh``), else a bitwise single-device
-    emulation.
+    emulation.  ``cfg.hosts > 1`` first partitions the arrivals by
+    client-range ownership (``partition_schedule_by_host``), re-demuxes
+    each host's stream with its own rings, shard-splits within each
+    host, and routes through the two-level psum fold over the 2-D
+    ``('host', 'worker')`` mesh (``runtime.sharding.host_worker_mesh``)
+    — or its bitwise nested-vmap emulation (DESIGN.md §12).
     """
     if cfg.mode not in ("exact", "approx"):
         raise ValueError(cfg.mode)
     robust_table = cfg.agg_mode in ("trimmed_mean", "median")
-    if robust_table:
-        sched = _combined_table_sched(sched, cfg.n_clients)
-    idx, w, pk, sc = (sched.idx, sched.weights, sched.payloads,
-                      sched.scales)
     mesh = None
-    if cfg.shards > 1:
-        idx, w, pk, sc, _ = shard_schedule(sched, cfg.shards)
-        ctx = worker_ctx(cfg.shards)
+    if cfg.hosts > 1:
+        # partition BEFORE the robust index rewrite (ownership keys on
+        # the original client column) and before the shard split (ring
+        # ownership applies within each host)
+        per_host = partition_schedule_by_host(
+            sched, cfg.hosts, cfg.n_clients, n_workers=cfg.n_workers,
+            ring_capacity=cfg.ring_capacity, ring_assign=cfg.ring_assign)
+        if robust_table:
+            per_host = [_combined_table_sched(s, cfg.n_clients)
+                        for s in per_host]
+        idx, w, pk, sc, _ = _stack_host_shards(
+            [shard_schedule(s, cfg.shards) for s in per_host])
+        ctx = host_ctx(cfg.hosts, cfg.shards)
         mesh = None if ctx is None else ctx.mesh
+    else:
+        if robust_table:
+            sched = _combined_table_sched(sched, cfg.n_clients)
+        idx, w, pk, sc = (sched.idx, sched.weights, sched.payloads,
+                          sched.scales)
+        if cfg.shards > 1:
+            idx, w, pk, sc, _ = shard_schedule(sched, cfg.shards)
+            ctx = worker_ctx(cfg.shards)
+            mesh = None if ctx is None else ctx.mesh
     if robust_table:
         return _robust_round_device(
             jnp.asarray(idx), jnp.asarray(w), jnp.asarray(pk),
@@ -686,7 +833,7 @@ def dispatch_round(cfg: EngineConfig, sched: DrainSchedule, total, counts,
             block_pkts=min(BLOCK_PKTS, idx.shape[-1]),
             mix_alpha=float(mix_alpha), interpret=_interpret(),
             median=(cfg.agg_mode == "median"), beta=float(cfg.trim_beta),
-            shards=cfg.shards, mesh=mesh)
+            shards=cfg.shards, hosts=cfg.hosts, mesh=mesh)
     return _round_device(
         jnp.asarray(total, jnp.float32), jnp.asarray(counts, jnp.float32),
         jnp.asarray(idx), jnp.asarray(w), jnp.asarray(pk),
@@ -699,7 +846,8 @@ def dispatch_round(cfg: EngineConfig, sched: DrainSchedule, total, counts,
         block_pkts=min(BLOCK_PKTS, idx.shape[-1]),
         mix_alpha=float(mix_alpha), interpret=_interpret(),
         agg_clip=(cfg.agg_mode == "norm_clip"),
-        clip_tau=float(cfg.clip_tau), shards=cfg.shards, mesh=mesh)
+        clip_tau=float(cfg.clip_tau), shards=cfg.shards, hosts=cfg.hosts,
+        mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -877,7 +1025,7 @@ def demux_events_async(cfg: EngineConfig, events: Iterable,
             h[staleness] = h.get(staleness, 0) + 1
             base_w = float(wts[c])
             for slot, pay, q8, sc in buf[c]:
-                win.append((slot, base_w, staleness, pay, q8, sc))
+                win.append((slot, base_w, staleness, pay, q8, sc, c))
             buf[c] = []
             pending += 1
             if pending >= cfg.buffer_size:
@@ -905,6 +1053,7 @@ def demux_events_async(cfg: EngineConfig, events: Iterable,
         slots = np.asarray([e[0] for e in entries], np.int32)
         w_col = np.asarray([e[1] for e in entries], np.float32)
         st_col = np.asarray([e[2] for e in entries], np.float32)
+        cl_col = np.asarray([e[6] for e in entries], np.int32)
         sc_col = None
         if homogeneous_q8:
             pay = (np.asarray([e[3] for e in entries], np.int8) if n
@@ -917,12 +1066,12 @@ def demux_events_async(cfg: EngineConfig, events: Iterable,
             pay = (np.stack([
                 np.asarray(p, np.int8).astype(np.float32) * np.float32(s)
                 if q else np.asarray(p, np.float32)
-                for _, _, _, p, q, s in entries]) if n
+                for _, _, _, p, q, s, _ in entries]) if n
                 else np.zeros((0, cfg.payload), np.float32))
         return build_drain_schedule(
             slots, w_col, pay, n_workers=cfg.n_workers,
             ring_capacity=cfg.ring_capacity, ring_assign=cfg.ring_assign,
-            scales=sc_col, staleness=st_col)
+            scales=sc_col, staleness=st_col, clients=cl_col)
 
     scheds = [_window_sched(w) for w in windows]
     stats.batches_drained = sum(s.n_batches for s in scheds)
@@ -963,7 +1112,7 @@ def demux_events_async(cfg: EngineConfig, events: Iterable,
                                     "block_pkts", "interpret",
                                     "stale_mode", "stale_alpha",
                                     "norm_clip", "agg_clip", "clip_tau",
-                                    "shards", "mesh"),
+                                    "shards", "hosts", "mesh"),
                    donate_argnums=(0, 1))
 def _async_device(total, counts, g, sched_idx, sched_w, sched_st, sched_pk,
                   sched_scales, emit, *, mode: str, payload: int,
@@ -971,7 +1120,7 @@ def _async_device(total, counts, g, sched_idx, sched_w, sched_st, sched_pk,
                   block_pkts: int, interpret: bool, stale_mode: str,
                   stale_alpha: float, norm_clip: float,
                   agg_clip: bool = False, clip_tau: float = 1.0,
-                  shards: int = 1, mesh=None):
+                  shards: int = 1, hosts: int = 1, mesh=None):
     """One jitted dispatch for a whole async demux call (DESIGN.md §10).
 
     ``lax.scan`` over emit windows with the donated ``(total, counts)``
@@ -1008,7 +1157,13 @@ def _async_device(total, counts, g, sched_idx, sched_w, sched_st, sched_pk,
             # agg_mode="norm_clip" composes *after* the staleness
             # weighting, matching the eager _fold_window (§11)
             eff = norm_clip_weights(eff, wpk, tau=clip_tau, scales=wsc)
-        if shards > 1:
+        if hosts > 1:
+            acc, cnt = packet_scatter_accum_hier(
+                widx, eff, wpk, acc, cnt, sched_scales=wsc, mesh=mesh,
+                exact=(mode == "exact"), use_pallas=use_pallas,
+                block_slots=block_slots, block_pkts=block_pkts,
+                interpret=interpret)
+        elif shards > 1:
             acc, cnt = packet_scatter_accum_sharded(
                 widx, eff, wpk, acc, cnt, sched_scales=wsc, mesh=mesh,
                 exact=(mode == "exact"), use_pallas=use_pallas,
@@ -1047,12 +1202,44 @@ def dispatch_async(cfg: EngineConfig, asched: AsyncSchedule, total, counts,
     window's schedule per shard (ring ownership, ``shard_schedule``)
     and routes each window through the sharded partial-sum fold — over
     the ``'worker'`` mesh when the platform has the devices, else the
-    bitwise vmap emulation.
+    bitwise vmap emulation.  ``cfg.hosts > 1`` additionally partitions
+    every window's arrivals by client-range ownership first
+    (``partition_schedule_by_host``) and routes through the two-level
+    fold over the (host, worker) mesh (DESIGN.md §12).
     """
     idx, w, st, pk, sc = (asched.idx, asched.weights, asched.staleness,
                           asched.payloads, asched.scales)
     mesh = None
-    if cfg.shards > 1:
+    if cfg.hosts > 1:
+        per_win = []
+        for s in asched.scheds:
+            ph = partition_schedule_by_host(
+                s, cfg.hosts, cfg.n_clients, n_workers=cfg.n_workers,
+                ring_capacity=cfg.ring_capacity,
+                ring_assign=cfg.ring_assign)
+            per_win.append(_stack_host_shards(
+                [shard_schedule(p, cfg.shards) for p in ph]))
+        R = max(p[0].shape[2] for p in per_win)
+        nW, H, nS = asched.n_windows, cfg.hosts, cfg.shards
+        B = asched.idx.shape[2]
+        W = asched.payloads.shape[3]
+        idx = np.full((nW, H, nS, R, B), -1, np.int32)
+        w = np.zeros((nW, H, nS, R, B), np.float32)
+        st = np.zeros((nW, H, nS, R, B), np.float32)
+        pk = np.zeros((nW, H, nS, R, B, W), asched.payloads.dtype)
+        sc = (None if asched.scales is None
+              else np.zeros((nW, H, nS, R, B), np.float32))
+        for i, (pi, pw, ppk, psc, pst) in enumerate(per_win):
+            r = pi.shape[2]
+            idx[i, :, :, :r] = pi
+            w[i, :, :, :r] = pw
+            st[i, :, :, :r] = pst
+            pk[i, :, :, :r] = ppk
+            if sc is not None:
+                sc[i, :, :, :r] = psc
+        ctx = host_ctx(cfg.hosts, cfg.shards)
+        mesh = None if ctx is None else ctx.mesh
+    elif cfg.shards > 1:
         per_win = [shard_schedule(s, cfg.shards) for s in asched.scheds]
         R = max(p[0].shape[1] for p in per_win)
         nW, nS = asched.n_windows, cfg.shards
@@ -1087,7 +1274,8 @@ def dispatch_async(cfg: EngineConfig, asched: AsyncSchedule, total, counts,
         stale_alpha=float(cfg.staleness_alpha),
         norm_clip=float(cfg.norm_clip),
         agg_clip=(cfg.agg_mode == "norm_clip"),
-        clip_tau=float(cfg.clip_tau), shards=cfg.shards, mesh=mesh)
+        clip_tau=float(cfg.clip_tau), shards=cfg.shards, hosts=cfg.hosts,
+        mesh=mesh)
 
 
 def run_compiled_async(cfg: EngineConfig, events: Iterable, prev_global,

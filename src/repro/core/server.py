@@ -29,6 +29,23 @@ Semantics (DESIGN.md §3):
 - **TX** applies the downlink mask with the client-side fallback (§3.1):
   elements of packets lost on the way down stay at the client's local
   value.
+
+This module is the *eager reference*: every compiled path
+(core/engine_compiled.py) is differential-tested against an engine
+here.  The invariants the twins pin down:
+
+- **Bitwise parity**: with integer-valued payloads in exact mode, the
+  compiled round — at any ``(hosts, shards)`` — equals this engine bit
+  for bit; approx mode equals the engine with the same batching
+  (``run_hier_round`` builds the per-host eager twin for
+  ``hosts > 1``, DESIGN.md §12).
+- **Conservation**: every DATA packet lands in exactly one bucket
+  (``data_enqueued`` + ``duplicates_dropped`` + ``phase_dropped`` +
+  ``late_dropped`` + ``malformed_dropped``), and accepted arrivals
+  equal the protocol-level counts for any loss/duplication pattern.
+- **Close semantics**: deadline → straggler timeout → quorum guard
+  fire in that order at every close, with identical wording from the
+  eager and bulk paths (``check_quorum``).
 """
 from __future__ import annotations
 
@@ -73,6 +90,15 @@ class EngineConfig:
     # parallelism is min(shards, n_workers, available devices); any
     # shard count is bitwise identical on integer payloads.
     shards: int = 1
+    # hierarchical leaf hosts for the compiled round (DESIGN.md §12):
+    # each host owns a contiguous client range, demuxes only its own
+    # clients' packets with its own rings, and the fold combines with
+    # one psum per level of the 2-D ('host', 'worker') mesh.  Any
+    # (hosts, shards) factorization is bitwise identical to hosts=1 on
+    # integer payloads in exact mode; approx mode matches the eager
+    # per-host twin (run_hier_round) instead, because per-host rings
+    # change batch composition and with it the race windows.
+    hosts: int = 1
     # async buffered mode (DESIGN.md §10): with ``buffer_size = B`` the
     # engine stops framing rounds at END/deadline — accepted client
     # updates fold continuously into the donated accumulators and a new
@@ -116,6 +142,14 @@ class EngineConfig:
                 "shards > 1 requires compile=True: sharding demuxes the "
                 "compiled drain schedule over the worker mesh "
                 "(DESIGN.md §7)")
+        if self.hosts < 1:
+            raise ValueError(f"hosts must be >= 1, got {self.hosts}")
+        if self.hosts > 1 and not self.compile:
+            raise ValueError(
+                "hosts > 1 requires compile=True: the hierarchical round "
+                "partitions the compiled drain schedule over the "
+                "(host, worker) mesh (DESIGN.md §12); the eager per-host "
+                "twin is server.run_hier_round")
         if self.staleness_mode not in ("const", "poly", "norm"):
             raise ValueError(
                 f"staleness_mode must be const|poly|norm, got "
@@ -938,3 +972,115 @@ def run_engine_round(cfg: EngineConfig, client_flats: jnp.ndarray,
                                       mix_alpha=mix_alpha)
     return RoundResult(new_global, counts, engine.up_mask(), new_flats,
                        engine.stats)
+
+
+def run_hier_round(cfg: EngineConfig, client_flats, prev_global,
+                   events: Iterable, down_mask=None, weights=None,
+                   mix_alpha: float = 0.0) -> RoundResult:
+    """Eager per-host twin of the hierarchical compiled round
+    (DESIGN.md §12): ``cfg.hosts`` independent eager ``ServerEngine``
+    leaves, each fed only the packets of the client range it owns, and
+    a host-level combine of their raw ``(total, counts)`` accumulators
+    — or, for the robust table modes, their client tables — before ONE
+    global END divide / rank-select finalize.
+
+    This is the differential reference the hierarchical tests diff the
+    compiled engine against (tests/test_engine_hier.py): a real leaf
+    host sees only its own clients' packets and runs its own rings, so
+    this twin reproduces the per-host *batch composition* exactly —
+    which is what makes it the right oracle for approx mode and
+    ``norm_clip`` too, where batching changes numerics and the
+    unsharded engine does not agree.
+
+    Semantics notes:
+
+    - Each leaf runs with ``min_clients=0``; quorum is a *global*
+      property of the round, checked here over the summed participant
+      counts (same ``check_quorum`` wording as every other close).
+    - ``round_deadline`` / ``buffer_size`` are rejected: a deadline is
+      a position in the *global* event stream, which has no meaning in
+      a leaf's filtered stream, and the async window grammar is its own
+      driver (``run_async_engine``).
+    - ``stats`` sums the per-host counters.  ``batches_drained`` is the
+      per-host total, which legitimately differs from the unsharded
+      engine's count (H partial flushes instead of one); the conserved
+      quantities — ``data_enqueued``, drop buckets, replies — are what
+      the tests compare.
+    """
+    from repro.runtime.sharding import HostCtx
+    if cfg.round_deadline is not None:
+        raise ValueError(
+            "run_hier_round: round_deadline positions index the global "
+            "event stream and do not map to per-host streams "
+            "(DESIGN.md §12)")
+    if cfg.buffer_size is not None:
+        raise ValueError(
+            "run_hier_round is a synchronous-round twin; async buffered "
+            "mode has its own driver (run_async_engine)")
+    hosts = [HostCtx(h, cfg.hosts, cfg.n_clients)
+             for h in range(cfg.hosts)]
+    leaf_cfg = dataclasses.replace(cfg, hosts=1, shards=1, compile=False,
+                                   min_clients=0, round_deadline=None)
+    engines = [ServerEngine(leaf_cfg, weights=weights) for _ in hosts]
+    for packet, payload in events:
+        for ctx, eng in zip(hosts, engines):
+            if ctx.owns(packet.client):
+                eng.rx(packet, payload)
+                break
+    replies = sum(e.stats.control_replies for e in engines)
+    for eng in engines:
+        eng._close_round()
+        eng.flush()
+    check_quorum(sum(e.fsm.participants() for e in engines),
+                 cfg.min_clients,
+                 sum(e.stats.stragglers_timed_out for e in engines))
+    robust_table = cfg.agg_mode in ("trimmed_mean", "median")
+    if robust_table:
+        # host-level combine of the client tables: each (client, slot)
+        # row lives on exactly one host, so the sum is a disjoint merge
+        tab = np.zeros((cfg.n_clients, cfg.n_slots, cfg.payload),
+                       np.float32)
+        mask = np.zeros((cfg.n_clients, cfg.n_slots), np.float32)
+        for eng in engines:
+            tab += eng._tab
+            mask += eng._tab_mask
+        from repro.kernels.packet_scatter import robust_finalize_jnp
+        table = jnp.asarray(tab.swapaxes(0, 1))          # (N, K, W)
+        pres = jnp.asarray(mask.T)                       # (N, K)
+        agg, counts = robust_finalize_jnp(
+            table, pres, median=(cfg.agg_mode == "median"),
+            beta=cfg.trim_beta)
+    else:
+        # host-level combine of the raw accumulators — the outer level
+        # of the two-level partial sum, then the one global END divide
+        # (the exact op sequence of StreamingAggregator.finalize)
+        total = sum(jnp.asarray(e.agg.total) for e in engines)
+        counts = sum(jnp.asarray(e.agg.counts) for e in engines)
+        agg = total / jnp.maximum(counts, 1e-12)[:, None]
+        agg = jnp.where(counts[:, None] > 0, agg, 0.0)
+    agg_flat = depacketize(agg, cfg.n_params)
+    have = expand_packet_mask(counts > 0, cfg.payload, cfg.n_params)
+    new_global = jnp.where(have, agg_flat, jnp.asarray(prev_global))
+    up = sum(np.asarray(e.up_mask()) for e in engines)   # disjoint clients
+    new_flats = None
+    if down_mask is not None:
+        down_elem = expand_packet_mask(down_mask, cfg.payload,
+                                       cfg.n_params)
+        new_flats = jnp.where(down_elem > 0, new_global[None, :],
+                              jnp.asarray(client_flats))
+        if mix_alpha > 0:
+            new_flats = (mix_alpha * jnp.asarray(client_flats)
+                         + (1 - mix_alpha) * new_flats)
+    stats = EngineStats(
+        data_enqueued=sum(e.stats.data_enqueued for e in engines),
+        duplicates_dropped=sum(e.stats.duplicates_dropped
+                               for e in engines),
+        phase_dropped=sum(e.stats.phase_dropped for e in engines),
+        batches_drained=sum(e.stats.batches_drained for e in engines),
+        control_replies=replies,
+        stragglers_timed_out=sum(e.stats.stragglers_timed_out
+                                 for e in engines),
+        late_dropped=sum(e.stats.late_dropped for e in engines),
+        malformed_dropped=sum(e.stats.malformed_dropped for e in engines))
+    return RoundResult(new_global, counts, jnp.asarray(up), new_flats,
+                       stats)

@@ -630,20 +630,32 @@ def packet_scatter_accum_scan(sched_idx: jnp.ndarray, sched_w: jnp.ndarray,
 
 
 def combine_partials(acc_parts: jnp.ndarray, cnt_parts: jnp.ndarray,
-                     axis_name: str | None = None):
+                     axis_name=None, axis=0):
     """Merge per-shard partial sums (the paper's per-core combine, §3.2).
 
     Inside ``shard_map`` the partials live one-per-device and the merge
-    is a single ``psum`` over ``axis_name``; in the single-device
-    emulation they carry a leading shard axis and the merge is a plain
-    sum over it.  Both orderings add one partial per shard, so for
-    payloads whose sums are exactly representable in f32 (integer-valued
-    test streams) the two paths are bitwise identical.
+    is a single ``psum`` per mesh level over ``axis_name`` — a string
+    for the 1-D worker mesh, or a sequence (innermost level first, e.g.
+    ``('worker', 'host')``, DESIGN.md §12) for the hierarchical mesh.
+    In the single-device emulation the partials carry leading shard
+    axes and the merge is a plain sum over ``axis`` (an int or a
+    sequence of ints, summed innermost/highest axis first to mirror the
+    psum order).  Every ordering adds exactly one partial per leaf, so
+    for payloads whose sums are exactly representable in f32
+    (integer-valued test streams) all paths are bitwise identical.
     """
     if axis_name is not None:
-        return (jax.lax.psum(acc_parts, axis_name),
-                jax.lax.psum(cnt_parts, axis_name))
-    return jnp.sum(acc_parts, axis=0), jnp.sum(cnt_parts, axis=0)
+        names = ((axis_name,) if isinstance(axis_name, str)
+                 else tuple(axis_name))
+        for name in names:
+            acc_parts = jax.lax.psum(acc_parts, name)
+            cnt_parts = jax.lax.psum(cnt_parts, name)
+        return acc_parts, cnt_parts
+    axes = (axis,) if isinstance(axis, int) else tuple(axis)
+    for ax in sorted(axes, reverse=True):
+        acc_parts = jnp.sum(acc_parts, axis=ax)
+        cnt_parts = jnp.sum(cnt_parts, axis=ax)
+    return acc_parts, cnt_parts
 
 
 def packet_scatter_accum_sharded(sched_idx: jnp.ndarray,
@@ -721,4 +733,85 @@ def packet_scatter_accum_sharded(sched_idx: jnp.ndarray,
             lambda bidx, bw, bpk: body(bidx, bw, bpk, zero_acc, zero_cnt)
         )(sched_idx, sched_w, sched_pk)
         a, c = combine_partials(a_parts, c_parts)
+    return acc + a, counts + c
+
+
+def packet_scatter_accum_hier(sched_idx: jnp.ndarray,
+                              sched_w: jnp.ndarray,
+                              sched_pk: jnp.ndarray, acc: jnp.ndarray,
+                              counts: jnp.ndarray, *,
+                              sched_scales: jnp.ndarray | None = None,
+                              mesh=None, host_axis: str = "host",
+                              worker_axis: str = "worker",
+                              exact: bool = True,
+                              use_pallas: bool = False,
+                              block_slots: int = 8,
+                              block_pkts: int = BLOCK_PKTS,
+                              interpret: bool = False):
+    """Hierarchical round scan over a 2-D (host, worker) mesh
+    (DESIGN.md §12).
+
+    sched_idx/sched_w (H, S, R, B) and sched_pk (H, S, R, B, W) carry
+    the drain schedule partitioned twice: by client-range ownership
+    across the H hosts (``engine_compiled.partition_schedule_by_host``)
+    and then by ring ownership across each host's S worker shards
+    (``engine_compiled.shard_schedule``), each (h, s) slice padded to a
+    common row count R with inert rows.  Each leaf folds its slice
+    through the unsharded scan body into zero-initialized leaf-local
+    ``(total, counts)`` partials, then ``combine_partials`` merges with
+    **one psum per mesh level** — worker-level within a host row first,
+    host-level across rows second — mirroring the paper's per-core
+    combine followed by the cross-machine combine.  Without a mesh the
+    emulation nests two vmaps and sums the two leading axes in the same
+    innermost-first order.
+
+    Exactness: both partitions only regroup the same additive per-batch
+    contributions, so on payloads whose sums are exactly representable
+    in f32 any (hosts, shards) factorization is bitwise identical to
+    the unsharded scan over the same arrivals
+    (tests/test_engine_hier.py).
+    """
+    body = functools.partial(
+        packet_scatter_accum_scan, exact=exact, use_pallas=use_pallas,
+        block_slots=block_slots, block_pkts=block_pkts, interpret=interpret)
+    zero_acc = jnp.zeros_like(acc)
+    zero_cnt = jnp.zeros_like(counts)
+    q8 = sched_scales is not None
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        spec = P(host_axis, worker_axis)
+        levels = (worker_axis, host_axis)     # innermost level first
+        if q8:
+            def shard_fn(bidx, bw, bsc, bpk):
+                # both leading mesh axes are size 1 on each device
+                a, c = body(bidx[0, 0], bw[0, 0], bpk[0, 0], zero_acc,
+                            zero_cnt, sched_scales=bsc[0, 0])
+                return combine_partials(a, c, axis_name=levels)
+
+            a, c = shard_map(
+                shard_fn, mesh=mesh, in_specs=(spec, spec, spec, spec),
+                out_specs=(P(), P()))(sched_idx, sched_w, sched_scales,
+                                      sched_pk)
+        else:
+            def shard_fn(bidx, bw, bpk):
+                a, c = body(bidx[0, 0], bw[0, 0], bpk[0, 0], zero_acc,
+                            zero_cnt)
+                return combine_partials(a, c, axis_name=levels)
+
+            a, c = shard_map(
+                shard_fn, mesh=mesh, in_specs=(spec, spec, spec),
+                out_specs=(P(), P()))(sched_idx, sched_w, sched_pk)
+    elif q8:
+        fold = jax.vmap(jax.vmap(
+            lambda bidx, bw, bsc, bpk: body(bidx, bw, bpk, zero_acc,
+                                            zero_cnt, sched_scales=bsc)))
+        a_parts, c_parts = fold(sched_idx, sched_w, sched_scales, sched_pk)
+        a, c = combine_partials(a_parts, c_parts, axis=(0, 1))
+    else:
+        fold = jax.vmap(jax.vmap(
+            lambda bidx, bw, bpk: body(bidx, bw, bpk, zero_acc, zero_cnt)))
+        a_parts, c_parts = fold(sched_idx, sched_w, sched_pk)
+        a, c = combine_partials(a_parts, c_parts, axis=(0, 1))
     return acc + a, counts + c

@@ -12,6 +12,28 @@ multi-pod.  Parallelism mapping:
 - KV   : decode KV cache sequence-sharded over ``'model'`` (flash-decode)
 
 Everything is a no-op when ``ctx is None`` (single-device smoke tests).
+
+The packet-path round engine uses two *separate* meshes defined at the
+bottom of this module (they shard the drain schedule, never params or
+batch — every model-parallel knob above is off in their ``ParallelCtx``):
+
+- ``worker_mesh(N)``: the 1-D ``('worker',)`` mesh of
+  ``EngineConfig(shards=N)`` (DESIGN.md §7);
+- ``host_worker_mesh(H, S)``: the 2-D ``('host','worker')`` mesh of
+  ``EngineConfig(hosts=H, shards=S)`` (DESIGN.md §12), with client
+  ownership ranges from ``client_range``/``client_owner``/``HostCtx``.
+
+Invariants the tests pin (tests/test_engine_sharded.py,
+tests/test_engine_hier.py):
+
+- both factories return ``None`` below the device count, and the
+  engines then run a vmap emulation of the identical dataflow —
+  *bitwise* the same as the mesh path;
+- the ownership ranges ``[h*K//H, (h+1)*K//H)`` tile the client set
+  exactly (a partition: every client owned once) and are balanced to
+  within one client;
+- ``HostCtx.from_process`` is the only place ``jax.process_index`` is
+  consulted, so single-process tests exercise every host's range.
 """
 from __future__ import annotations
 
@@ -71,6 +93,10 @@ class ParallelCtx:
         return WORKER_AXIS if WORKER_AXIS in self.axis_names else None
 
     @property
+    def host_axis(self) -> Optional[str]:
+        return HOST_AXIS if HOST_AXIS in self.axis_names else None
+
+    @property
     def dp_axes(self) -> Tuple[str, ...]:
         return tuple(a for a in self.axis_names if a in ("pod", "data"))
 
@@ -94,8 +120,13 @@ class ParallelCtx:
 # combined at END.  The sharded round engine maps those cores onto a 1-D
 # ``('worker',)`` device mesh: core/engine_compiled.py demuxes the drain
 # schedule per shard and psums the shard-local (total, counts) partials.
+# DESIGN.md §12 grows that mesh a second, outer level: a ``'host'``
+# axis whose rows are leaf aggregation hosts, each owning a contiguous
+# client range — the paper's DPU-vs-host split generalized to a
+# two-level tree (NIC cores within a host, hosts across machines).
 
 WORKER_AXIS = "worker"
+HOST_AXIS = "host"
 
 
 @functools.lru_cache(maxsize=None)
@@ -123,6 +154,112 @@ def worker_ctx(n_shards: int) -> Optional[ParallelCtx]:
     schedule — so the model-parallel knobs are all off.
     """
     mesh = worker_mesh(n_shards)
+    if mesh is None:
+        return None
+    return ParallelCtx(mesh=mesh, fsdp=False, shard_batch=False)
+
+
+# ---------------------------------------------------------------------------
+# Host axis: hierarchical multi-host aggregation (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def client_range(host: int, n_hosts: int, n_clients: int
+                 ) -> Tuple[int, int]:
+    """Half-open client range ``[lo, hi)`` owned by ``host``.
+
+    The balanced contiguous-block partition: host ``h`` owns clients
+    ``[h·K//H, (h+1)·K//H)``.  The blocks tile ``[0, K)`` exactly —
+    every client is owned by exactly one host and the union over hosts
+    is the full client set (the schedule-partition property,
+    tests/test_engine_hier.py) — and sizes differ by at most one, so no
+    leaf host carries more than its share of the demux load.
+    """
+    if not 0 <= host < n_hosts:
+        raise ValueError(f"host must be in [0, {n_hosts}), got {host}")
+    return (host * n_clients) // n_hosts, ((host + 1) * n_clients) // n_hosts
+
+
+def client_owner(clients, n_hosts: int, n_clients: int) -> np.ndarray:
+    """Vectorized ownership lookup: client ids -> owning host ids.
+
+    Inverts :func:`client_range` with one ``searchsorted`` against the
+    H range boundaries, so the per-host demux
+    (``engine_compiled.partition_schedule_by_host``) costs one pass
+    over the accepted arrivals, not a per-packet Python dispatch.
+    """
+    bounds = np.asarray([((h + 1) * n_clients) // n_hosts
+                         for h in range(n_hosts)], np.int64)
+    return np.searchsorted(bounds, np.asarray(clients, np.int64),
+                           side="right")
+
+
+@dataclasses.dataclass(frozen=True)
+class HostCtx:
+    """One leaf host's identity in the aggregation tree (DESIGN.md §12).
+
+    ``host`` is this process's row on the ``'host'`` mesh axis; in a
+    real multi-process deployment it is ``jax.process_index()``
+    (:meth:`from_process`), while the emulated single-machine setup —
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` partitioning
+    one CPU into N devices — enumerates HostCtx values explicitly (the
+    eager per-host twin ``server.run_hier_round`` does exactly that).
+    The context answers the only question the demux needs: which client
+    sessions does this host own?
+    """
+    host: int
+    n_hosts: int
+    n_clients: int
+
+    def __post_init__(self):
+        if not 0 <= self.host < self.n_hosts:
+            raise ValueError(
+                f"host must be in [0, {self.n_hosts}), got {self.host}")
+
+    @property
+    def clients(self) -> Tuple[int, int]:
+        """Owned half-open client range ``[lo, hi)``."""
+        return client_range(self.host, self.n_hosts, self.n_clients)
+
+    def owns(self, client: int) -> bool:
+        lo, hi = self.clients
+        return lo <= client < hi
+
+    @classmethod
+    def from_process(cls, n_clients: int) -> "HostCtx":
+        """The real multi-process identity: one leaf host per JAX
+        process (``jax.process_index`` / ``jax.process_count``)."""
+        return cls(jax.process_index(), jax.process_count(), n_clients)
+
+
+@functools.lru_cache(maxsize=None)
+def host_worker_mesh(n_hosts: int, n_shards: int) -> Optional[Mesh]:
+    """2-D ``('host', 'worker')`` mesh over the first
+    ``n_hosts · n_shards`` devices (DESIGN.md §12).
+
+    Row ``h`` holds host ``h``'s worker shards, so the two-level
+    combine is one ``psum`` per mesh level: worker-level within a row,
+    host-level across rows.  Returns None when the platform exposes too
+    few devices — callers fall back to the nested-vmap emulation of the
+    same dataflow, which is bitwise identical on exactly-representable
+    sums; the CI multi-device lane runs the real mesh (8 emulated
+    devices cover up to ``(hosts=4, shards=2)``).
+    """
+    n = n_hosts * n_shards
+    if n <= 1:
+        return None
+    devices = jax.devices()
+    if len(devices) < n:
+        return None
+    return Mesh(np.asarray(devices[:n]).reshape(n_hosts, n_shards),
+                (HOST_AXIS, WORKER_AXIS))
+
+
+def host_ctx(n_hosts: int, n_shards: int) -> Optional[ParallelCtx]:
+    """ParallelCtx over the 2-D (host, worker) mesh (None when the
+    platform cannot host it).  Like :func:`worker_ctx`, only the drain
+    schedule is partitioned — every model-parallel knob stays off.
+    """
+    mesh = host_worker_mesh(n_hosts, n_shards)
     if mesh is None:
         return None
     return ParallelCtx(mesh=mesh, fsdp=False, shard_batch=False)

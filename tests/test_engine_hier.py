@@ -1,0 +1,390 @@
+"""Hierarchical multi-host aggregation (DESIGN.md §12).
+
+The load-bearing acceptance properties (ISSUE 9):
+
+1. ``EngineConfig(hosts=H, shards=S)`` is **bitwise identical** to the
+   unsharded compiled engine on integer-valued payloads in exact mode —
+   any (H, S) factorization, both demux policies, lossy / duplicated /
+   out-of-order streams, f32 and q8 wire.
+2. The host partition is an ownership partition: every client is owned
+   by exactly one host (contiguous ranges tiling [0, K)), per-host
+   arrivals preserve relative order, and their union is the full
+   accepted stream.
+3. The eager per-host twin (``server.run_hier_round``) agrees with the
+   compiled hierarchical round in exact AND approx mode — approx parity
+   holds only against the twin, whose per-host rings reproduce the
+   compiled path's batch composition (the unsharded engine batches
+   differently at hosts > 1).
+4. Conservation across hosts: accepted arrivals, drop buckets, and
+   per-slot counts sum across leaves to the global round's totals.
+5. The robust table modes stay bitwise at hosts > 1 on ANY payloads:
+   each (slot, client) row is written exactly once on exactly one host.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine_compiled as ec
+from repro.core.aggregation import quantize_packets
+from repro.core.packets import packetize
+from repro.core.server import (EngineConfig, ServerEngine,
+                               make_uplink_stream, run_async_engine,
+                               run_engine_round, run_hier_round)
+from repro.runtime.sharding import (HOST_AXIS, WORKER_AXIS, HostCtx,
+                                    client_owner, client_range, host_ctx,
+                                    host_worker_mesh)
+
+
+def _round_inputs(seed, k=6, p=480, w=48, integer=True):
+    rng = np.random.default_rng(seed)
+    if integer:
+        flats = jnp.asarray(rng.integers(-8, 9, (k, p)).astype(np.float32))
+        prev = jnp.asarray(rng.integers(-8, 9, p).astype(np.float32))
+    else:
+        flats = jnp.asarray(rng.normal(size=(k, p)).astype(np.float32))
+        prev = jnp.asarray(rng.normal(size=(p,)).astype(np.float32))
+    pk = jax.vmap(lambda f: packetize(f, w))(flats)
+    return rng, flats, prev, pk
+
+
+def _assert_rounds_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.new_global),
+                                  np.asarray(b.new_global))
+    np.testing.assert_array_equal(np.asarray(a.counts), np.asarray(b.counts))
+    np.testing.assert_array_equal(np.asarray(a.up_mask),
+                                  np.asarray(b.up_mask))
+    if a.new_client_flats is not None:
+        np.testing.assert_array_equal(np.asarray(a.new_client_flats),
+                                      np.asarray(b.new_client_flats))
+
+
+# ---------------------------------------------------------------------------
+# Bitwise parity: (hosts, shards) factorizations vs the unsharded round
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("assign", ["rr", "slot"])
+@pytest.mark.parametrize("hosts,shards", [(2, 1), (2, 2), (4, 1), (4, 2)])
+def test_hier_bitwise_matches_unsharded(assign, hosts, shards):
+    """The acceptance criterion: any (hosts, shards) factorization is
+    bitwise the unsharded compiled engine in exact mode on integer
+    payloads — the two-level combine only regroups exact f32 sums."""
+    rng, flats, prev, pk = _round_inputs(42)
+    weights = jnp.asarray(rng.integers(1, 4, 6).astype(np.float32))
+    events, _ = make_uplink_stream(rng, pk, loss_rate=0.3, dup_rate=0.3)
+    down = jnp.asarray((rng.random((6, pk.shape[1])) > 0.2)
+                       .astype(np.float32))
+    kw = dict(n_clients=6, n_params=480, payload=48, ring_capacity=7,
+              ring_assign=assign, compile=True)
+    base = run_engine_round(EngineConfig(**kw), flats, prev, events,
+                            down_mask=down, weights=weights)
+    got = run_engine_round(EngineConfig(hosts=hosts, shards=shards, **kw),
+                           flats, prev, events, down_mask=down,
+                           weights=weights)
+    _assert_rounds_equal(base, got)
+
+
+@pytest.mark.parametrize("hosts,shards", [(2, 2), (4, 1)])
+def test_hier_q8_bitwise(hosts, shards):
+    """The q8 wire keeps the parity when the dequantized values are
+    exactly representable: power-of-two scales make ``q * scale`` and
+    its partial sums exact, so regrouping by host/shard is bitwise."""
+    rng, flats, prev, pk = _round_inputs(5)
+    q, _ = quantize_packets(pk)
+    # power-of-two scales: every dequantized value is a small multiple
+    # of 0.5, summed exactly in f32 at this packet count
+    sc = jnp.asarray(np.where(np.arange(pk.shape[1]) % 2, 0.5, 1.0)
+                     [None, :].repeat(pk.shape[0], 0).astype(np.float32))
+    events, _ = make_uplink_stream(rng, q, scales=sc, loss_rate=0.25,
+                                   dup_rate=0.25)
+    kw = dict(n_clients=6, n_params=480, payload=48, ring_capacity=8,
+              compile=True)
+    base = run_engine_round(EngineConfig(**kw), flats, prev, events)
+    got = run_engine_round(EngineConfig(hosts=hosts, shards=shards, **kw),
+                           flats, prev, events)
+    _assert_rounds_equal(base, got)
+
+
+@pytest.mark.parametrize("mode", ["exact", "approx"])
+@pytest.mark.parametrize("hosts", [2, 4])
+def test_hier_matches_eager_twin(mode, hosts):
+    """The differential contract: the compiled hierarchical round equals
+    the eager per-host twin in BOTH modes.  Approx parity only holds
+    here — the twin's per-host rings reproduce the compiled path's
+    batch composition, the unsharded engine's rings do not."""
+    rng, flats, prev, pk = _round_inputs(7)
+    events, _ = make_uplink_stream(rng, pk, loss_rate=0.25, dup_rate=0.3)
+    down = jnp.asarray((rng.random((6, pk.shape[1])) > 0.2)
+                       .astype(np.float32))
+    cfg = EngineConfig(n_clients=6, n_params=480, payload=48,
+                       ring_capacity=7, mode=mode, compile=True,
+                       hosts=hosts, shards=2)
+    got = run_engine_round(cfg, flats, prev, events, down_mask=down)
+    twin = run_hier_round(cfg, flats, prev, events, down_mask=down)
+    _assert_rounds_equal(twin, got)
+    assert twin.stats.data_enqueued == got.stats.data_enqueued
+    assert twin.stats.duplicates_dropped == got.stats.duplicates_dropped
+
+
+def test_hier_trimmed_mean_parity():
+    """Robust table mode at hosts=2: bitwise vs the unsharded round AND
+    the eager twin on arbitrary float payloads — each (slot, client)
+    row is written exactly once on exactly one host, so the host-level
+    psum adds it to zeros (no f32 regrouping at all)."""
+    rng, flats, prev, pk = _round_inputs(9, integer=False)
+    events, _ = make_uplink_stream(rng, pk, loss_rate=0.2, dup_rate=0.25)
+    kw = dict(n_clients=6, n_params=480, payload=48, ring_capacity=8,
+              agg_mode="trimmed_mean", trim_beta=0.2, compile=True)
+    base = run_engine_round(EngineConfig(**kw), flats, prev, events)
+    hcfg = EngineConfig(hosts=2, shards=2, **kw)
+    got = run_engine_round(hcfg, flats, prev, events)
+    _assert_rounds_equal(base, got)
+    twin = run_hier_round(hcfg, flats, prev, events)
+    _assert_rounds_equal(twin, got)
+
+
+def test_per_packet_api_with_hosts():
+    """ServerEngine(compile=True, hosts=H) keeps the per-packet rx API
+    and finalizes through the hierarchical dispatch, bitwise."""
+    rng, flats, prev, pk = _round_inputs(23, k=5, p=300, w=30)
+    events, _ = make_uplink_stream(rng, pk, loss_rate=0.2, dup_rate=0.2)
+    down = jnp.asarray((rng.random((5, pk.shape[1])) > 0.2)
+                       .astype(np.float32))
+    kw = dict(n_clients=5, n_params=300, payload=30, ring_capacity=8)
+    base = run_engine_round(EngineConfig(compile=True, **kw), flats, prev,
+                            events, down_mask=down)
+    engine = ServerEngine(EngineConfig(compile=True, hosts=2, shards=2,
+                                       **kw))
+    for packet, payload in events:
+        engine.rx(packet, payload)
+    ng, cnt, nf = engine.finalize_and_distribute(prev, flats, down)
+    np.testing.assert_array_equal(np.asarray(base.new_global),
+                                  np.asarray(ng))
+    np.testing.assert_array_equal(np.asarray(base.counts), np.asarray(cnt))
+    np.testing.assert_array_equal(np.asarray(base.new_client_flats),
+                                  np.asarray(nf))
+
+
+def test_hier_async_matches_flat():
+    """Async buffered mode composes: the hierarchical fold of every emit
+    window is bitwise the flat compiled async engine on integer
+    payloads (window composition — and with it the staleness column —
+    is demux-level, untouched by the host split).  FedBuff const
+    weighting keeps the folds integer-exact; poly decay's irrational
+    (1+s)^-alpha weights make sums non-representable, so that mode is
+    regrouping-equal only to float tolerance."""
+    rng, flats, prev, pk = _round_inputs(3)
+    events, _ = make_uplink_stream(rng, pk, loss_rate=0.2, dup_rate=0.2)
+    kw = dict(n_clients=6, n_params=480, payload=48, ring_capacity=8,
+              buffer_size=3, compile=True)
+    base = run_async_engine(EngineConfig(**kw), events, prev)
+    got = run_async_engine(EngineConfig(hosts=2, shards=2, **kw), events,
+                           prev)
+    np.testing.assert_array_equal(np.asarray(base.globals_),
+                                  np.asarray(got.globals_))
+    np.testing.assert_array_equal(np.asarray(base.emit_counts),
+                                  np.asarray(got.emit_counts))
+    np.testing.assert_array_equal(np.asarray(base.state.global_),
+                                  np.asarray(got.state.global_))
+    pol = dict(kw, staleness_mode="poly")
+    base_p = run_async_engine(EngineConfig(**pol), events, prev)
+    got_p = run_async_engine(EngineConfig(hosts=2, shards=2, **pol),
+                             events, prev)
+    np.testing.assert_allclose(np.asarray(base_p.globals_),
+                               np.asarray(got_p.globals_), rtol=1e-5,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Schedule-partition property
+# ---------------------------------------------------------------------------
+
+def _demuxed_schedule(seed=0, cap=7, k=6):
+    rng, flats, prev, pk = _round_inputs(seed, k=k)
+    events, _ = make_uplink_stream(rng, pk, loss_rate=0.2, dup_rate=0.3)
+    cfg = EngineConfig(n_clients=k, n_params=480, payload=48,
+                       ring_capacity=cap, compile=True)
+    sched, _, _ = ec.demux_events(cfg, events)
+    return cfg, sched
+
+
+@pytest.mark.parametrize("hosts", [1, 2, 3, 4])
+def test_partition_schedule_is_an_ownership_partition(hosts):
+    """Every accepted arrival lands on exactly the host owning its
+    client, in original relative order; the union over hosts is the
+    full arrival multiset."""
+    cfg, sched = _demuxed_schedule()
+    per_host = ec.partition_schedule_by_host(
+        sched, hosts, cfg.n_clients, n_workers=cfg.n_workers,
+        ring_capacity=cfg.ring_capacity, ring_assign=cfg.ring_assign)
+    assert len(per_host) == hosts
+    g_slots, g_w, g_pay, _, _, g_clients = sched.arrivals
+    seen = 0
+    all_pairs = []
+    for h, hs in enumerate(per_host):
+        s_h, w_h, p_h, _, _, c_h = hs.arrivals
+        # ownership: every arrival's client is in this host's range
+        lo, hi = client_range(h, hosts, cfg.n_clients)
+        assert np.all((c_h >= lo) & (c_h < hi))
+        assert np.all(client_owner(c_h, hosts, cfg.n_clients) == h)
+        # order: the host's arrivals are the global stream filtered to
+        # its clients, relative order preserved
+        mask = client_owner(g_clients, hosts, cfg.n_clients) == h
+        np.testing.assert_array_equal(s_h, np.asarray(g_slots)[mask])
+        np.testing.assert_array_equal(c_h, np.asarray(g_clients)[mask])
+        np.testing.assert_array_equal(p_h, np.asarray(g_pay)[mask])
+        seen += len(s_h)
+        all_pairs += list(zip(c_h.tolist(), s_h.tolist(),
+                              w_h.tolist()))
+    # union == full schedule (as a multiset)
+    assert seen == sched.n_packets
+    full = sorted(zip(np.asarray(g_clients).tolist(),
+                      np.asarray(g_slots).tolist(),
+                      np.asarray(g_w).tolist()))
+    assert sorted(all_pairs) == full
+
+
+def test_client_ranges_tile_the_client_set():
+    """client_range blocks tile [0, K) exactly with sizes differing by
+    at most one; client_owner inverts the map for every client."""
+    for K in (1, 5, 6, 7, 16):
+        for H in (1, 2, 3, 4, 5):
+            sizes = []
+            cursor = 0
+            for h in range(H):
+                lo, hi = client_range(h, H, K)
+                assert lo == cursor          # contiguous, no gaps
+                cursor = hi
+                sizes.append(hi - lo)
+            assert cursor == K               # tiles the full set
+            assert max(sizes) - min(sizes) <= 1
+            owners = client_owner(np.arange(K), H, K)
+            for h in range(H):
+                lo, hi = client_range(h, H, K)
+                assert np.all(owners[lo:hi] == h)
+
+
+def test_host_ctx_units():
+    ctx = HostCtx(1, 2, 6)
+    assert ctx.clients == (3, 6)
+    assert not ctx.owns(2) and ctx.owns(3) and ctx.owns(5)
+    with pytest.raises(ValueError):
+        HostCtx(2, 2, 6)
+    # single-process default: one leaf owning everything
+    ctx0 = HostCtx.from_process(6)
+    assert ctx0.host == 0 and ctx0.n_hosts >= 1
+    if ctx0.n_hosts == 1:
+        assert ctx0.clients == (0, 6)
+
+
+def test_conservation_across_hosts():
+    """Per-leaf stats sum to the global round's totals, and the per-slot
+    counts of the hierarchical round equal the unsharded engine's
+    (every accepted arrival is folded exactly once, on one host)."""
+    rng, flats, prev, pk = _round_inputs(11)
+    events, _ = make_uplink_stream(rng, pk, loss_rate=0.25, dup_rate=0.3)
+    kw = dict(n_clients=6, n_params=480, payload=48, ring_capacity=7,
+              compile=True)
+    base = run_engine_round(EngineConfig(**kw), flats, prev, events)
+    for hosts in (2, 3, 4):
+        hcfg = EngineConfig(hosts=hosts, **kw)
+        got = run_engine_round(hcfg, flats, prev, events)
+        twin = run_hier_round(hcfg, flats, prev, events)
+        for r in (got, twin):
+            assert r.stats.data_enqueued == base.stats.data_enqueued
+            assert (r.stats.duplicates_dropped
+                    == base.stats.duplicates_dropped)
+            assert r.stats.phase_dropped == base.stats.phase_dropped
+        np.testing.assert_array_equal(np.asarray(base.counts),
+                                      np.asarray(got.counts))
+        # the up masks agree client by client (disjoint host union)
+        np.testing.assert_array_equal(np.asarray(base.up_mask),
+                                      np.asarray(twin.up_mask))
+
+
+# ---------------------------------------------------------------------------
+# Config validation + mesh units
+# ---------------------------------------------------------------------------
+
+def test_hosts_require_compiled_engine():
+    with pytest.raises(ValueError):
+        EngineConfig(n_clients=2, n_params=64, payload=16, hosts=2)
+    with pytest.raises(ValueError):
+        EngineConfig(n_clients=2, n_params=64, payload=16, hosts=0,
+                     compile=True)
+
+
+def test_run_hier_round_rejects_deadline_and_async():
+    kw = dict(n_clients=4, n_params=64, payload=16, compile=True, hosts=2)
+    prev = np.zeros(64, np.float32)
+    with pytest.raises(ValueError):
+        run_hier_round(dataclasses.replace(EngineConfig(**kw),
+                                           round_deadline=10),
+                       None, prev, [])
+    with pytest.raises(ValueError):
+        run_hier_round(dataclasses.replace(EngineConfig(**kw),
+                                           buffer_size=4),
+                       None, prev, [])
+
+
+def test_host_worker_mesh_requires_devices():
+    n = jax.device_count()
+    assert host_worker_mesh(1, 1) is None        # unsharded: no mesh
+    assert host_worker_mesh(n + 1, 1) is None
+    if n >= 4:
+        ctx = host_ctx(2, 2)
+        assert ctx is not None
+        assert ctx.host_axis == HOST_AXIS
+        assert ctx.worker_axis == WORKER_AXIS
+        assert ctx.axis_size(HOST_AXIS) == 2
+        assert ctx.axis_size(WORKER_AXIS) == 2
+
+
+@pytest.mark.skipif(jax.device_count() >= 8,
+                    reason="suite already runs on a real 8-device mesh")
+def test_real_mesh_hier_parity_subprocess():
+    """Bitwise parity over a *real* 2-D shard_map mesh: spawn a fresh
+    interpreter with 8 forced host devices (XLA_FLAGS is read at jax
+    init, so it cannot be flipped in-process)."""
+    prog = (
+        "import numpy as np, jax, jax.numpy as jnp\n"
+        "assert jax.device_count() == 8, jax.device_count()\n"
+        "from repro.core.packets import packetize\n"
+        "from repro.core.server import (EngineConfig, make_uplink_stream,\n"
+        "                               run_engine_round)\n"
+        "from repro.runtime.sharding import host_worker_mesh\n"
+        "assert host_worker_mesh(4, 2) is not None\n"
+        "rng = np.random.default_rng(1)\n"
+        "flats = jnp.asarray(rng.integers(-8, 9, (4, 256))\n"
+        "                    .astype(np.float32))\n"
+        "prev = jnp.zeros((256,), jnp.float32)\n"
+        "pk = jax.vmap(lambda f: packetize(f, 32))(flats)\n"
+        "ev, _ = make_uplink_stream(rng, pk, loss_rate=0.2, dup_rate=0.3)\n"
+        "kw = dict(n_clients=4, n_params=256, payload=32,\n"
+        "          ring_capacity=8, compile=True)\n"
+        "base = run_engine_round(EngineConfig(**kw), flats, prev, ev)\n"
+        "for hosts, shards in ((2, 2), (4, 2), (2, 4)):\n"
+        "    got = run_engine_round(EngineConfig(hosts=hosts,\n"
+        "                                        shards=shards, **kw),\n"
+        "                           flats, prev, ev)\n"
+        "    np.testing.assert_array_equal(np.asarray(base.new_global),\n"
+        "                                  np.asarray(got.new_global))\n"
+        "    np.testing.assert_array_equal(np.asarray(base.counts),\n"
+        "                                  np.asarray(got.counts))\n"
+        "print('HIER_MESH_PARITY_OK')\n")
+    env = dict(os.environ,
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") +
+                          " --xla_force_host_platform_device_count=8"),
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src"),
+                    os.environ.get("PYTHONPATH", "")]))
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "HIER_MESH_PARITY_OK" in out.stdout

@@ -23,8 +23,10 @@ compiled round's slowdown vs the exact-mean row (<= 2.5x) without
 needing hardware-comparable baselines.
 
 Matching is strict: rows pair up only when every config key — k, mode,
-engine, shards, n_params, payload, ring_capacity, buffer_size,
-agg_mode — is identical, so a
+engine, hosts, shards, n_params, payload, ring_capacity, buffer_size,
+agg_mode — is identical (the hierarchical host-sweep rows of
+EXPERIMENTS.md §Host-sweep carry ``engine="compiled_hier"`` plus a
+``hosts`` key; flat rows lack it and compare as None), so a
 quick-mode run never gets compared against a full-size baseline; rows
 present on one side only are reported and skipped.  Speedups are fine;
 only drops gate.
@@ -48,7 +50,7 @@ same way CI does and commit the refreshed baselines::
         python benchmarks/engine_throughput.py --quick
     XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \
         PYTHONPATH=src python benchmarks/engine_throughput.py \
-        --shard-sweep --quick
+        --shard-sweep --host-sweep --quick
     python tools/bench_gate.py --update-baseline
     git add benchmarks/baselines/ && git commit
 
@@ -71,8 +73,8 @@ DEFAULT_FILES = ("BENCH_engine.json", "BENCH_shard.json",
 # config keys that must match exactly for two rows to be comparable
 # (absent keys compare as None, so rows without e.g. shards,
 # buffer_size or agg_mode still pair up across schema growth)
-KEY_FIELDS = ("k", "mode", "engine", "shards", "n_params", "payload",
-              "ring_capacity", "buffer_size", "agg_mode")
+KEY_FIELDS = ("k", "mode", "engine", "hosts", "shards", "n_params",
+              "payload", "ring_capacity", "buffer_size", "agg_mode")
 
 
 def _row_key(row: dict):

@@ -13,6 +13,11 @@ did not exist):
    ``SOMEDOC.md`` must name a file at the repo root, and the cited
    section in ``SOMEDOC.md §Section`` form must match a heading of that
    document (headings use the ``## §1 Title`` / ``## §Name`` style).
+3. **EngineConfig coverage** in README.md: every field of the
+   ``EngineConfig`` dataclass (parsed from
+   ``src/repro/core/server.py`` with ``ast``, no imports needed) must
+   appear as `` `field` `` somewhere in README.md, so the config table
+   can't silently lag the knobs the engine actually has.
 
 Exit status 0 when everything resolves; 1 with a report otherwise.
 
@@ -20,6 +25,7 @@ Usage:  python tools/check_doc_links.py [repo_root]
 """
 from __future__ import annotations
 
+import ast
 import functools
 import pathlib
 import re
@@ -43,8 +49,30 @@ def _headings(md_path: pathlib.Path) -> str:
                      if HEADING.match(line))
 
 
+def _engine_config_fields(root: pathlib.Path) -> list:
+    """Field names of EngineConfig, read syntactically (no jax import)."""
+    src = root / "src" / "repro" / "core" / "server.py"
+    if not src.exists():
+        return []
+    tree = ast.parse(src.read_text())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "EngineConfig":
+            return [stmt.target.id for stmt in node.body
+                    if isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)]
+    return []
+
+
 def check(root: pathlib.Path) -> list:
     errors = []
+
+    readme = root / "README.md"
+    if readme.exists():
+        text = readme.read_text()
+        for field in _engine_config_fields(root):
+            if f"`{field}`" not in text:
+                errors.append(f"README.md: EngineConfig field `{field}` "
+                              f"is not documented")
 
     for md in _files(root, ".md"):
         rel = md.relative_to(root)
