@@ -58,7 +58,7 @@ def main():
         start = int(extra["step"])
         print(f"resumed from checkpoint at step {start}")
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(start, args.steps):
         batch = lm_batch_for(cfg, args.batch, args.seq, seed=i)
         params, opt_state, m = step(params, opt_state, batch)
@@ -66,7 +66,7 @@ def main():
             loss = float(m["loss"])
             assert np.isfinite(loss)
             print(f"step {i+1}: loss={loss:.4f} "
-                  f"({(time.time()-t0)/(i-start+1):.2f}s/step)")
+                  f"({(time.perf_counter()-t0)/(i-start+1):.2f}s/step)")
         if (i + 1) % 50 == 0:
             ckpt.async_save(i + 1, (params, opt_state),
                             extra={"step": i + 1})

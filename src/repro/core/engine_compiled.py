@@ -894,11 +894,13 @@ def run_compiled_rounds(cfg: EngineConfig, rounds: Iterable,
             # in-flight round and hand the completed results to the
             # caller on the exception
             if pending is not None:
+                # staticcheck: allow(hostsync) — overlap-driver barrier: the in-flight round must materialize before the QuorumError escapes with its results
                 pending.new_global.block_until_ready()
                 results.append(pending)
             e.results = results
             raise
         if pending is not None:       # round r-1 ran while we demuxed
+            # staticcheck: allow(hostsync) — overlap-driver barrier: round r-1 is collected only after round r's demux, preserving the double-buffered overlap (DESIGN.md §3)
             pending.new_global.block_until_ready()
             results.append(pending)
         total = jnp.zeros((cfg.n_slots, cfg.payload), jnp.float32)
@@ -911,6 +913,7 @@ def run_compiled_rounds(cfg: EngineConfig, rounds: Iterable,
                               new_flats, stats)
         prev = new_global
     if pending is not None:
+        # staticcheck: allow(hostsync) — overlap-driver barrier: final flush of the last in-flight round after the input stream is exhausted
         pending.new_global.block_until_ready()
         results.append(pending)
     return results

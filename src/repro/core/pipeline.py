@@ -23,6 +23,7 @@ the paper's "reception and addition in parallel until END" semantics.
 """
 from __future__ import annotations
 
+import functools
 from typing import Iterator, Optional, Tuple, Union
 
 import jax
@@ -35,18 +36,26 @@ from repro.kernels import ref as _ref
 from repro.kernels.packet_scatter import BLOCK_PKTS as _BLOCK_PKTS
 
 
-@jax.jit
+@functools.partial(jax.jit, donate_argnums=(0, 1))
 def _accum_chunk(total, counts, payload, mask):
     """total (N,W), counts (N,); payload (N,W) one client's packets,
-    mask (N,) its arrival mask."""
+    mask (N,) its arrival mask.
+
+    (total, counts) are donated: the fold rewrites the running state in
+    place instead of allocating a fresh (N, W) pair per upload, matching
+    the donated kernel path (kernels/ops.py).  Callers must rebind both
+    — ``self.total, self.counts = _accum_chunk(...)`` — which the
+    donation staticcheck rule enforces."""
     total = total + payload.astype(jnp.float32) * mask[:, None]
     counts = counts + mask
     return total, counts
 
 
-@jax.jit
+@functools.partial(jax.jit, donate_argnums=(0, 1))
 def _accum_batch_jnp(total, counts, payloads, wmask):
-    """payloads (B,N,W); wmask (B,N) weighted arrival mask."""
+    """payloads (B,N,W); wmask (B,N) weighted arrival mask.
+
+    (total, counts) donated, same contract as ``_accum_chunk``."""
     total = total + jnp.einsum("knw,kn->nw", payloads.astype(jnp.float32),
                                wmask)
     counts = counts + jnp.sum(wmask, axis=0)

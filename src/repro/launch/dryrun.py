@@ -238,7 +238,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         cfg = dataclasses.replace(cfg, head_pad_to=16)
     mesh = make_production_mesh(multi_pod=multi_pod)
     ctx = S.make_ctx(mesh, cfg, shape, **(ctx_overrides or {}))
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     params_shape = jax.eval_shape(
         lambda r: __import__("repro.models.transformer",
@@ -290,9 +290,9 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                          donate_argnums=(1,))
         lowered = jitted.lower(params_shape, cache_shape, batch_sds)
 
-    t_lower = time.time() - t0
+    t_lower = time.perf_counter() - t0
     compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+    t_compile = time.perf_counter() - t0 - t_lower
 
     hlo = compiled.as_text()
     n_dev = mesh.devices.size
@@ -332,7 +332,7 @@ def lower_fl_aggregate(arch: str, *, mode: str = "exact",
     cfg = get_config(arch)
     mesh = make_production_mesh(multi_pod=True)
     ctx = ParallelCtx(mesh=mesh)
-    t0 = time.time()
+    t0 = time.perf_counter()
     params_shape = jax.eval_shape(
         lambda r: __import__("repro.models.transformer",
                              fromlist=["init_params"]).init_params(r, cfg),
@@ -360,7 +360,7 @@ def lower_fl_aggregate(arch: str, *, mode: str = "exact",
     return {
         "arch": arch, "shape": f"fl_aggregate_{mode}", "program": "fl",
         "mesh": list(mesh.devices.shape), "n_devices": int(mesh.devices.size),
-        "compile_s": round(time.time() - t0, 2),
+        "compile_s": round(time.perf_counter() - t0, 2),
         "memory_analysis": _memory_analysis_dict(compiled),
         "cost_analysis": _cost_analysis_dict(compiled),
         # FL aggregation reduces in f32 by design: use the raw byte count

@@ -58,7 +58,7 @@ def main():
 
     batch = lm_batch_for(cfg, B, P, seed=0)
     batch.pop("labels", None)
-    t0 = time.time()
+    t0 = time.perf_counter()
     last_logits, pcache = prefill(params, batch)
     # graft prefill cache into a max_seq cache
     full = init_cache(cfg, B, max_seq)
@@ -71,10 +71,10 @@ def main():
 
     cache = jax.tree_util.tree_map(graft, full, pcache)
     tok = jnp.argmax(last_logits, -1).astype(jnp.int32)
-    print(f"prefill: {P} tokens x {B} reqs in {time.time()-t0:.2f}s")
+    print(f"prefill: {P} tokens x {B} reqs in {time.perf_counter()-t0:.2f}s")
 
     out_tokens = [np.asarray(tok)]
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(G):
         dbatch = {"pos": jnp.asarray(P + i, jnp.int32)}
         if cfg.input_mode == "embeddings":
@@ -89,7 +89,7 @@ def main():
             dbatch["positions"] = jnp.full((3, B, 1), P + i, jnp.int32)
         tok, logits, cache = serve(params, cache, dbatch)
         out_tokens.append(np.asarray(tok))
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     toks = np.stack(out_tokens, 1)
     print(f"decode: {G} steps x {B} reqs in {dt:.2f}s "
           f"({B*G/max(dt,1e-9):.1f} tok/s)")

@@ -101,13 +101,13 @@ def main():
         _run_fl(args, cfg, ctx, params, opt_state, train_step, B, Sq, ckpt)
         return
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(start_step, args.steps):
         batch = lm_batch_for(cfg, B, Sq, seed=i)
         params, opt_state, metrics = train_step(params, opt_state, batch)
         loss = float(metrics["loss"])
         print(f"step {i}: loss={loss:.4f} "
-              f"({(time.time()-t0)/(i-start_step+1):.2f}s/step)")
+              f"({(time.perf_counter()-t0)/(i-start_step+1):.2f}s/step)")
         assert np.isfinite(loss), "loss diverged"
         if ckpt and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
             ckpt.async_save(i + 1, (params, opt_state),
@@ -134,7 +134,7 @@ def _run_fl(args, cfg, ctx, params, opt_state, train_step, B, Sq, ckpt):
 
     rounds = args.steps
     for r in range(rounds):
-        t0 = time.time()
+        t0 = time.perf_counter()
         new_rows, losses = [], []
         for pod in range(n_pods):
             row = jax.tree_util.tree_map(lambda s: s[pod], stacked)
@@ -154,7 +154,7 @@ def _run_fl(args, cfg, ctx, params, opt_state, train_step, B, Sq, ckpt):
         stacked = agg(stacked, jnp.asarray(alive))
         robust.on_round_complete()
         print(f"round {r}: losses={['%.3f' % l for l in losses]} "
-              f"alive={alive.tolist()} ({time.time()-t0:.2f}s)")
+              f"alive={alive.tolist()} ({time.perf_counter()-t0:.2f}s)")
         if ckpt and args.ckpt_every and (r + 1) % args.ckpt_every == 0:
             global_params = jax.tree_util.tree_map(lambda s: s[0], stacked)
             ckpt.async_save(r + 1, global_params,

@@ -1,0 +1,13 @@
+"""Fixture: wall-clock timing — the `determinism` rule fires once."""
+import time
+
+import numpy as np
+
+
+def bench(fn, reps):
+    rng = np.random.default_rng(0)      # seeded: fine
+    x = rng.normal(size=(8,))           # generator method: fine
+    t0 = time.time()                    # wall clock: flagged
+    for _ in range(reps):
+        fn(x)
+    return time.perf_counter() - t0     # monotonic: fine

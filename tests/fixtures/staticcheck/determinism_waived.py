@@ -1,0 +1,8 @@
+"""Fixture: the same wall-clock call, waived for an epoch use."""
+import time
+
+
+def stamp(manifest):
+    # staticcheck: allow(determinism) — fixture: manifest records the epoch
+    manifest["time"] = time.time()
+    return manifest

@@ -1,0 +1,14 @@
+"""Fixture: read-after-donation — the `donation` rule fires once."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def accum(total, batch):
+    return total + batch
+
+
+def drive(total, batch):
+    out = accum(total, batch)
+    return total.sum() + out.sum()      # use after donation: flagged

@@ -1,0 +1,14 @@
+"""Fixture: donated-and-rebound is the sanctioned pattern — no finding."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def accum(total, counts, batch):
+    return total + batch, counts + 1.0
+
+
+def drive(total, counts, batch):
+    total, counts = accum(total, counts, batch)   # rebind: fine
+    return total.sum() + counts.sum()

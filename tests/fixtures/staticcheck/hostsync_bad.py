@@ -1,0 +1,13 @@
+"""Fixture: float() cast inside a scan body — the `hostsync` rule fires
+once (tracer leak)."""
+import jax
+
+
+def step(carry, x):
+    y = float(x)                        # concretizes a tracer: flagged
+    n = float(x.shape[0])               # static metadata: exempt
+    return carry + y * n, y
+
+
+def run(xs):
+    return jax.lax.scan(step, 0.0, xs)

@@ -1,0 +1,10 @@
+# staticcheck: device-hot
+"""Fixture: a device-hot module (marker above) blocking per batch —
+the `hostsync` rule fires once even outside traced code."""
+
+
+def drain(batches, fold, state):
+    for b in batches:
+        state = fold(state, b)
+        state.block_until_ready()       # serializes the overlap: flagged
+    return state

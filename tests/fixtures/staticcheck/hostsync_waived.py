@@ -1,0 +1,11 @@
+# staticcheck: device-hot
+"""Fixture: the same hot-module barrier, silenced by an own-line waiver
+(the form the engine_compiled.py overlap barriers use)."""
+
+
+def drain(batches, fold, state):
+    for b in batches:
+        state = fold(state, b)
+    # staticcheck: allow(hostsync) — fixture: final flush barrier
+    state.block_until_ready()
+    return state

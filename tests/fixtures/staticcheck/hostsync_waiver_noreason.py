@@ -1,0 +1,10 @@
+# staticcheck: device-hot
+"""Fixture: a waiver WITHOUT a reason is not honoured — the finding
+stays live and says so."""
+
+
+def drain(batches, fold, state):
+    for b in batches:
+        state = fold(state, b)
+        state.block_until_ready()       # staticcheck: allow(hostsync)
+    return state

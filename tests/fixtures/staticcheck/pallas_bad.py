@@ -1,0 +1,21 @@
+"""Fixture: out-of-range `input_output_aliases` value — the `pallas`
+rule fires once (everything else about the site is contract-clean)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def copy(x, interpret=False):
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+        input_output_aliases={0: 1},     # only one output: flagged
+        interpret=interpret,
+    )(x)

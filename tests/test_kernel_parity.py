@@ -1,0 +1,90 @@
+"""Direct parity pins for the public Pallas kernels (DESIGN.md §13).
+
+The staticcheck `parity` rule requires every public ``*_pallas`` entry
+point to be referenced by name from a test that pins it against its
+pure-jnp twin.  The engine/robust suites exercise
+``packet_scatter_accum_pallas`` and ``robust_finalize_pallas`` through
+their wrappers; this file covers the remaining kernels *directly*, at
+their own signatures, in interpret mode on CPU.
+
+All payloads are integer-valued and the q8 scales are powers of two, so
+every product and partial sum is exactly representable in f32: the
+kernel's blocked accumulation order and the twin's one-shot einsum/dot
+must then agree **bitwise**, for any block tiling.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fedavg_accum import fedavg_accum_pallas
+from repro.kernels.packet_scatter import (BLOCK_PKTS,
+                                          packet_scatter_accum_batch_q8_jnp,
+                                          packet_scatter_accum_q8_pallas,
+                                          packet_scatter_pallas)
+from repro.kernels.quantized_accum import quantized_accum_pallas
+from repro.kernels.ref import (fedavg_accum_ref, packet_scatter_ref,
+                               quantized_accum_ref)
+
+K, C, W = 16, 8, 8      # clients, chunks, payload width (block multiples)
+
+
+def _masked_payloads(seed):
+    rng = np.random.default_rng(seed)
+    pk = rng.integers(-8, 8, (K, C, W)).astype(np.float32)
+    m = (rng.random((K, C)) < 0.7).astype(np.float32)
+    return jnp.asarray(pk), jnp.asarray(m)
+
+
+@pytest.mark.parametrize("finalize", [True, False])
+def test_fedavg_accum_pallas_matches_ref(finalize):
+    pk, m = _masked_payloads(0)
+    avg, cnt = fedavg_accum_pallas(pk, m, finalize=finalize, interpret=True)
+    ravg, rcnt = fedavg_accum_ref(pk, m, finalize=finalize)
+    np.testing.assert_array_equal(np.asarray(avg), np.asarray(ravg))
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(rcnt))
+
+
+@pytest.mark.parametrize("finalize", [True, False])
+def test_quantized_accum_pallas_matches_ref(finalize):
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.integers(-127, 128, (K, C, W)).astype(np.int8))
+    scales = jnp.asarray(
+        (2.0 ** rng.integers(-3, 4, (K, C))).astype(np.float32))
+    m = jnp.asarray((rng.random((K, C)) < 0.6).astype(np.float32))
+    avg, cnt = quantized_accum_pallas(q, scales, m, finalize=finalize,
+                                      interpret=True)
+    ravg, rcnt = quantized_accum_ref(q, scales, m, finalize=finalize)
+    np.testing.assert_array_equal(np.asarray(avg), np.asarray(ravg))
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(rcnt))
+
+
+def test_packet_scatter_pallas_matches_ref():
+    rng = np.random.default_rng(2)
+    n_pkts, n_slots = 24, 16
+    pk = jnp.asarray(rng.integers(-50, 50, (n_pkts, W)).astype(np.float32))
+    # duplicates on purpose: placement must be last-writer-wins
+    idx = jnp.asarray(rng.integers(0, n_slots, n_pkts).astype(np.int32))
+    init = jnp.asarray(rng.integers(-5, 5, (n_slots, W)).astype(np.float32))
+    got = packet_scatter_pallas(pk, idx, n_slots, init=init, interpret=True)
+    want = packet_scatter_ref(pk, idx, n_slots, init=init)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("exact", [True, False])
+def test_packet_scatter_accum_q8_pallas_matches_jnp_twin(exact):
+    rng = np.random.default_rng(3)
+    n_pkts, n_slots = 2 * BLOCK_PKTS, 16
+    q = rng.integers(-127, 128, (n_pkts, W)).astype(np.int8)
+    scales = (2.0 ** rng.integers(-3, 4, n_pkts)).astype(np.float32)
+    idx = rng.integers(0, n_slots, n_pkts).astype(np.int32)
+    weights = rng.integers(0, 3, n_pkts).astype(np.float32)
+    # ring padding: inert entries carry idx -1, weight 0, scale 0
+    idx[-3:], weights[-3:], scales[-3:] = -1, 0.0, 0.0
+    acc = rng.integers(-4, 4, (n_slots, W)).astype(np.float32)
+    cnt = rng.integers(0, 4, (n_slots, 1)).astype(np.float32)
+    args = tuple(jnp.asarray(a) for a in (q, scales, idx, weights, acc, cnt))
+    ga, gc = packet_scatter_accum_q8_pallas(*args, exact=exact,
+                                            interpret=True)
+    wa, wc = packet_scatter_accum_batch_q8_jnp(*args, exact=exact)
+    np.testing.assert_array_equal(np.asarray(ga), np.asarray(wa))
+    np.testing.assert_array_equal(np.asarray(gc), np.asarray(wc))

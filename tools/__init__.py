@@ -1,0 +1,3 @@
+# makes tools/ importable so `python -m tools.staticcheck` works from
+# the repo root (DESIGN.md §13); the scripts in this directory still run
+# standalone (`python tools/bench_gate.py`, `python tools/check_doc_links.py`)

@@ -1,108 +1,38 @@
 #!/usr/bin/env python
-"""Intra-repo documentation link checker (CI docs job).
+"""Intra-repo documentation link checker — now a shim (CI docs job).
 
-Two classes of reference are validated, so docs can't silently drift
-from the code that cites them (the bug this tool was born from: for two
-PRs `core/simnet.py` cited an `EXPERIMENTS.md §Paper-validation` that
-did not exist):
+The checks live in ``tools/staticcheck/docs.py`` as the ``docs`` rule of
+the unified analyzer runner (``python -m tools.staticcheck``, DESIGN.md
+§13), where they share its waiver/report/exit-code plumbing.  This
+entry point survives so the historical invocation keeps working with
+byte-identical output:
 
-1. **Markdown links** in every tracked ``*.md`` file: relative targets
-   (``[text](path)``) must resolve to an existing file or directory
-   (anchors are stripped; http/https/mailto links are ignored).
-2. **Doc-section citations** in source and docs: any occurrence of
-   ``SOMEDOC.md`` must name a file at the repo root, and the cited
-   section in ``SOMEDOC.md §Section`` form must match a heading of that
-   document (headings use the ``## §1 Title`` / ``## §Name`` style).
-3. **EngineConfig coverage** in README.md: every field of the
-   ``EngineConfig`` dataclass (parsed from
-   ``src/repro/core/server.py`` with ``ast``, no imports needed) must
-   appear as `` `field` `` somewhere in README.md, so the config table
-   can't silently lag the knobs the engine actually has.
+    python tools/check_doc_links.py [repo_root]
+
+Validated reference classes (see the analyzer's docstring for detail;
+the bug this tool was born from: for two PRs ``core/simnet.py`` cited
+an ``EXPERIMENTS.md §Paper-validation`` that did not exist):
+
+1. markdown links ``[text](path)`` resolve to existing files,
+2. ``SOMEDOC.md §Section`` citations in source/docs name a real root
+   doc and one of its headings,
+3. every ``EngineConfig`` field is documented in README.md.
 
 Exit status 0 when everything resolves; 1 with a report otherwise.
-
-Usage:  python tools/check_doc_links.py [repo_root]
 """
 from __future__ import annotations
 
-import ast
-import functools
 import pathlib
-import re
 import sys
 
-SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "scratch"}
-MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-DOC_CITE = re.compile(r"\b([A-Z][A-Z0-9_]*\.md)(?:\s+§([A-Za-z0-9][\w-]*))?")
-HEADING = re.compile(r"^#{1,6}\s", re.M)
+# the shim is also loaded standalone by path (tests/test_docs.py uses
+# importlib file-location loading), so anchor the package import on the
+# repo root rather than on whatever cwd/sys.path the caller has
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+if str(_REPO) not in sys.path:
+    sys.path.insert(0, str(_REPO))
 
-
-def _files(root: pathlib.Path, suffix: str):
-    for p in sorted(root.rglob(f"*{suffix}")):
-        if not SKIP_DIRS.intersection(p.relative_to(root).parts):
-            yield p
-
-
-@functools.lru_cache(maxsize=None)   # each doc is cited many times
-def _headings(md_path: pathlib.Path) -> str:
-    return "\n".join(line for line in md_path.read_text().splitlines()
-                     if HEADING.match(line))
-
-
-def _engine_config_fields(root: pathlib.Path) -> list:
-    """Field names of EngineConfig, read syntactically (no jax import)."""
-    src = root / "src" / "repro" / "core" / "server.py"
-    if not src.exists():
-        return []
-    tree = ast.parse(src.read_text())
-    for node in ast.walk(tree):
-        if isinstance(node, ast.ClassDef) and node.name == "EngineConfig":
-            return [stmt.target.id for stmt in node.body
-                    if isinstance(stmt, ast.AnnAssign)
-                    and isinstance(stmt.target, ast.Name)]
-    return []
-
-
-def check(root: pathlib.Path) -> list:
-    errors = []
-
-    readme = root / "README.md"
-    if readme.exists():
-        text = readme.read_text()
-        for field in _engine_config_fields(root):
-            if f"`{field}`" not in text:
-                errors.append(f"README.md: EngineConfig field `{field}` "
-                              f"is not documented")
-
-    for md in _files(root, ".md"):
-        rel = md.relative_to(root)
-        for m in MD_LINK.finditer(md.read_text()):
-            target = m.group(1).split("#")[0]
-            if not target or "://" in target or target.startswith("mailto:"):
-                continue
-            if not (md.parent / target).exists():
-                errors.append(f"{rel}: broken link -> {m.group(1)}")
-
-    self_path = pathlib.Path(__file__).resolve()
-    for src in list(_files(root, ".py")) + list(_files(root, ".md")):
-        rel = src.relative_to(root)
-        if src.resolve() == self_path:       # the docstring's examples
-            continue
-        for m in DOC_CITE.finditer(src.read_text()):
-            doc, section = m.groups()
-            doc_path = root / doc
-            if not doc_path.exists():
-                errors.append(f"{rel}: cites missing doc {doc}")
-                continue
-            if section is None:
-                continue
-            # (?![\w-]) so a prefix cite (`§Arch` vs `§Arch-applicability`)
-            # is still flagged as dangling
-            if not re.search(rf"§{re.escape(section)}(?![\w-])",
-                             _headings(doc_path)):
-                errors.append(f"{rel}: cites {doc} §{section} "
-                              f"but no such heading exists")
-    return errors
+from tools.staticcheck.docs import check  # noqa: E402  (path bootstrap)
 
 
 def main() -> int:

@@ -1,0 +1,134 @@
+"""Repo-native static analysis: the invariants pytest can't see.
+
+``python -m tools.staticcheck [paths...]`` runs five repo-specific
+analyzers plus the doc-link checker over the given paths (default:
+``src tools benchmarks examples``), entirely on stdlib ``ast`` — no
+third-party imports, and never jax, so the suite runs in the docs/CI
+lane on a bare interpreter.  See DESIGN.md §13 for what each rule
+polices and why; ``--list-rules`` gives the one-liners.
+
+Exit status is the OR of ``core.RULE_BITS`` over rules with unwaived
+findings (0 = clean), so a CI log's exit code alone names the broken
+invariant.  Intentional violations carry an inline waiver::
+
+    x.block_until_ready()  # staticcheck: allow(hostsync) — overlap barrier
+
+A waiver must state a reason after the dash; a bare ``allow(rule)`` is
+deliberately not honoured.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Sequence
+
+from tools.staticcheck import (core, determinism, docs, donation, hostsync,
+                               pallas, parity)
+
+DEFAULT_PATHS = ("src", "tools", "benchmarks", "examples")
+
+ANALYZERS = {
+    "donation": donation,
+    "hostsync": hostsync,
+    "pallas": pallas,
+    "parity": parity,
+    "determinism": determinism,
+    "docs": docs,
+}
+
+RULE_HELP = {
+    "donation": "no read of a jit-donated argument after the call site",
+    "hostsync": "no host-device syncs in traced code or hot modules",
+    "pallas": "pallas_call aliasing/arity/interpret contracts hold",
+    "parity": "every public kernel has a jnp twin and a test",
+    "determinism": "no unseeded RNG draws, no wall-clock timing",
+    "docs": "markdown links, doc-section cites, README config coverage",
+    "syntax": "file parses (implicit; every analyzer is blind otherwise)",
+}
+
+
+def run(project: core.Project,
+        rules: Optional[Sequence[str]] = None) -> List[core.Finding]:
+    """All findings (waived ones marked), sorted by location."""
+    selected = list(rules) if rules else list(ANALYZERS)
+    findings: List[core.Finding] = []
+    for sf in project.files:
+        if sf.error is not None:
+            findings.append(core.Finding(
+                "syntax", sf.rel, sf.error.lineno or 1,
+                f"file does not parse: {sf.error.msg}"))
+    for name in selected:
+        findings.extend(ANALYZERS[name].analyze(project))
+    core.apply_waivers(project, findings)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    return findings
+
+
+def _report(findings: List[core.Finding], path: str, root: str) -> None:
+    payload = {
+        "root": root,
+        "exit_code": core.exit_code(findings),
+        "counts": {
+            "total": len(findings),
+            "waived": sum(f.waived for f in findings),
+        },
+        "findings": [{
+            "rule": f.rule, "path": f.path, "line": f.line,
+            "message": f.message, "waived": f.waived, "reason": f.reason,
+        } for f in findings],
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.staticcheck",
+        description="repo-native static analyzers (DESIGN.md §13)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs relative to --root "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--root", default=".",
+                    help="repository root (default: cwd)")
+    ap.add_argument("--rules", action="append", default=None,
+                    metavar="R1[,R2...]",
+                    help="run only these rules (repeatable, "
+                         "comma-separable)")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="also write a JSON report to FILE")
+    ap.add_argument("--show-waived", action="store_true",
+                    help="print waived findings too")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="list rules with their exit-code bits and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, bit in core.RULE_BITS.items():
+            print(f"{rule:12s} bit {bit:>2d}  {RULE_HELP[rule]}")
+        return 0
+
+    rules: Optional[List[str]] = None
+    if args.rules:
+        rules = [r.strip() for chunk in args.rules
+                 for r in chunk.split(",") if r.strip()]
+        unknown = [r for r in rules if r not in ANALYZERS]
+        if unknown:
+            ap.error(f"unknown rule(s): {', '.join(unknown)} "
+                     f"(choose from {', '.join(ANALYZERS)})")
+
+    project = core.Project(args.root, args.paths or list(DEFAULT_PATHS))
+    findings = run(project, rules)
+    if args.json:
+        _report(findings, args.json, str(project.root))
+
+    shown = [f for f in findings if args.show_waived or not f.waived]
+    for f in shown:
+        print(f.render())
+    live = sum(not f.waived for f in findings)
+    waived = len(findings) - live
+    code = core.exit_code(findings)
+    print(f"staticcheck: {live} finding(s), {waived} waived, "
+          f"{len(project.files)} file(s) scanned (exit {code})")
+    return code

@@ -1,0 +1,7 @@
+"""CLI entry: ``python -m tools.staticcheck [paths...]`` (DESIGN.md §13)."""
+import sys
+
+from tools.staticcheck import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,79 @@
+"""determinism: no unseeded randomness, no wall-clock in measured code.
+
+Every benchmark table and every differential test in this repo claims
+reproducibility: same seed, same bytes.  Two leak paths are policed in
+whatever paths the runner is given (CI runs it over ``src tools
+benchmarks examples``):
+
+- **unseeded RNG**: ``np.random.<fn>(...)`` global-state draws (the
+  module-level RNG is process-global and order-dependent),
+  ``np.random.default_rng()`` with no seed argument, and stdlib
+  ``random.<fn>(...)`` draws.  The repo convention is an explicit
+  ``np.random.default_rng(seed)`` threaded from the CLI.
+- **``time.time()``**: wall clock, not monotonic — NTP slews it
+  mid-measurement.  Elapsed-time measurement must use
+  ``time.perf_counter()``; code that genuinely needs the wall-clock
+  epoch (checkpoint metadata timestamps) carries a waiver saying so.
+
+Constructing a Generator from a variable seed is fine; only the
+literally-argumentless forms are flagged.  Method calls on a local
+generator object (``rng.normal(...)``) never match — the dotted prefix
+must be the module itself.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from tools.staticcheck import core
+
+RULE = "determinism"
+
+_NP_ALIASES = {"np", "numpy", "onp"}
+_GLOBAL_DRAWS = {
+    "rand", "randn", "randint", "random", "random_sample", "choice",
+    "shuffle", "permutation", "normal", "uniform", "standard_normal",
+    "exponential", "poisson", "binomial", "beta", "gamma", "bytes",
+}
+_STDLIB_DRAWS = {
+    "random", "randint", "randrange", "choice", "choices", "sample",
+    "shuffle", "uniform", "gauss", "normalvariate", "getrandbits",
+}
+
+
+def _classify(call: ast.Call) -> Optional[str]:
+    name = core.dotted(call.func)
+    if name is None:
+        return None
+    parts = name.split(".")
+    if len(parts) == 3 and parts[0] in _NP_ALIASES and parts[1] == "random":
+        if parts[2] in _GLOBAL_DRAWS:
+            return (f"`{name}()` draws from numpy's process-global RNG — "
+                    f"thread an explicit `np.random.default_rng(seed)` "
+                    f"instead")
+        if parts[2] == "default_rng" and not call.args and not call.keywords:
+            return ("`default_rng()` without a seed is entropy-seeded — "
+                    "pass the run's seed so results reproduce")
+    if len(parts) == 2 and parts[0] == "random" \
+            and parts[1] in _STDLIB_DRAWS:
+        return (f"`{name}()` uses the stdlib global RNG — use a seeded "
+                f"`np.random.default_rng` (repo convention)")
+    if name in ("time.time",) and not call.args:
+        return ("`time.time()` is wall-clock (NTP can slew it "
+                "mid-measurement) — use `time.perf_counter()` for elapsed "
+                "time, or waive with a reason if the epoch is the point")
+    return None
+
+
+def analyze(project: core.Project) -> List[core.Finding]:
+    findings: List[core.Finding] = []
+    for sf in project.files:
+        if sf.tree is None:
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                msg = _classify(node)
+                if msg:
+                    findings.append(core.Finding(RULE, sf.rel,
+                                                 node.lineno, msg))
+    return findings

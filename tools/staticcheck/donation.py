@@ -1,0 +1,211 @@
+"""donation-safety: no read of a donated argument after the call site.
+
+``jax.jit(..., donate_argnums=...)`` hands the argument's buffer to the
+runtime: after the call the caller's array is deleted, and touching it
+raises (or silently recomputes on backends without donation).  The
+engine leans on donation everywhere the accumulator fold is hot
+(kernels/ops.py, core/engine_compiled.py), so the exact bug class one
+refactor away is::
+
+    total, counts = ...                      # donated pair
+    out = accum_into(total, counts, batch)   # buffers consumed here
+    debug = total.sum()                      # BOOM — use after donation
+
+The analyzer is two passes over the whole project:
+
+1. **Binding discovery**: every ``name = jax.jit(fn, donate_argnums=…)``
+   assignment and every ``@jax.jit(...)`` /
+   ``@functools.partial(jax.jit, donate_argnums=…)`` decorated function
+   records ``name -> donated positions``.  Call sites are matched by the
+   binding's bare name (the last attribute segment), so
+   ``_ops.fedavg_accum_into(...)`` resolves across modules without
+   imports being traced.
+
+2. **Call-site audit**: inside each scope (function body or module
+   top level, nested defs excluded), any load of a donated argument's
+   name on a line after the call is flagged unless some rebinding of
+   that name (assignment, tuple unpack, for-target, with-target) sits
+   between the call and the read.  ``total, counts = f(total, counts)``
+   therefore passes — the donation call's own statement rebinds.
+
+The check is line-ordered and flow-insensitive (branches and loop
+back-edges are not modeled); it is tuned to the repo's straight-line
+dispatch drivers, where it catches the real bug with no noise.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from tools.staticcheck import core
+
+RULE = "donation"
+
+
+def _jit_donate_positions(call: ast.Call) -> Optional[tuple]:
+    """Donated positions of a ``jax.jit(...)`` call, else None."""
+    if core.last_segment(core.dotted(call.func)) != "jit":
+        return None
+    kw = core.keyword(call, "donate_argnums")
+    return None if kw is None else core.int_tuple(kw)
+
+
+def _decorator_donate_positions(dec) -> Optional[tuple]:
+    """Donated positions declared by a function decorator."""
+    if not isinstance(dec, ast.Call):
+        return None
+    name = core.last_segment(core.dotted(dec.func))
+    if name == "jit":
+        kw = core.keyword(dec, "donate_argnums")
+        return None if kw is None else core.int_tuple(kw)
+    if name == "partial" and dec.args \
+            and core.last_segment(core.dotted(dec.args[0])) == "jit":
+        kw = core.keyword(dec, "donate_argnums")
+        return None if kw is None else core.int_tuple(kw)
+    return None
+
+
+def collect_bindings(project: core.Project) -> Dict[str, tuple]:
+    """bare name -> donated positional indices, across the project."""
+    bindings: Dict[str, tuple] = {}
+    for sf in project.files:
+        if sf.tree is None:
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Call):
+                pos = _jit_donate_positions(node.value)
+                if pos:
+                    bindings[node.targets[0].id] = pos
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    pos = _decorator_donate_positions(dec)
+                    if pos:
+                        bindings[node.name] = pos
+    return bindings
+
+
+class _Scope(ast.NodeVisitor):
+    """Loads, rebinds, and calls among a scope's own statements (nested
+    function/class bodies are separate scopes and skipped)."""
+
+    def __init__(self):
+        self.loads: List[Tuple[str, int]] = []      # (dotted name, line)
+        self.rebinds: List[Tuple[str, int]] = []
+        self.calls: List[ast.Call] = []
+
+    def visit_FunctionDef(self, node):              # don't descend
+        pass
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_Lambda = visit_FunctionDef
+    visit_ClassDef = visit_FunctionDef
+
+    def _bind_target(self, target):
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind_target(elt)
+        elif isinstance(target, ast.Starred):
+            self._bind_target(target.value)
+        else:
+            name = core.dotted(target)
+            if name:
+                self.rebinds.append((name, target.lineno))
+
+    def visit_Assign(self, node):
+        for t in node.targets:
+            self._bind_target(t)
+        self.visit(node.value)
+
+    def visit_AnnAssign(self, node):
+        self._bind_target(node.target)
+        if node.value is not None:
+            self.visit(node.value)
+
+    def visit_AugAssign(self, node):
+        self._bind_target(node.target)
+        self.visit(node.value)
+
+    def visit_For(self, node):
+        self._bind_target(node.target)
+        self.visit(node.iter)
+        for stmt in node.body + node.orelse:
+            self.visit(stmt)
+
+    visit_AsyncFor = visit_For
+
+    def visit_withitem(self, node):
+        if node.optional_vars is not None:
+            self._bind_target(node.optional_vars)
+        self.visit(node.context_expr)
+
+    def visit_NamedExpr(self, node):
+        self._bind_target(node.target)
+        self.visit(node.value)
+
+    def visit_Call(self, node):
+        self.calls.append(node)
+        self.generic_visit(node)
+
+    def visit_Name(self, node):
+        if isinstance(node.ctx, ast.Load):
+            self.loads.append((node.id, node.lineno))
+
+    def visit_Attribute(self, node):
+        if isinstance(node.ctx, ast.Load):
+            name = core.dotted(node)
+            if name:
+                self.loads.append((name, node.lineno))
+        # descend through .value so `total.sum()` records a load of
+        # `total` (the donated name), not just of `total.sum`
+        self.visit(node.value)
+
+
+def _scopes(tree):
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def analyze(project: core.Project) -> List[core.Finding]:
+    bindings = collect_bindings(project)
+    findings: List[core.Finding] = []
+    if not bindings:
+        return findings
+    for sf in project.files:
+        if sf.tree is None:
+            continue
+        for scope in _scopes(sf.tree):
+            sc = _Scope()
+            body = scope.body if hasattr(scope, "body") else []
+            for stmt in body:
+                sc.visit(stmt)
+            for call in sc.calls:
+                fname = core.last_segment(core.dotted(call.func))
+                positions = bindings.get(fname or "")
+                if not positions:
+                    continue
+                end = call.end_lineno or call.lineno
+                for p in positions:
+                    if p >= len(call.args):
+                        continue
+                    var = core.dotted(call.args[p])
+                    if var is None:       # fresh expression — nothing kept
+                        continue
+                    for name, ln in sc.loads:
+                        if name != var or ln <= end:
+                            continue
+                        if any(rn == var and call.lineno <= rl <= ln
+                               for rn, rl in sc.rebinds):
+                            continue
+                        findings.append(core.Finding(
+                            RULE, sf.rel, ln,
+                            f"`{var}` is read after being donated to "
+                            f"`{fname}` (donate_argnums position {p}, "
+                            f"call at line {call.lineno}); donation "
+                            f"deletes the buffer — rebind the name or "
+                            f"copy before the call"))
+                        break             # one finding per donated arg
+    return findings

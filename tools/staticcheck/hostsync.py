@@ -1,0 +1,215 @@
+"""host-sync / tracer-leak: no device round-trips in the hot path.
+
+The compiled round's throughput claim (one jitted ``lax.scan`` per
+round, overlap driver double-buffering demux against device work) dies
+the moment host code blocks on the device outside the three intentional
+barrier sites, or a traced function forces a value back to Python.  Two
+contexts are policed:
+
+1. **Traced code** — any function that jax traces: decorated with
+   ``@jax.jit`` (bare or via ``functools.partial``), wrapped by a
+   ``jax.jit(f)`` call, passed to ``lax.scan`` / ``fori_loop`` /
+   ``while_loop`` / ``vmap`` / ``pmap`` / ``shard_map`` /
+   ``pl.pallas_call`` (directly or through a one-level
+   ``functools.partial``), plus every function nested inside one.
+   Flagged there: ``.block_until_ready()``, ``jax.device_get``,
+   ``.item()``, ``float()/int()/bool()`` casts, and
+   ``np.asarray``/``np.array`` — each of these either leaks a tracer or
+   silently materializes the value at trace time.  Casts and
+   conversions of static metadata (anything mentioning ``.shape``,
+   ``.ndim``, ``.size``, ``.dtype``, ``len()``, or a constant) are
+   exempt: those are host-side trace-time arithmetic, not syncs.
+
+2. **Device-hot modules** — the modules on the round's critical path
+   (``DEVICE_HOT`` below, or any file carrying a
+   ``# staticcheck: device-hot`` marker in its first lines).  There the
+   sync trio ``.block_until_ready()`` / ``jax.device_get`` / ``.item()``
+   is flagged *anywhere*, traced or not: a host sync per drained batch
+   is exactly the serialization the engine exists to avoid.  The three
+   legitimate overlap barriers in ``core/engine_compiled.py`` carry
+   inline waivers naming their reason (DESIGN.md §3, §13).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set
+
+from tools.staticcheck import core
+
+RULE = "hostsync"
+
+# modules on the round-critical path: the sync trio is banned here
+# outside an explicit waiver, whether or not the code is traced
+DEVICE_HOT = (
+    "src/repro/core/engine_compiled.py",
+    "src/repro/core/pipeline.py",
+    "src/repro/core/aggregation.py",
+    "src/repro/core/server.py",
+    "src/repro/kernels/",
+)
+
+HOT_MARKER = re.compile(r"#\s*staticcheck:\s*device-hot")
+
+SYNC_METHODS = {"block_until_ready", "item"}
+CASTS = {"float", "int", "bool"}
+NUMPY_MATERIALIZE = {"np.asarray", "np.array", "numpy.asarray",
+                     "numpy.array", "onp.asarray", "onp.array"}
+
+# wrapper name -> positional indices whose argument is traced
+TRACE_WRAPPERS = {
+    "jit": (0,),
+    "scan": (0,),
+    "fori_loop": (2,),
+    "while_loop": (0, 1),
+    "vmap": (0,),
+    "pmap": (0,),
+    "shard_map": (0,),
+    "pallas_call": (0,),
+}
+
+
+def _is_hot(sf: core.SourceFile) -> bool:
+    if any(sf.rel == h or (h.endswith("/") and sf.rel.startswith(h))
+           for h in DEVICE_HOT):
+        return True
+    return any(HOT_MARKER.search(line) for line in sf.lines[:10])
+
+
+def _static_metadata(node) -> bool:
+    """True when the expression only touches trace-time metadata, so a
+    ``float()/int()`` cast of it is not a tracer leak."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in ("shape", "ndim",
+                                                           "size", "dtype"):
+            return True
+        if isinstance(sub, ast.Call) \
+                and core.dotted(sub.func) in ("len", "range"):
+            return True
+    return isinstance(node, ast.Constant)
+
+
+def _unwrap_partial(node, assigns: Dict[str, ast.expr]):
+    """Peel ``functools.partial(f, ...)`` (literal or via a local
+    assignment) down to the underlying callee expression."""
+    if isinstance(node, ast.Name) and node.id in assigns:
+        node = assigns[node.id]
+    if isinstance(node, ast.Call) \
+            and core.last_segment(core.dotted(node.func)) == "partial" \
+            and node.args:
+        node = node.args[0]
+    return node
+
+
+def _traced_functions(tree) -> Set[ast.AST]:
+    """Every function definition jax will trace, nested defs included."""
+    defs = core.function_defs(tree)
+    traced: Set[ast.AST] = set()
+
+    def mark(expr, assigns):
+        expr = _unwrap_partial(expr, assigns)
+        if isinstance(expr, ast.Lambda):
+            traced.add(expr)
+        name = core.last_segment(core.dotted(expr))
+        if name:
+            traced.update(defs.get(name, ()))
+
+    # decorated defs
+    for fns in defs.values():
+        for fn in fns:
+            for dec in fn.decorator_list:
+                name = core.last_segment(core.dotted(dec))
+                if name == "jit":
+                    traced.add(fn)
+                elif isinstance(dec, ast.Call):
+                    callee = core.last_segment(core.dotted(dec.func))
+                    if callee == "jit":
+                        traced.add(fn)
+                    elif callee == "partial" and dec.args and \
+                            core.last_segment(
+                                core.dotted(dec.args[0])) == "jit":
+                        traced.add(fn)
+
+    # defs handed to tracing wrappers (scan bodies, kernels, jit(f), ...)
+    scopes = [tree] + [n for n in ast.walk(tree)
+                       if isinstance(n, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))]
+    for scope in scopes:
+        assigns = core.local_assignments(scope)
+        for node in ast.walk(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            positions = TRACE_WRAPPERS.get(
+                core.last_segment(core.dotted(node.func)) or "")
+            if not positions:
+                continue
+            for p in positions:
+                if p < len(node.args):
+                    mark(node.args[p], assigns)
+
+    # anything nested inside a traced function is traced too
+    frontier = list(traced)
+    while frontier:
+        fn = frontier.pop()
+        for sub in ast.walk(fn):
+            if sub is not fn and isinstance(
+                    sub, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.Lambda)) and sub not in traced:
+                traced.add(sub)
+                frontier.append(sub)
+    return traced
+
+
+def _sync_call(node: ast.Call) -> Optional[str]:
+    """Describe the sync if this call is one of the trio, else None."""
+    if isinstance(node.func, ast.Attribute):
+        if node.func.attr in SYNC_METHODS and not node.args:
+            return f".{node.func.attr}()"
+        if node.func.attr == "device_get":
+            return "jax.device_get"
+    return None
+
+
+def analyze(project: core.Project) -> List[core.Finding]:
+    findings: List[core.Finding] = []
+    for sf in project.files:
+        if sf.tree is None:
+            continue
+        hot = _is_hot(sf)
+        traced = _traced_functions(sf.tree)
+        traced_nodes: Set[ast.AST] = set()
+        for fn in traced:
+            traced_nodes.update(ast.walk(fn))
+        seen: Set[tuple] = set()
+
+        def emit(node, msg):
+            key = (node.lineno, node.col_offset, msg)
+            if key not in seen:
+                seen.add(key)
+                findings.append(core.Finding(RULE, sf.rel, node.lineno, msg))
+
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            in_traced = node in traced_nodes
+            sync = _sync_call(node)
+            if sync and (hot or in_traced):
+                where = ("inside traced code" if in_traced
+                         else "in a device-hot module")
+                emit(node, f"{sync} {where} forces a host-device sync; "
+                           f"only the overlap-driver barriers may block "
+                           f"(waive with a reason if intentional)")
+                continue
+            if not in_traced:
+                continue
+            name = core.dotted(node.func)
+            if name in CASTS and len(node.args) == 1 \
+                    and not _static_metadata(node.args[0]):
+                emit(node, f"{name}() cast inside traced code leaks the "
+                           f"tracer to Python (concretization error or "
+                           f"silent constant folding)")
+            elif name in NUMPY_MATERIALIZE and node.args \
+                    and not _static_metadata(node.args[0]):
+                emit(node, f"{name}() inside traced code materializes a "
+                           f"device value on the host at trace time")
+    return findings

@@ -1,0 +1,266 @@
+"""pallas-contracts: every ``pl.pallas_call`` site satisfies its own
+declared geometry.
+
+A Pallas call site encodes four contracts that the Python type system
+never checks and that fail at Mosaic-compile time at best, or corrupt
+an aliased buffer at worst:
+
+- ``input_output_aliases`` operand indices must exist (keys index the
+  call's inputs, *including* scalar-prefetch operands; values index
+  ``out_shape``), and an aliased input's dtype/shape must agree with
+  the aliased output — the donation story of the accumulator kernels
+  rests on this.
+- the kernel's positional signature must equal
+  ``num_scalar_prefetch + len(in_specs) + n_outputs`` refs,
+- every ``BlockSpec`` index map must take one parameter per grid
+  dimension (plus one per scalar-prefetch operand),
+- ``interpret=`` must be plumbed through, because CI validates every
+  kernel in interpret mode on CPU — a call site that hardcodes the
+  default can never be exercised by the test suite.
+
+All checks are syntactic and best-effort: a contract is only flagged
+when the relevant pieces are literal enough to decide (literal specs,
+a resolvable kernel def, a ``jax.ShapeDtypeStruct`` out_shape, an
+``x.astype(dt)`` or ``name = jnp.zeros(shape, dt)`` input).  Anything
+unresolvable is skipped, never guessed — the rule is exact-or-silent.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from tools.staticcheck import core
+
+RULE = "pallas"
+
+_ALLOC_FNS = {"zeros", "ones", "empty", "full", "zeros_like"}
+
+
+def _as_list(node) -> Optional[List[ast.expr]]:
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    return None
+
+
+def _resolve(node, assigns: Dict[str, ast.expr]):
+    if isinstance(node, ast.Name) and node.id in assigns:
+        return assigns[node.id]
+    return node
+
+
+def _grid_len(node) -> Optional[int]:
+    if node is None:
+        return None
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    if core.int_literal(node) is not None:
+        return 1
+    return None
+
+
+def _index_map_of(spec: ast.expr) -> Optional[ast.Lambda]:
+    """The index-map lambda of a literal ``pl.BlockSpec(...)`` call."""
+    if not isinstance(spec, ast.Call) \
+            or core.last_segment(core.dotted(spec.func)) != "BlockSpec":
+        return None
+    im = core.keyword(spec, "index_map")
+    if im is None and len(spec.args) >= 2:
+        im = spec.args[1]
+    return im if isinstance(im, ast.Lambda) else None
+
+
+def _shape_dtype_struct(node) -> Optional[Tuple[ast.expr, ast.expr]]:
+    if isinstance(node, ast.Call) \
+            and core.last_segment(core.dotted(node.func)) \
+            == "ShapeDtypeStruct" and len(node.args) >= 2:
+        return node.args[0], node.args[1]
+    return None
+
+
+def _input_shape_dtype(expr, assigns) \
+        -> Tuple[Optional[ast.expr], Optional[ast.expr]]:
+    """Best-effort (shape, dtype) expressions for a call input."""
+    dtype = None
+    if isinstance(expr, ast.Call) and isinstance(expr.func, ast.Attribute) \
+            and expr.func.attr == "astype" and expr.args:
+        dtype = expr.args[0]
+        expr = expr.func.value
+    shape = None
+    expr = _resolve(expr, assigns)
+    if isinstance(expr, ast.Call) and core.last_segment(
+            core.dotted(expr.func)) in _ALLOC_FNS and expr.args:
+        shape = expr.args[0]
+        if dtype is None and len(expr.args) >= 2:
+            dtype = expr.args[1]
+    return shape, dtype
+
+
+def _same(a: Optional[ast.expr], b: Optional[ast.expr]) -> Optional[bool]:
+    """Structural equality of two expressions; None when undecidable."""
+    if a is None or b is None:
+        return None
+    return ast.dump(a) == ast.dump(b)
+
+
+class _Site:
+    """One ``pl.pallas_call(...)`` with its geometry decoded."""
+
+    def __init__(self, call: ast.Call, outer: Optional[ast.Call],
+                 assigns: Dict[str, ast.expr]):
+        self.call = call
+        self.outer = outer
+        self.num_prefetch = 0
+        grid_spec = _resolve(core.keyword(call, "grid_spec"), assigns)
+        src = call
+        if isinstance(grid_spec, ast.Call) and core.last_segment(
+                core.dotted(grid_spec.func)) == "PrefetchScalarGridSpec":
+            src = grid_spec
+            n = core.int_literal(core.keyword(grid_spec,
+                                              "num_scalar_prefetch"))
+            self.num_prefetch = n or 0
+        self.grid = core.keyword(src, "grid")
+        self.in_specs = _as_list(_resolve(core.keyword(src, "in_specs"),
+                                          assigns))
+        out_specs = _resolve(core.keyword(src, "out_specs"), assigns)
+        self.out_specs = _as_list(out_specs)
+        if self.out_specs is None and out_specs is not None:
+            self.out_specs = [out_specs]
+        out_shape = _resolve(core.keyword(call, "out_shape"), assigns)
+        self.out_shape_list = _as_list(out_shape)
+        if self.out_shape_list is None and out_shape is not None:
+            self.out_shape_list = [out_shape]
+        self.aliases = core.keyword(call, "input_output_aliases")
+        self.has_scratch = core.keyword(call, "scratch_shapes") is not None
+        self.interpret = core.keyword(call, "interpret")
+        self.assigns = assigns
+
+    @property
+    def n_out(self) -> Optional[int]:
+        return (len(self.out_shape_list)
+                if self.out_shape_list is not None else None)
+
+    @property
+    def n_inputs(self) -> Optional[int]:
+        return len(self.outer.args) if self.outer is not None else None
+
+
+def _kernel_params(site: _Site, tree) -> Optional[int]:
+    """Positional parameter count of the kernel, through one level of
+    ``functools.partial`` (keyword binds don't consume ref slots)."""
+    if not site.call.args:
+        return None
+    expr = _resolve(site.call.args[0], site.assigns)
+    bound = 0
+    if isinstance(expr, ast.Call) and core.last_segment(
+            core.dotted(expr.func)) == "partial" and expr.args:
+        bound = len(expr.args) - 1
+        expr = expr.args[0]
+    name = core.last_segment(core.dotted(expr))
+    defs = core.function_defs(tree).get(name or "")
+    if not defs or len(defs) != 1:
+        return None
+    a = defs[0].args
+    return len(a.posonlyargs) + len(a.args) - bound
+
+
+def _check_site(site: _Site, tree, sf, findings) -> None:
+    call = site.call
+
+    def emit(node, msg):
+        findings.append(core.Finding(RULE, sf.rel, node.lineno, msg))
+
+    if site.interpret is None:
+        emit(call, "pallas_call without `interpret=`: CI validates "
+                   "kernels in interpret mode on CPU — plumb the flag "
+                   "through from the caller")
+
+    # --- input_output_aliases geometry --------------------------------
+    if isinstance(site.aliases, ast.Dict):
+        for k, v in zip(site.aliases.keys, site.aliases.values):
+            ki, vi = core.int_literal(k), core.int_literal(v)
+            if ki is None or vi is None:
+                continue
+            if site.n_inputs is not None and ki >= site.n_inputs:
+                emit(site.aliases,
+                     f"input_output_aliases key {ki} is out of range: the "
+                     f"call passes only {site.n_inputs} operand(s) "
+                     f"(scalar-prefetch args included)")
+                continue
+            if site.n_out is not None and vi >= site.n_out:
+                emit(site.aliases,
+                     f"input_output_aliases value {vi} is out of range: "
+                     f"out_shape declares {site.n_out} output(s)")
+                continue
+            if site.n_inputs is None or site.n_out is None:
+                continue
+            in_shape, in_dtype = _input_shape_dtype(site.outer.args[ki],
+                                                    site.assigns)
+            sds = _shape_dtype_struct(site.out_shape_list[vi])
+            if sds is None:
+                continue
+            if _same(in_dtype, sds[1]) is False:
+                emit(site.aliases,
+                     f"aliased operand {ki} dtype "
+                     f"`{ast.unparse(in_dtype)}` does not match output "
+                     f"{vi} dtype `{ast.unparse(sds[1])}` — aliasing "
+                     f"reinterprets the buffer in place")
+            if _same(in_shape, sds[0]) is False:
+                emit(site.aliases,
+                     f"aliased operand {ki} shape "
+                     f"`{ast.unparse(in_shape)}` does not match output "
+                     f"{vi} shape `{ast.unparse(sds[0])}`")
+
+    # --- kernel signature vs specs ------------------------------------
+    if site.in_specs is not None and site.n_out is not None \
+            and not site.has_scratch:
+        n_out_specs = (len(site.out_specs) if site.out_specs is not None
+                       else site.n_out)
+        expected = site.num_prefetch + len(site.in_specs) + n_out_specs
+        n_params = _kernel_params(site, tree)
+        if n_params is not None and n_params != expected:
+            emit(call, f"kernel takes {n_params} positional ref(s) but "
+                       f"the specs provide {expected} "
+                       f"({site.num_prefetch} scalar-prefetch + "
+                       f"{len(site.in_specs)} in_specs + "
+                       f"{n_out_specs} outputs)")
+
+    # --- grid arity vs BlockSpec index maps ---------------------------
+    g = _grid_len(site.grid)
+    if g is not None:
+        specs = list(site.in_specs or []) + list(site.out_specs or [])
+        for spec in specs:
+            im = _index_map_of(spec)
+            if im is None:
+                continue
+            want = g + site.num_prefetch
+            got = len(im.args.args)
+            if got != want:
+                emit(spec, f"BlockSpec index map takes {got} arg(s) but "
+                           f"the grid has {g} dimension(s)"
+                           + (f" plus {site.num_prefetch} scalar-prefetch "
+                              f"ref(s)" if site.num_prefetch else ""))
+
+
+def analyze(project: core.Project) -> List[core.Finding]:
+    findings: List[core.Finding] = []
+    for sf in project.files:
+        if sf.tree is None:
+            continue
+        calls = [n for n in ast.walk(sf.tree) if isinstance(n, ast.Call)]
+        pallas_calls = [c for c in calls if core.last_segment(
+            core.dotted(c.func)) == "pallas_call"]
+        if not pallas_calls:
+            continue
+        scopes = {}
+        for scope in [sf.tree] + [n for n in ast.walk(sf.tree)
+                                  if isinstance(n, (ast.FunctionDef,
+                                                    ast.AsyncFunctionDef))]:
+            for sub in ast.walk(scope):
+                if isinstance(sub, ast.Call) and sub in pallas_calls:
+                    scopes[sub] = scope     # innermost scope wins (later)
+        for pc in pallas_calls:
+            outer = next((c for c in calls if c.func is pc), None)
+            scope = scopes.get(pc, sf.tree)
+            assigns = core.local_assignments(scope)
+            _check_site(_Site(pc, outer, assigns), sf.tree, sf, findings)
+    return findings
